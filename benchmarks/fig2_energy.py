@@ -1,0 +1,56 @@
+"""Paper Fig 2 — initial energy investigation over the 16-model zoo.
+
+Validates three claims:
+  (a) accuracy vs energy is WEAKLY correlated (paper r = 0.34),
+  (b) energy vs training time is STRONGLY linear (paper r = 0.999),
+  (c) GPU utilisation vs power saturates (~300 W on the RTX 3080): more
+      power does not buy more utilisation past the knee.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import SETUP1, epoch_quantities, pearson, profile_zoo
+
+
+def run(models=None, steps: int = 12, batch: int = 32) -> dict:
+    runs = profile_zoo(models, train_steps=steps, batch=batch)
+    rows = []
+    for name, r in runs.items():
+        e, t, p, u = epoch_quantities(r, SETUP1, cap=1.0)
+        rows.append({"model": name, "accuracy": r.accuracy,
+                     "epoch_energy_j": e, "epoch_time_s": t,
+                     "power_w": p, "utilization": u,
+                     "params_m": r.n_params / 1e6})
+    acc = [r["accuracy"] for r in rows]
+    energy = [r["epoch_energy_j"] for r in rows]
+    times = [r["epoch_time_s"] for r in rows]
+    utils = [r["utilization"] for r in rows]
+    power = [r["power_w"] for r in rows]
+    out = {
+        "rows": rows,
+        "r_accuracy_energy": pearson(acc, energy),
+        "r_energy_time": pearson(energy, times),
+        "r_power_utilization": pearson(power, utils),
+        "paper": {"r_accuracy_energy": 0.34, "r_energy_time": 0.999},
+    }
+    return out
+
+
+def main(quick: bool = False):
+    res = run(models=["LeNet", "ResNet18", "MobileNetV2", "VGG16",
+                      "GoogLeNet", "ShuffleNetV2"] if quick else None,
+              steps=8 if quick else 12)
+    for row in res["rows"]:
+        print(f"fig2.{row['model']},{row['epoch_energy_j']:.0f},"
+              f"J/epoch acc={row['accuracy']:.3f} "
+              f"P={row['power_w']:.0f}W util={row['utilization']:.2f}")
+    print(f"fig2.r_energy_time,{res['r_energy_time']:.4f},paper=0.999")
+    print(f"fig2.r_accuracy_energy,{res['r_accuracy_energy']:.3f},paper=0.34")
+    print(f"fig2.r_power_utilization,{res['r_power_utilization']:.3f},"
+          f"saturating")
+    return res
+
+
+if __name__ == "__main__":
+    json.dumps(main())

@@ -1,0 +1,64 @@
+"""Paper Fig 5 — fine-grained (1% increments) cap sweep on ResNet and the
+ED^xP decision criteria.
+
+Claims: (a) energy has an interior minimum while time decreases
+monotonically with cap; (b) the more weight on delay (higher x), the higher
+the optimal cap — ED^3P can saturate at 100%; (c) EDP (x=1) gives the
+largest energy savings.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SETUP2, epoch_quantities, profile_cnn
+from repro.core import CapProfiler, QoSPolicy
+from repro.core.powermodel import PowerCappedDevice
+
+
+def run(model: str = "ResNet18", steps: int = 12) -> dict:
+    r = profile_cnn(model, train_steps=steps)
+    caps = np.round(np.arange(0.30, 1.001, 0.01), 2)
+    es, ts = [], []
+    for cap in caps:
+        e, t, _, _ = epoch_quantities(r, SETUP2, cap=float(cap))
+        es.append(e)
+        ts.append(t)
+    es, ts = np.asarray(es), np.asarray(ts)
+
+    # ED^xP optima on the fine grid
+    optima = {}
+    for x in (1.0, 2.0, 3.0):
+        cost = (es / es[-1]) * (ts / ts[-1]) ** x
+        optima[f"ED{x:g}P"] = float(caps[int(np.argmin(cost))])
+
+    # and through the actual FROST profiler (8 coarse probes + fit)
+    wl = r.workload(samples_per_step=128)
+
+    class W:
+        dev = SETUP2
+
+        def probe(self, cap, duration_s):
+            return self.dev.probe(wl, cap, duration_s)
+
+    frost = {}
+    for x in (1.0, 2.0, 3.0):
+        d = CapProfiler(W(), policy=QoSPolicy(edp_exponent=x)).run()
+        frost[f"ED{x:g}P"] = {"cap": d.cap, "fit_ok": d.fit_accepted,
+                              "rel_rmse": d.fit.rel_rmse}
+    return {"model": model, "caps": caps.tolist(), "energy": es.tolist(),
+            "time": ts.tolist(), "grid_optima": optima, "frost": frost}
+
+
+def main(quick: bool = False):
+    res = run(steps=8 if quick else 12)
+    g = res["grid_optima"]
+    print(f"fig5.grid_optima,ED1P={g['ED1P']:.0%} ED2P={g['ED2P']:.0%} "
+          f"ED3P={g['ED3P']:.0%},monotone={'yes' if g['ED1P'] <= g['ED2P'] <= g['ED3P'] else 'NO'}")
+    for k, v in res["frost"].items():
+        print(f"fig5.frost_{k},{v['cap']:.0%},fit_rmse={v['rel_rmse']:.3%} "
+              f"accepted={v['fit_ok']}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

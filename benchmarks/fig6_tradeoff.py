@@ -1,0 +1,61 @@
+"""Paper Fig 6 — the headline result: mean energy saving vs delay across
+all 16 models on both setups under the FROST-selected (ED^2P) caps.
+
+Paper numbers: setup no.1 saves 26.4% energy at +6.9% time; setup no.2
+saves 17.7% at +5.5%.  We report what the physics model + measured
+per-model profiles produce, side by side with the paper's.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (SETUP1, SETUP2, epoch_quantities, profile_zoo)
+from repro.core import BALANCED, CapProfiler
+
+
+def run(models=None, steps: int = 12) -> dict:
+    runs = profile_zoo(models, train_steps=steps)
+    out = {}
+    for setup_name, dev in (("setup1_rtx3080", SETUP1),
+                            ("setup2_rtx3090", SETUP2)):
+        rows = []
+        for name, r in runs.items():
+            wl = r.workload(samples_per_step=128)
+
+            class W:
+                def probe(self, cap, duration_s, dev=dev, wl=wl):
+                    return dev.probe(wl, cap, duration_s)
+
+            d = CapProfiler(W(), policy=BALANCED).run()
+            e_cap, t_cap, _, _ = epoch_quantities(r, dev, cap=d.cap)
+            e_100, t_100, _, _ = epoch_quantities(r, dev, cap=1.0)
+            rows.append({"model": name, "cap": d.cap,
+                         "energy_saving": 1 - e_cap / e_100,
+                         "delay": t_cap / t_100 - 1,
+                         "fit_ok": d.fit_accepted})
+        out[setup_name] = {
+            "rows": rows,
+            "mean_energy_saving": float(np.mean([r["energy_saving"]
+                                                 for r in rows])),
+            "mean_delay": float(np.mean([r["delay"] for r in rows])),
+        }
+    out["paper"] = {"setup1": {"saving": 0.264, "delay": 0.069},
+                    "setup2": {"saving": 0.177, "delay": 0.055}}
+    return out
+
+
+def main(quick: bool = False):
+    res = run(models=["LeNet", "ResNet18", "MobileNetV2", "VGG16",
+                      "DenseNet121", "EfficientNetB0"] if quick else None,
+              steps=8 if quick else 12)
+    for setup in ("setup1_rtx3080", "setup2_rtx3090"):
+        m = res[setup]
+        ref = res["paper"]["setup1" if "1" in setup else "setup2"]
+        print(f"fig6.{setup},saving={m['mean_energy_saving']:.1%} "
+              f"delay={m['mean_delay']:+.1%},"
+              f"paper saving={ref['saving']:.1%} delay=+{ref['delay']:.1%}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

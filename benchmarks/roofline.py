@@ -1,0 +1,232 @@
+"""Roofline analysis — deliverable (g).
+
+Reads the dry-run artifacts (artifacts/dryrun/<mesh>/*.json) and derives,
+per (arch x shape x mesh):
+
+    compute term    = HLO dot FLOPs / peak FLOP/s          (per chip)
+    memory term     = HBM-traffic proxy / HBM bandwidth    (per chip)
+    collective term = sum over collective ops of
+                        bytes x op_factor / link bandwidth (per chip)
+
+(all three loop-adjusted via the known_trip_count rollup in
+launch/hloparse), plus:
+
+    MODEL_FLOPS     = 6 N_active D (train), 2 N_active D (prefill),
+                      2 N_active B (decode)   [D = tokens/step]
+    usefulness      = MODEL_FLOPS / HLO_FLOPs (remat/replication waste)
+    bottleneck      = argmax of the three terms
+    roofline_frac   = dominant-term seconds / sum-of-terms seconds... no:
+                      fraction of the *ideal* (= compute-term) time, i.e.
+                      compute_term / max(term) — 1.0 means perfectly
+                      compute-bound (the MXU is the roof).
+
+Hardware constants (assignment brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI per chip.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any
+
+from repro.configs import ARCH_SPECS, SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# per-op link-traffic factor on the parsed RESULT bytes
+_COLL_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def memory_bytes_per_device(arch_id: str, shape_name: str, n_devices: int,
+                            step_cfg: dict) -> float:
+    """Analytic per-device HBM traffic per step.
+
+    The HLO operand+result proxy is recorded in the artifacts but OVERCOUNTS
+    on CPU-lowered HLO (tiny fusion granularity counts every elementwise
+    intermediate); the TPU roofline memory term is therefore derived from
+    the step structure:
+
+      params:  FSDP-gathered weights are READ by compute once per microbatch
+               per pass (fwd + bwd-recompute under remat) in bf16.  MoE
+               "gather" strategy touches ALL experts; "a2a" only the local
+               shard's experts (the whole point of that strategy).
+      acts:    ~12 HBM touches of the (tokens_loc x d) residual stream per
+               layer (qkv/mlp in+out, norms, residual adds; flash-attention
+               internals stay in VMEM).
+      cache:   decode reads the local KV/state shard once per step and
+               writes one slot; prefill writes it once.
+      logits:  fp32 logits read+write, vocab-sharded 16-way.
+    """
+    cfg = ARCH_SPECS[arch_id].config
+    shape = SHAPES[shape_name]
+    n_micro = int(step_cfg.get("n_micro", 1))
+    strategy = step_cfg.get("moe_strategy", "gather")
+    tp = 16
+    batch_shards = n_devices // tp
+    d, L = cfg.d_model, cfg.n_layers
+
+    p_total = cfg.param_count()
+    if cfg.uses_moe:
+        p_experts = p_total - cfg.active_param_count() \
+            + (cfg.n_experts and (cfg.experts_per_token
+                                  * 3 * d * cfg.resolved_moe_d_ff
+                                  * (L - cfg.first_dense_layers)))
+        p_experts = (cfg.n_experts * 3 * d * cfg.resolved_moe_d_ff
+                     * (L - cfg.first_dense_layers))
+        p_dense = p_total - p_experts
+    else:
+        p_experts, p_dense = 0, p_total
+
+    if strategy == "a2a" and cfg.uses_moe:
+        p_touched = p_dense + p_experts / batch_shards
+    else:
+        p_touched = p_total
+    p_bytes = 2.0 * p_touched                      # bf16 gathered weights
+
+    # decode cache: bytes of the full cache / devices (sharded), read per step
+    def cache_bytes():
+        B, S = shape.global_batch, shape.seq_len
+        if cfg.uses_ssm:
+            H, P_, N = cfg.resolved_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            per = H * P_ * N * 4 + (cfg.conv_width - 1) * (2 * d + 2 * cfg.ssm_groups * cfg.ssm_state) * 2
+            total = L * B * per
+            if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+                # shared-attn KV grows with context — dominant at long_500k
+                nu = L // cfg.hybrid_attn_every
+                total += nu * B * S * cfg.padded_kv_heads \
+                    * cfg.resolved_head_dim * 2 * 2
+            return total
+        if cfg.use_mla:
+            return L * B * S * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2
+        per_layer_cap = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        if cfg.local_global:
+            cap = (min(S, cfg.local_window) + S) / 2
+        else:
+            cap = per_layer_cap
+        return L * B * cap * cfg.padded_kv_heads * cfg.resolved_head_dim * 2 * 2
+
+    Vp = -(-cfg.vocab_size // 256) * 256
+
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len // batch_shards
+        params_io = p_bytes * n_micro * 2          # fwd + bwd re-gather
+        acts_io = toks * d * 2 * L * 12
+        logits_io = toks * (Vp // tp) * 4 * 4
+        opt_io = (p_total / n_devices) * 4 * 6     # adamw read+write x3
+        return params_io + acts_io + logits_io + opt_io
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len // batch_shards
+        return p_bytes + toks * d * 2 * L * 8 + cache_bytes() / n_devices \
+            + toks * (Vp // tp) * 4 * 2
+    # decode
+    b_loc = max(1, shape.global_batch // batch_shards)
+    return p_bytes + cache_bytes() / n_devices + b_loc * d * 2 * L * 8
+
+
+def model_flops_per_device(arch_id: str, shape_name: str, n_devices: int) -> float:
+    cfg = ARCH_SPECS[arch_id].config
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * toks
+    elif shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * toks
+    else:                                  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def analyze_record(rec: dict[str, Any]) -> dict[str, Any]:
+    n_dev = rec["n_devices"]
+    t_c = rec["flops_per_device"] / PEAK_FLOPS
+    t_m = memory_bytes_per_device(rec["arch"], rec["shape"], n_dev,
+                                  rec.get("step_cfg", {})) / HBM_BW
+    # the HLO operand+result proxy (loop-adjusted) as recorded upper bound
+    t_m_hlo = rec.get("hbm_bytes_per_device", 0.0) / HBM_BW
+    coll_s = 0.0
+    for op, v in rec.get("collectives", {}).items():
+        coll_s += v["bytes"] * _COLL_FACTOR.get(op, 1.0) / LINK_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], n_dev)
+    useful = mf / rec["flops_per_device"] if rec["flops_per_device"] else 0.0
+    bound = max(terms.values())
+    return {
+        **{k: round(v, 6) for k, v in terms.items()},
+        "memory_s_hlo_upper": round(t_m_hlo, 6),
+        "bottleneck": dom.replace("_s", ""),
+        "model_flops_per_device": mf,
+        "usefulness": round(useful, 4),
+        # fraction of the roofline: ideal MODEL-FLOPS time / achievable
+        # step time (max of terms) — the score we hillclimb
+        "roofline_fraction": round((mf / PEAK_FLOPS) / bound, 4) if bound else 0.0,
+        "step_time_bound_s": round(bound, 6),
+    }
+
+
+def load_cells(mesh: str = "single", art_dir: pathlib.Path | None = None):
+    d = (art_dir or ART) / mesh
+    cells = []
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            cells.append({"arch": rec.get("arch"), "shape": rec.get("shape"),
+                          "status": "fail", "error": rec.get("error", "")})
+            continue
+        cells.append({"arch": rec["arch"], "shape": rec["shape"],
+                      "status": "ok", **analyze_record(rec),
+                      "compile_s": rec["seconds_compile"],
+                      "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+                      "arg_gib": rec["memory"]["argument_bytes"] / 2**30})
+    return cells
+
+
+def markdown_table(cells) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | roofline frac | useful | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for c in cells:
+        if c["status"] != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | FAIL "
+                         f"{c['error'][:40]} | | | | | | |")
+            continue
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']:.4f} | "
+            f"{c['memory_s']:.4f} | {c['collective_s']:.4f} | "
+            f"{c['bottleneck']} | {c['roofline_fraction']:.3f} | "
+            f"{c['usefulness']:.3f} | {c['temp_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def main(mesh: str = "single"):
+    cells = load_cells(mesh)
+    ok = [c for c in cells if c["status"] == "ok"]
+    for c in ok:
+        print(f"roofline.{c['arch']}.{c['shape']},{c['roofline_fraction']:.3f},"
+              f"bound={c['bottleneck']} c={c['compute_s']:.3f}s "
+              f"m={c['memory_s']:.3f}s x={c['collective_s']:.3f}s")
+    if ok:
+        worst = min(ok, key=lambda c: c["roofline_fraction"])
+        coll = max(ok, key=lambda c: c["collective_s"])
+        print(f"roofline.worst_cell,{worst['arch']}x{worst['shape']},"
+              f"frac={worst['roofline_fraction']:.3f}")
+        print(f"roofline.most_collective_bound,{coll['arch']}x{coll['shape']},"
+              f"x={coll['collective_s']:.3f}s")
+    out = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "roofline"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{mesh}.json").write_text(json.dumps(cells, indent=1))
+    (out / f"{mesh}.md").write_text(markdown_table(cells))
+    return cells
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "single")

@@ -1,0 +1,55 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2,roofline]
+
+Prints ``name,value,derived`` CSV lines (and saves JSON artifacts).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced model set / steps (CI mode)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset, e.g. fig2,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig2_energy, fig3_overhead, fig4_capping,
+                            fig5_edxp, fig6_tradeoff, roofline)
+    ART.mkdir(parents=True, exist_ok=True)
+    jobs = {
+        "fig2": lambda: fig2_energy.main(quick=args.quick),
+        "fig3": lambda: fig3_overhead.main(quick=args.quick),
+        "fig4": lambda: fig4_capping.main(quick=args.quick),
+        "fig5": lambda: fig5_edxp.main(quick=args.quick),
+        "fig6": lambda: fig6_tradeoff.main(quick=args.quick),
+        "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],
+    }
+    failures = 0
+    for name, job in jobs.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# ---- {name} ----")
+        try:
+            res = job()
+            (ART / f"{name}.json").write_text(json.dumps(res, default=str))
+            print(f"{name}.seconds,{time.time()-t0:.1f},ok")
+        except Exception as e:                         # keep the harness alive
+            failures += 1
+            print(f"{name}.seconds,{time.time()-t0:.1f},"
+                  f"FAIL {type(e).__name__}: {str(e)[:200]}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

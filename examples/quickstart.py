@@ -1,0 +1,51 @@
+"""Quickstart: FROST in ~60 lines.
+
+Profiles a workload's power-cap response, fits the paper's F(x) cost curve,
+and picks the ED^2P-optimal cap — then shows the A1-policy knob moving the
+decision.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (BALANCED, CapProfiler, ENERGY_LEAN, LATENCY_LEAN,
+                        PowerCappedDevice, TPU_V5E, WorkloadProfile)
+
+# 1. Describe a workload by its roofline character (FLOPs + bytes per step).
+#    In production these numbers come from the compiled step's HLO
+#    (see repro.launch.dryrun); here: a training-like, compute-leaning step.
+workload = WorkloadProfile(
+    name="demo-train",
+    flops_per_step=1.2e12,         # 1.2 TFLOP per step
+    hbm_bytes_per_step=6e9,        # 6 GB HBM traffic per step
+    samples_per_step=256,
+)
+
+# 2. A power-cappable device (TPU v5e here; RTX_3080/3090 = paper's rigs).
+device = PowerCappedDevice(TPU_V5E)
+
+
+class Probe:
+    """FROST probes the workload under each cap for ~30 s (paper Sec III-C)."""
+
+    def probe(self, cap: float, duration_s: float):
+        return device.probe(workload, cap, duration_s)
+
+
+# 3. Profile -> fit F(x) = a e^(bx-c) + d sigma(ex-f) + g -> downhill simplex.
+for policy in (ENERGY_LEAN, BALANCED, LATENCY_LEAN):
+    decision = CapProfiler(Probe(), policy=policy).run()
+    print(f"{policy.policy_id:18s} -> cap {decision.cap:5.0%}  "
+          f"energy {decision.predicted_energy_saving:+6.1%}  "
+          f"delay {decision.predicted_delay_increase:+6.1%}  "
+          f"(fit rmse {decision.fit.rel_rmse:.2%}, "
+          f"{'accepted' if decision.fit_accepted else 'FALLBACK'})")
+
+# 4. The raw probe curve, if you want to plot Fig 4 yourself:
+probes = CapProfiler(Probe(), policy=BALANCED).measure()
+caps = [m.cap for m in probes]
+energy = [m.energy_per_sample for m in probes]
+print("\ncap grid   :", [f"{c:.0%}" for c in caps])
+print("J / sample :", [f"{e:.3f}" for e in energy])
+best = caps[int(np.argmin(energy))]
+print(f"energy-optimal probe: {best:.0%} of TDP")

@@ -1,0 +1,161 @@
+"""The FROST cap profiler — paper Sec III-C.
+
+When a new (model, dataset, hardware) triple appears, FROST:
+
+  1. probes the 8 power limits {30..100}% of TDP for ~30 s each,
+  2. computes the ED^mP cost of each probe (m from the A1 QoS policy),
+  3. fits F(x) = a e^(bx-c) + d sigma(ex-f) + g by MSE (Eqs 6-7),
+  4. minimises F with the downhill simplex -> optimal cap,
+  5. applies the cap through a pluggable enforcement backend.
+
+The workload is abstracted behind ``Workload.probe`` so the same profiler
+drives: the analytic device model (this container), a real-step-timed CPU
+workload (CNN zoo benchmarks), or `nvidia-smi`-backed hardware (deployment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Sequence
+
+import numpy as np
+
+from repro.core.edp import CapMeasurement, normalized_costs
+from repro.core.energy import EnergyLedger
+from repro.core.fitting import FitResult, fit_cost_curve, minimize_fit
+from repro.core.policy import QoSPolicy
+
+DEFAULT_CAP_GRID: tuple[float, ...] = tuple(np.round(np.arange(0.30, 1.001, 0.10), 2))
+DEFAULT_PROBE_SECONDS = 30.0   # paper: ~30 s covers several batches for all models
+
+
+class Workload(Protocol):
+    """Anything FROST can profile."""
+
+    def probe(self, cap: float, duration_s: float) -> tuple[int, float, float]:
+        """Run under ``cap`` for ~``duration_s``; return
+        (samples_processed, energy_joules, elapsed_seconds)."""
+        ...
+
+
+class CapBackend(Protocol):
+    """Cap enforcement (``nvidia-smi -pl`` equivalent)."""
+
+    def apply_cap(self, cap: float) -> None: ...
+    def current_cap(self) -> float: ...
+
+
+class RecordingBackend:
+    """Default in-memory backend (simulation / dry deployments)."""
+
+    def __init__(self) -> None:
+        self._cap = 1.0
+        self.history: list[float] = []
+
+    def apply_cap(self, cap: float) -> None:
+        self._cap = float(cap)
+        self.history.append(self._cap)
+
+    def current_cap(self) -> float:
+        return self._cap
+
+
+@dataclasses.dataclass(frozen=True)
+class CapDecision:
+    """Outcome of one profiling pass."""
+    cap: float                         # selected power limit (fraction of TDP)
+    policy_id: str
+    edp_exponent: float
+    fit: FitResult
+    measurements: tuple[CapMeasurement, ...]
+    profile_energy_j: float            # Eq 4/5 leading term: 8 * int P_pr dt
+    predicted_energy_saving: float     # vs the 100% cap probe
+    predicted_delay_increase: float    # vs the 100% cap probe
+
+    @property
+    def fit_accepted(self) -> bool:
+        return self.fit.accepted
+
+
+class CapProfiler:
+    def __init__(
+        self,
+        workload: Workload,
+        *,
+        policy: QoSPolicy | None = None,
+        backend: CapBackend | None = None,
+        cap_grid: Sequence[float] = DEFAULT_CAP_GRID,
+        probe_seconds: float = DEFAULT_PROBE_SECONDS,
+        ledger: EnergyLedger | None = None,
+    ) -> None:
+        self.workload = workload
+        self.policy = policy or QoSPolicy()
+        self.backend = backend or RecordingBackend()
+        self.cap_grid = tuple(sorted(float(c) for c in cap_grid))
+        self.probe_seconds = float(probe_seconds)
+        self.ledger = ledger
+
+    # -- step 1-2: probe the grid -------------------------------------------
+    def measure(self) -> list[CapMeasurement]:
+        out: list[CapMeasurement] = []
+        for cap in self.cap_grid:
+            if not (self.policy.min_cap <= cap <= self.policy.max_cap):
+                continue
+            self.backend.apply_cap(cap)
+            samples, energy_j, elapsed_s = self.workload.probe(cap, self.probe_seconds)
+            out.append(CapMeasurement(cap=cap, energy_j=energy_j,
+                                      delay_s=elapsed_s, samples=samples))
+            if self.ledger is not None:
+                self.ledger.add_profile_energy(energy_j)
+        if len(out) < 3:
+            raise RuntimeError("policy cap window leaves <3 probes; cannot profile")
+        return out
+
+    # -- step 3-5: fit, minimise, decide --------------------------------------
+    def decide(self, measurements: Sequence[CapMeasurement]) -> CapDecision:
+        m = self.policy.edp_exponent
+        meas = sorted(measurements, key=lambda r: r.cap)
+        caps = np.array([r.cap for r in meas])
+        costs = normalized_costs(list(meas), m)
+        fit = fit_cost_curve(caps, costs)
+        best_cap, _ = minimize_fit(fit, lo=max(self.policy.min_cap, caps.min()),
+                                   hi=min(self.policy.max_cap, caps.max()))
+
+        ref = meas[-1]  # 100% (or highest legal) cap
+        pred = self._interp(meas, best_cap)
+        delay_increase = pred[1] / ref.time_per_sample - 1.0
+
+        # Hard QoS constraint: walk the cap up until the delay bound holds.
+        if (self.policy.max_delay_increase is not None
+                and delay_increase > self.policy.max_delay_increase):
+            for cap in [c for c in caps if c >= best_cap]:
+                e, t = self._interp(meas, cap)
+                if t / ref.time_per_sample - 1.0 <= self.policy.max_delay_increase:
+                    best_cap, pred, delay_increase = cap, (e, t), t / ref.time_per_sample - 1.0
+                    break
+            else:
+                best_cap, pred, delay_increase = ref.cap, (ref.energy_per_sample,
+                                                           ref.time_per_sample), 0.0
+
+        decision = CapDecision(
+            cap=float(best_cap),
+            policy_id=self.policy.policy_id,
+            edp_exponent=m,
+            fit=fit,
+            measurements=tuple(meas),
+            profile_energy_j=float(sum(r.energy_j for r in meas)),
+            predicted_energy_saving=1.0 - pred[0] / ref.energy_per_sample,
+            predicted_delay_increase=float(delay_increase),
+        )
+        self.backend.apply_cap(decision.cap)
+        return decision
+
+    def run(self) -> CapDecision:
+        return self.decide(self.measure())
+
+    @staticmethod
+    def _interp(meas: Sequence[CapMeasurement], cap: float) -> tuple[float, float]:
+        """Linear interpolation of (energy/sample, time/sample) between probes."""
+        caps = np.array([r.cap for r in meas])
+        e = np.array([r.energy_per_sample for r in meas])
+        t = np.array([r.time_per_sample for r in meas])
+        return (float(np.interp(cap, caps, e)), float(np.interp(cap, caps, t)))

@@ -1,0 +1,135 @@
+"""FROST as an O-RAN microservice — paper Fig 1 / Sec II-B.
+
+Pragmatic, in-process realisation of the O-RAN AI/ML lifecycle pieces FROST
+touches.  Each ML-enabled node runs a ``FrostService``; the SMO pushes A1
+policies; new models trigger a profiling pass; the selected cap is applied
+through the node's enforcement backend; continuous monitoring re-profiles
+on drift (a changed workload invalidates the cached decision).
+
+No network stack is emulated — the interfaces are plain method calls with
+the same message shapes (A1 policy docs are dicts), so the service can be
+lifted onto a real message bus unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping
+
+from repro.core.profiler import CapBackend, CapDecision, CapProfiler, RecordingBackend, Workload
+from repro.core.policy import QoSPolicy
+
+
+@dataclasses.dataclass
+class CatalogueEntry:
+    """AI/ML catalogue record (validated model ready for deployment)."""
+    model_id: str
+    metadata: Mapping[str, Any]
+    cap_decision: CapDecision | None = None
+
+
+class ModelCatalogue:
+    """The non-RT-RIC AI/ML catalogue (validated + published models)."""
+
+    def __init__(self) -> None:
+        self._entries: dict[str, CatalogueEntry] = {}
+
+    def publish(self, model_id: str, metadata: Mapping[str, Any] | None = None) -> CatalogueEntry:
+        entry = CatalogueEntry(model_id=model_id, metadata=dict(metadata or {}))
+        self._entries[model_id] = entry
+        return entry
+
+    def get(self, model_id: str) -> CatalogueEntry:
+        return self._entries[model_id]
+
+    def __contains__(self, model_id: str) -> bool:
+        return model_id in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorEvent:
+    ts: float
+    kind: str           # "profiled" | "policy" | "drift" | "applied"
+    detail: Mapping[str, Any]
+
+
+class FrostService:
+    """One per ML-enabled O-RAN node (inference host or training host)."""
+
+    def __init__(
+        self,
+        node_id: str,
+        *,
+        backend: CapBackend | None = None,
+        policy: QoSPolicy | None = None,
+        probe_seconds: float = 30.0,
+        drift_threshold: float = 0.15,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        self.node_id = node_id
+        self.backend = backend or RecordingBackend()
+        self.policy = policy or QoSPolicy()
+        self.probe_seconds = probe_seconds
+        self.drift_threshold = drift_threshold
+        self._clock = clock
+        self._decisions: dict[str, CapDecision] = {}
+        self._baseline_step_time: dict[str, float] = {}
+        self.events: list[MonitorEvent] = []
+
+    # -- A1 policy ingestion (SMO -> non-RT-RIC -> node) ---------------------
+    def on_policy(self, a1_doc: Mapping[str, Any]) -> QoSPolicy:
+        self.policy = QoSPolicy.from_a1(a1_doc)
+        self._decisions.clear()       # policy change invalidates cached caps
+        self._log("policy", {"policy_id": self.policy.policy_id})
+        return self.policy
+
+    # -- model arrival (deployment from the catalogue) ------------------------
+    def on_new_model(self, model_id: str, workload: Workload) -> CapDecision:
+        profiler = CapProfiler(
+            workload, policy=self.policy, backend=self.backend,
+            probe_seconds=self.probe_seconds,
+        )
+        decision = profiler.run()
+        self._decisions[model_id] = decision
+        ref = max(decision.measurements, key=lambda r: r.cap)
+        self._baseline_step_time[model_id] = ref.time_per_sample
+        self._log("profiled", {
+            "model": model_id, "cap": decision.cap,
+            "saving": decision.predicted_energy_saving,
+            "delay": decision.predicted_delay_increase,
+            "fit_accepted": decision.fit_accepted,
+        })
+        return decision
+
+    # -- continuous operation (O-RAN step vi) ---------------------------------
+    def on_step_report(self, model_id: str, time_per_sample: float,
+                       workload: Workload | None = None) -> CapDecision | None:
+        """Monitoring hook: if observed throughput drifts >threshold from the
+        profiled expectation, re-profile (workload changed under us)."""
+        decision = self._decisions.get(model_id)
+        if decision is None:
+            return None
+        expected = self._interp_time(decision, decision.cap)
+        if expected <= 0:
+            return None
+        drift = abs(time_per_sample - expected) / expected
+        if drift > self.drift_threshold and workload is not None:
+            self._log("drift", {"model": model_id, "drift": drift})
+            return self.on_new_model(model_id, workload)
+        return None
+
+    def decision_for(self, model_id: str) -> CapDecision | None:
+        return self._decisions.get(model_id)
+
+    @staticmethod
+    def _interp_time(decision: CapDecision, cap: float) -> float:
+        import numpy as np
+        caps = np.array([r.cap for r in decision.measurements])
+        t = np.array([r.time_per_sample for r in decision.measurements])
+        return float(np.interp(cap, caps, t))
+
+    def _log(self, kind: str, detail: Mapping[str, Any]) -> None:
+        self.events.append(MonitorEvent(ts=self._clock(), kind=kind, detail=dict(detail)))

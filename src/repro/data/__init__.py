@@ -1,0 +1,5 @@
+"""Data pipelines: deterministic synthetic corpora, sharded per DP rank."""
+from repro.data.pipeline import (CifarBatches, DataConfig, TokenBatches,
+                                 make_batches)
+
+__all__ = ["DataConfig", "TokenBatches", "CifarBatches", "make_batches"]

@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every kernel.
+
+These are the correctness ground truth: small, obviously-correct,
+O(S^2)-memory implementations.  Pallas kernels (and the chunked jnp paths in
+ops.py) are validated against these with assert_allclose sweeps in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# --------------------------------------------------------------------------
+# attention oracle
+# --------------------------------------------------------------------------
+def attention_ref(
+    q: jax.Array,                  # (B, Sq, Hq, D)
+    k: jax.Array,                  # (B, Sk, Hkv, D)
+    v: jax.Array,                  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: int = 0,               # >0: sliding window (q attends to last `window` keys)
+    logit_cap: float = 0.0,        # gemma2 tanh softcap
+    scale: float | None = None,
+    q_offset: int = 0,             # absolute position of q[0] (decode/chunked prefill)
+    k_len: jax.Array | None = None,  # valid prefix length of k/v (ragged decode)
+) -> jax.Array:
+    """Naive GQA attention with all the assigned-arch flavours. fp32 math."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    q_pos = q_offset + jnp.arange(Sq)[:, None]           # (Sq, 1)
+    k_pos = jnp.arange(Sk)[None, :]                      # (1, Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    if k_len is not None:
+        mask &= k_pos < jnp.asarray(k_len).reshape(())
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD oracle — sequential recurrence over time
+# --------------------------------------------------------------------------
+def ssd_ref(
+    x: jax.Array,                  # (B, S, H, P)   inputs per head
+    dt: jax.Array,                 # (B, S, H)      softplus'd timestep (>0)
+    A: jax.Array,                  # (H,)           negative decay rate
+    B_mat: jax.Array,              # (B, S, G, N)   input gates (G groups)
+    C_mat: jax.Array,              # (B, S, G, N)   output gates
+    D: jax.Array | None = None,    # (H,)           skip connection
+    *,
+    initial_state: jax.Array | None = None,   # (B, H, P, N)
+    return_state: bool = False,
+):
+    """Exact recurrence:  h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T;
+    y_t = C_t h_t + D x_t.  Heads are grouped over B/C like GQA (H % G == 0).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    rep = H // G
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(B_mat.astype(jnp.float32), rep, axis=2)   # (B, S, H, N)
+    Cf = jnp.repeat(C_mat.astype(jnp.float32), rep, axis=2)
+
+    h0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h, t):
+        xt, dtt, Bt, Ct = t
+        decay = jnp.exp(dtt * Af)[..., None, None]            # (B, H, 1, 1)
+        upd = (dtt[..., None] * xt)[..., None] * Bt[:, :, None, :]  # (B,H,P,N)
+        h = decay * h + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                # (B, S, H, P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[:, None] * xf
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, hT.astype(jnp.float32)
+    return y
+
+
+# --------------------------------------------------------------------------
+# RMSNorm oracle
+# --------------------------------------------------------------------------
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+                gemma_style: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if gemma_style:
+        w = 1.0 + w
+    return (y * w).astype(x.dtype)

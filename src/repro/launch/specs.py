@@ -1,0 +1,106 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStruct stand-ins for every
+model input / state / cache — weak-type-correct, shardable, no allocation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import Shape
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.runtime.steps import StepConfig, init_train_state
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: Shape) -> dict[str, Any]:
+    gb, S = shape.global_batch, shape.seq_len
+    if cfg.n_codebooks:
+        tok = (gb, S, cfg.n_codebooks)
+    else:
+        tok = (gb, S)
+    batch = {"inputs": sds(tok, "int32"), "targets": sds(tok, "int32")}
+    if cfg.vision_tokens:
+        # seq budget includes the vision prefix; text gets the rest
+        text = S - cfg.vision_tokens
+        batch["inputs"] = sds((gb, text), "int32")
+        batch["targets"] = sds((gb, text), "int32")
+        batch["image_embeds"] = sds((gb, cfg.vision_tokens, cfg.d_model),
+                                    cfg.dtype)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: Shape) -> dict[str, Any]:
+    gb, S = shape.global_batch, shape.seq_len
+    if cfg.n_codebooks:
+        tok = (gb, S, cfg.n_codebooks)
+    else:
+        tok = (gb, S)
+    batch = {"inputs": sds(tok, "int32")}
+    if cfg.vision_tokens:
+        batch["inputs"] = sds((gb, S - cfg.vision_tokens), "int32")
+        batch["image_embeds"] = sds((gb, cfg.vision_tokens, cfg.d_model),
+                                    cfg.dtype)
+    return batch
+
+
+def decode_token_specs(cfg: ModelConfig, shape: Shape) -> jax.ShapeDtypeStruct:
+    gb = shape.global_batch
+    if cfg.n_codebooks:
+        return sds((gb, 1, cfg.n_codebooks), "int32")
+    return sds((gb, 1), "int32")
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: tfm.init_cache(cfg, batch, max_len, dtype=cfg.dtype))
+
+
+def abstract_train_state(cfg: ModelConfig, step_cfg: StepConfig):
+    """(state ShapeDtypeStruct tree, logical-axes tree) without allocating."""
+    holder: dict[str, Any] = {}
+
+    def f(key):
+        state, axes = init_train_state(key, cfg, step_cfg)
+        holder["axes"] = axes
+        return state
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, holder["axes"]
+
+
+def abstract_params(cfg: ModelConfig):
+    holder: dict[str, Any] = {}
+
+    def f(key):
+        params, axes = tfm.init_lm(key, cfg)
+        holder["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, holder["axes"]
+
+
+def input_specs(spec: ArchSpec, shape: Shape, step_cfg: StepConfig):
+    """Everything the dry-run lowers for one (arch, shape) cell."""
+    cfg = spec.config
+    if shape.kind == "train":
+        state, axes = abstract_train_state(cfg, step_cfg)
+        return {"kind": "train", "state": state, "axes": axes,
+                "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        params, axes = abstract_params(cfg)
+        return {"kind": "prefill", "params": params, "axes": axes,
+                "batch": prefill_batch_specs(cfg, shape),
+                "max_len": shape.seq_len}
+    # decode: one new token against a seq_len-deep cache
+    params, axes = abstract_params(cfg)
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    return {"kind": "decode", "params": params, "axes": axes,
+            "cache": cache, "tokens": decode_token_specs(cfg, shape)}

@@ -1,0 +1,137 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --smoke --steps 20 --frost
+
+Wires together: config registry -> data pipeline -> sharded train step ->
+FROST cap profiler (tunes the power limit before the long run) -> FT
+supervisor (heartbeats, checkpoint/restart, straggler power-shifting) ->
+telemetry ledger.  On this CPU container use --smoke (reduced configs);
+the full configs are exercised through the dry-run.
+
+Real-TPU deployments additionally want the XLA latency-hiding scheduler:
+    LIBTPU_INIT_ARGS="--xla_tpu_enable_async_collective_fusion=true"
+    XLA_FLAGS="--xla_tpu_enable_latency_hiding_scheduler=true"
+(recorded here, inert on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import (BALANCED, CapProfiler, EnergyLedger, FrostService,
+                        PowerCappedDevice, QoSPolicy, TPU_V5E, WorkloadProfile)
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, TokenBatches
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig
+from repro.runtime.fault import Supervisor, SupervisorConfig
+from repro.runtime.sharding import build_rules
+from repro.runtime.steps import StepConfig, init_train_state, make_train_step
+
+
+def profile_cap_for_step(cfg: ModelConfig, flops: float, bytes_hbm: float,
+                         coll: float, policy: QoSPolicy) -> float:
+    """FROST pass: given the compiled step's roofline terms, pick the cap."""
+    wl = WorkloadProfile(name=cfg.name, flops_per_step=flops,
+                         hbm_bytes_per_step=bytes_hbm,
+                         collective_bytes_per_step=coll,
+                         samples_per_step=1)
+    dev = PowerCappedDevice(TPU_V5E)
+
+    class _W:                                   # Workload protocol adapter
+        def probe(self, cap, duration_s):
+            return dev.probe(wl, cap, duration_s)
+
+    prof = CapProfiler(_W(), policy=policy, probe_seconds=30.0)
+    return prof.run()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--frost", action="store_true",
+                    help="run the FROST cap profiler before training")
+    ap.add_argument("--edp-exponent", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"family={cfg.family}")
+
+    step_cfg = StepConfig(
+        n_micro=args.n_micro, remat="none",
+        optimizer=OptimizerConfig(learning_rate=args.lr,
+                                  warmup_steps=max(2, args.steps // 10),
+                                  total_steps=args.steps))
+
+    mesh = make_host_mesh()
+    rules = build_rules(cfg, mesh) if mesh.devices.size > 1 else None
+
+    key = jax.random.PRNGKey(args.seed)
+    state, axes = init_train_state(key, cfg, step_cfg)
+    train_step = jax.jit(make_train_step(cfg, step_cfg, rules),
+                         donate_argnums=(0,))
+
+    data = TokenBatches(DataConfig(
+        seed=args.seed, vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, n_codebooks=cfg.n_codebooks))
+
+    # -- FROST pass (paper Sec III-C) ------------------------------------------
+    if args.frost:
+        policy = QoSPolicy(policy_id=f"train-ed{args.edp_exponent:g}p",
+                           edp_exponent=args.edp_exponent)
+        # derive roofline terms from one compiled step
+        from repro.launch import hloparse
+        lowered = train_step.lower(state, data.batch(0))
+        compiled = lowered.compile()
+        h = hloparse.analyze(compiled.as_text())
+        decision = profile_cap_for_step(
+            cfg, h["dot_flops"], float(compiled.cost_analysis()
+                                       .get("bytes accessed", 0.0)),
+            h["collective_bytes"], policy)
+        print(f"[frost] selected cap = {decision.cap:.0%} "
+              f"(pred. energy saving {decision.predicted_energy_saving:+.1%}, "
+              f"delay {decision.predicted_delay_increase:+.1%}, "
+              f"fit rmse {decision.fit.rel_rmse:.3%})")
+
+    # -- supervised run ----------------------------------------------------------
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2, save_async=True)
+    ckpt.save(state, 0)                    # recovery floor before step 1
+    sup = Supervisor(
+        SupervisorConfig(checkpoint_every=args.ckpt_every),
+        save_fn=lambda s, i: ckpt.save(s, i),
+        restore_fn=lambda: (ckpt.restore(state), ckpt.latest_step() or 0))
+    sup.register("node-0")
+
+    batches = (data.batch(i) for i in range(args.steps))
+    t0 = time.time()
+    state, report = sup.run(train_step, state, batches)
+    dt = time.time() - t0
+    losses = [h["loss"] for h in report["history"]]
+    print(f"[train] {report['final_step']} steps in {dt:.1f}s "
+          f"({dt/max(report['final_step'],1):.3f}s/step); "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    ckpt.wait()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

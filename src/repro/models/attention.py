@@ -1,0 +1,295 @@
+"""Attention blocks: GQA (with RoPE / sliding-window / logit softcap) and
+DeepSeek-V2 MLA (multi-head latent attention, decoupled RoPE, absorbed decode).
+
+Every init function returns a pytree whose leaves are ``ParamLeaf(array,
+logical_axes)``; ``repro.runtime.sharding`` resolves logical axes ("embed",
+"q_heads", "mlp", "experts", "vocab", ...) to mesh axes per architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# param leaves with logical sharding axes
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ParamLeaf:
+    array: jax.Array
+    axes: tuple[str | None, ...]
+
+
+jax.tree_util.register_pytree_node(
+    ParamLeaf,
+    lambda leaf: ((leaf.array,), leaf.axes),
+    lambda axes, children: ParamLeaf(children[0], axes),
+)
+
+
+def pl_(key, shape, axes, std=None, dtype="float32") -> ParamLeaf:
+    arr = (common.fan_in_init(key, shape, dtype=dtype) if std is None
+           else common.normal_init(key, shape, std, dtype=dtype))
+    return ParamLeaf(arr, axes)
+
+
+def split_leaves(tree):
+    """(params_with_leaves) -> (raw_param_tree, logical_axes_tree)."""
+    is_leaf = lambda x: isinstance(x, ParamLeaf)
+    params = jax.tree.map(lambda l: l.array, tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=is_leaf)
+    return params, axes
+
+
+# ==========================================================================
+# GQA attention
+# ==========================================================================
+def init_gqa(key, cfg: ModelConfig) -> dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.padded_q_heads, cfg.padded_kv_heads
+    kq, kk, kv, ko = common.split_keys(key, 4)
+    dt = cfg.param_dtype
+    return {
+        "wq": pl_(kq, (d, hq, hd), ("embed", "q_heads", None), dtype=dt),
+        "wk": pl_(kk, (d, hkv, hd), ("embed", "kv_heads", None), dtype=dt),
+        "wv": pl_(kv, (d, hkv, hd), ("embed", "kv_heads", None), dtype=dt),
+        "wo": pl_(ko, (hq, hd, d), ("q_heads", None, "embed"), dtype=dt),
+    }
+
+
+def _mask_padded_heads(o, cfg: ModelConfig):
+    """Zero the padded heads' outputs: their wq/wk/wv/wo slices then receive
+    zero gradient, so the math is exactly the published n_heads model."""
+    if not cfg.heads_padded:
+        return o
+    mask = (jnp.arange(cfg.padded_q_heads) < cfg.n_heads)
+    return o * mask[..., None].astype(o.dtype)
+
+
+def gqa_forward(params, x, positions, cfg: ModelConfig, *, window: int = 0,
+                policy: ops.KernelPolicy = ops.DEFAULT_POLICY,
+                constrain=None) -> jax.Array:
+    """Full-sequence attention (training / prefill). x: (B, S, d)."""
+    adt = x.dtype
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(adt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(adt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(adt))
+    if constrain is not None:
+        q = constrain(q, ("batch", None, "q_heads", None))
+        k = constrain(k, ("batch", None, "kv_heads", None))
+        v = constrain(v, ("batch", None, "kv_heads", None))
+    q = common.apply_rope_partial(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = common.apply_rope_partial(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    scale = cfg.query_scale or hd ** -0.5
+    o = ops.attention(q, k, v, causal=True, window=window,
+                      logit_cap=cfg.attn_logit_softcap, scale=scale,
+                      policy=policy)
+    o = _mask_padded_heads(o, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
+    if constrain is not None:
+        out = constrain(out, ("batch", None, "embed_act"))
+    return out
+
+
+def gqa_prefill(params, x, positions, cfg: ModelConfig, *, window: int = 0,
+                cache_len: int, policy=ops.DEFAULT_POLICY, constrain=None):
+    """Prefill: same as forward but also returns (k, v) laid into a cache of
+    capacity ``cache_len`` (ring layout, slot = pos % cache_len)."""
+    adt = x.dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(adt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(adt))
+    k = common.apply_rope_partial(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(adt))
+    q = common.apply_rope_partial(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    scale = cfg.query_scale or cfg.resolved_head_dim ** -0.5
+    o = ops.attention(q, k, v, causal=True, window=window,
+                      logit_cap=cfg.attn_logit_softcap, scale=scale,
+                      policy=policy)
+    o = _mask_padded_heads(o, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
+
+    S = x.shape[1]
+    if cache_len >= S:
+        pad = cache_len - S
+        k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:  # ring: keep the last cache_len entries at slot pos % cache_len
+        keep_k, keep_v = k[:, -cache_len:], v[:, -cache_len:]
+        shift = S % cache_len
+        k_c = jnp.roll(keep_k, shift, axis=1)
+        v_c = jnp.roll(keep_v, shift, axis=1)
+    return out, (k_c, v_c)
+
+
+def gqa_decode(params, x, pos, cache_kv, cfg: ModelConfig, *, window: int = 0,
+               constrain=None):
+    """One-token decode. x: (B, 1, d); cache_kv = (k, v) ring buffers of
+    capacity C; pos: () int32 absolute position of the new token."""
+    adt = x.dtype
+    k_cache, v_cache = cache_kv
+    C = k_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(adt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(adt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(adt))
+    posb = jnp.asarray(pos)[None]
+    q = common.apply_rope_partial(q, posb, cfg.rope_theta, cfg.rope_fraction)
+    k = common.apply_rope_partial(k, posb, cfg.rope_theta, cfg.rope_fraction)
+    slot = jnp.mod(pos, C)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, slot, 0, 0))
+    # absolute position held by each ring slot
+    s = jnp.arange(C)
+    k_pos = pos - jnp.mod(pos - s, C)
+    scale = cfg.query_scale or cfg.resolved_head_dim ** -0.5
+    o = ops.decode_attention_jnp(q, k_cache, v_cache, k_pos, pos,
+                                 window=window,
+                                 logit_cap=cfg.attn_logit_softcap, scale=scale)
+    o = _mask_padded_heads(o, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
+    return out, (k_cache, v_cache)
+
+
+# ==========================================================================
+# MLA (DeepSeek-V2)
+# ==========================================================================
+def init_mla(key, cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    keys = common.split_keys(key, 8)
+    dt = cfg.param_dtype
+    p: dict[str, Any] = {
+        # latent kv down-projection (+ shared rope key)
+        "wdkv": pl_(keys[0], (d, r_kv + dr), ("embed", None), dtype=dt),
+        "kv_norm": ParamLeaf(common.ones((r_kv,), dt), (None,)),
+        # up-projections from the latent
+        "wuk": pl_(keys[1], (r_kv, H, dn), (None, "q_heads", None), dtype=dt),
+        "wuv": pl_(keys[2], (r_kv, H, dv), (None, "q_heads", None), dtype=dt),
+        "wo": pl_(keys[3], (H, dv, d), ("q_heads", None, "embed"), dtype=dt),
+    }
+    if r_q:
+        p["wdq"] = pl_(keys[4], (d, r_q), ("embed", None), dtype=dt)
+        p["q_norm"] = ParamLeaf(common.ones((r_q,), dt), (None,))
+        p["wuq"] = pl_(keys[5], (r_q, H, dn + dr), (None, "q_heads", None), dtype=dt)
+    else:
+        p["wuq"] = pl_(keys[5], (d, H, dn + dr), ("embed", "q_heads", None), dtype=dt)
+    return p
+
+
+def _mla_queries(params, x, positions, cfg: ModelConfig):
+    adt = x.dtype
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["wdq"].astype(adt))
+        cq = common.rmsnorm(cq, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["wuq"].astype(adt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wuq"].astype(adt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(params, x, positions, cfg: ModelConfig):
+    """Down-project to the compressed latent: returns (c_kv, k_rope)."""
+    adt = x.dtype
+    r_kv = cfg.kv_lora_rank
+    ckv_rope = jnp.einsum("bsd,dr->bsr", x, params["wdkv"].astype(adt))
+    c_kv, k_rope = ckv_rope[..., :r_kv], ckv_rope[..., r_kv:]
+    c_kv = common.rmsnorm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = common.apply_rope(k_rope[:, :, None, :], positions,
+                               cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(params, x, positions, cfg: ModelConfig, *,
+                policy=ops.DEFAULT_POLICY, constrain=None,
+                return_latent: bool = False):
+    """Training/prefill MLA: expand the latent to per-head k/v, run GQA-style
+    flash attention with concatenated [nope|rope] q/k."""
+    adt = x.dtype
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_queries(params, x, positions, cfg)
+    c_kv, k_rope = _mla_latent(params, x, positions, cfg)
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wuk"].astype(adt))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wuv"].astype(adt))
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (*k_rope.shape[:2], H, dr))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    if constrain is not None:
+        q = constrain(q, ("batch", None, "q_heads", None))
+        k = constrain(k, ("batch", None, "q_heads", None))
+        v = constrain(v, ("batch", None, "q_heads", None))
+    scale = cfg.query_scale or (dn + dr) ** -0.5
+    o = ops.attention(q, k, v, causal=True, scale=scale,
+                      logit_cap=cfg.attn_logit_softcap, policy=policy)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
+    if constrain is not None:
+        out = constrain(out, ("batch", None, "embed_act"))
+    if return_latent:
+        return out, (c_kv, k_rope)
+    return out
+
+
+def mla_prefill(params, x, positions, cfg: ModelConfig, *, cache_len: int,
+                policy=ops.DEFAULT_POLICY, constrain=None):
+    """Prefill that also emits the compressed (c_kv, k_rope) cache — the whole
+    point of MLA: the cache is rank r_kv + d_rope per token, not H*(dk+dv)."""
+    out, (c_kv, k_rope) = mla_forward(params, x, positions, cfg, policy=policy,
+                                      constrain=constrain, return_latent=True)
+    S = x.shape[1]
+    lat = jnp.concatenate([c_kv, k_rope], axis=-1)       # (B, S, r_kv + dr)
+    if cache_len >= S:
+        lat = jnp.pad(lat, ((0, 0), (0, cache_len - S), (0, 0)))
+    else:
+        lat = jnp.roll(lat[:, -cache_len:], S % cache_len, axis=1)
+    return out, lat
+
+
+def mla_decode(params, x, pos, cache_lat, cfg: ModelConfig, *, constrain=None):
+    """Absorbed-matmul decode: score via q_nope @ W_uk acting on the latent
+    cache directly; attention output re-expanded with W_uv afterwards."""
+    adt = x.dtype
+    r_kv, dr, dn = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.nope_head_dim
+    C = cache_lat.shape[1]
+    posb = jnp.asarray(pos)[None]
+    q_nope, q_rope = _mla_queries(params, x, posb, cfg)      # (B,1,H,*)
+    c_kv, k_rope = _mla_latent(params, x, posb, cfg)         # (B,1,r_kv),(B,1,dr)
+
+    lat_t = jnp.concatenate([c_kv, k_rope], axis=-1)
+    slot = jnp.mod(pos, C)
+    cache_lat = jax.lax.dynamic_update_slice(
+        cache_lat, lat_t.astype(cache_lat.dtype), (0, slot, 0))
+
+    cache_ckv = cache_lat[..., :r_kv]
+    cache_rope = cache_lat[..., r_kv:]
+    # absorb W_uk into the query:  (B,1,H,dn) @ (r,H,dn) -> (B,H,r)
+    q_abs = jnp.einsum("bshk,rhk->bhr", q_nope, params["wuk"].astype(adt))
+    s = jnp.einsum("bhr,bcr->bhc", q_abs, cache_ckv.astype(adt))
+    s = s + jnp.einsum("bshk,bck->bhc", q_rope, cache_rope.astype(adt))
+    scale = cfg.query_scale or (dn + dr) ** -0.5
+    s = (s * scale).astype(jnp.float32)
+    if cfg.attn_logit_softcap > 0.0:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    k_pos = pos - jnp.mod(pos - jnp.arange(C), C)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    s = jnp.where(valid[None, None], s, ops.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)                           # (B,H,C)
+    o_lat = jnp.einsum("bhc,bcr->bhr", p.astype(adt), cache_ckv.astype(adt))
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, params["wuv"].astype(adt))
+    out = jnp.einsum("bhk,hkd->bd", o, params["wo"].astype(adt))[:, None]
+    return out, cache_lat

@@ -1,0 +1,160 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Layer = in_proj -> short causal conv (x, B, C channels) -> SSD -> gated
+RMSNorm -> out_proj.  Train/prefill run the chunked SSD kernel; decode is the
+O(1)-state recurrence (``ops.ssd_decode_step``) — this is why the ssm archs
+are the ones that run the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common
+from repro.models.attention import ParamLeaf, pl_
+from repro.models.config import ModelConfig
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict[str, Any]:
+    d, di = cfg.d_model, cfg.d_inner
+    H, N, G = cfg.resolved_ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    W = cfg.conv_width
+    keys = common.split_keys(key, 8)
+    dt = cfg.param_dtype
+    cd = conv_dim(cfg)
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 init)
+    u = jax.random.uniform(keys[6], (H,), jnp.float32)
+    dt_target = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_init = jnp.log(jnp.expm1(dt_target))   # inverse softplus
+    return {
+        "pre_norm": ParamLeaf(common.ones((d,), dt), (None,)),
+        "wz": pl_(keys[0], (d, di), ("embed", "ssm_inner"), dtype=dt),
+        "wx": pl_(keys[1], (d, di), ("embed", "ssm_inner"), dtype=dt),
+        "wB": pl_(keys[2], (d, G * N), ("embed", None), dtype=dt),
+        "wC": pl_(keys[3], (d, G * N), ("embed", None), dtype=dt),
+        "wdt": pl_(keys[4], (d, H), ("embed", "ssm_heads"), dtype=dt),
+        "conv_w": ParamLeaf(common.normal_init(keys[5], (W, cd), 0.1, dt),
+                            (None, "conv_channels")),
+        "conv_b": ParamLeaf(common.zeros((cd,), dt), ("conv_channels",)),
+        "A_log": ParamLeaf(jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),
+                           ("ssm_heads",)),
+        "D": ParamLeaf(common.ones((H,), dt), ("ssm_heads",)),
+        "dt_bias": ParamLeaf(jnp.asarray(dt_init, dt), ("ssm_heads",)),
+        "norm_scale": ParamLeaf(common.ones((di,), dt), ("ssm_inner",)),
+        "wout": pl_(keys[7], (di, d), ("ssm_inner", "embed"), dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv via W shifted adds (W is 4 — cheaper than a
+    conv HLO and fuses).  x: (B, S, C); w: (W, C).  Returns (y, tail) where
+    tail = last W-1 inputs (the decode conv state)."""
+    W = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + x_pad[:, i:i + S] * w[i]
+    tail = x_pad[:, -(W - 1):] if W > 1 else None
+    return y + b, tail
+
+
+def mamba_forward(params, x, cfg: ModelConfig, *, policy=ops.DEFAULT_POLICY,
+                  constrain=None, initial=None, return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: (B, S, d).
+
+    ``initial``/``return_state``: optional (conv_tail, ssm_state) carry for
+    chunked prefill / cache seeding.
+    """
+    adt = x.dtype
+    B, S, d = x.shape
+    di, H = cfg.d_inner, cfg.resolved_ssm_heads
+    P_, N, G = cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+
+    z = x @ params["wz"].astype(adt)
+    xc = x @ params["wx"].astype(adt)
+    Bc = x @ params["wB"].astype(adt)
+    Cc = x @ params["wC"].astype(adt)
+    dt_raw = x @ params["wdt"].astype(adt)
+    if constrain is not None:
+        z = constrain(z, ("batch", None, "ssm_act"))
+        xc = constrain(xc, ("batch", None, "ssm_act"))
+
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_state_in = None if initial is None else initial[0]
+    conv_out, conv_tail = _causal_conv(conv_in, params["conv_w"].astype(adt),
+                                       params["conv_b"].astype(adt),
+                                       conv_state_in)
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :di].reshape(B, S, H, P_)
+    Bc = conv_out[..., di:di + G * N].reshape(B, S, G, N)
+    Cc = conv_out[..., di + G * N:].reshape(B, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    ssm_state_in = None if initial is None else initial[1]
+    res = ops.ssd(xc, dt, A, Bc, Cc, params["D"], policy=policy,
+                  initial_state=ssm_state_in, return_state=return_state)
+    if return_state:
+        y, ssm_state = res
+    else:
+        y, ssm_state = res, None
+
+    y = y.reshape(B, S, di)
+    y = common.gated_rmsnorm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = y @ params["wout"].astype(adt)
+    if constrain is not None:
+        out = constrain(out, ("batch", None, "embed_act"))
+    if return_state:
+        return out, (conv_tail, ssm_state)
+    return out
+
+
+def mamba_decode(params, x, cache, cfg: ModelConfig, *, constrain=None):
+    """One-token decode.  x: (B, 1, d); cache = (conv_tail (B,W-1,Cc),
+    ssm_state (B,H,P,N)).  O(1) in context length."""
+    adt = x.dtype
+    B = x.shape[0]
+    di, H = cfg.d_inner, cfg.resolved_ssm_heads
+    P_, N, G = cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    conv_state, ssm_state = cache
+    xt = x[:, 0]
+
+    z = xt @ params["wz"].astype(adt)
+    xc = xt @ params["wx"].astype(adt)
+    Bc = xt @ params["wB"].astype(adt)
+    Cc = xt @ params["wC"].astype(adt)
+    dt_raw = xt @ params["wdt"].astype(adt)
+
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)      # (B, Cc)
+    w = params["conv_w"].astype(adt)                      # (W, Cc)
+    hist = jnp.concatenate([conv_state.astype(adt), conv_in[:, None]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"].astype(adt)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = hist[:, 1:]
+
+    xc = conv_out[:, :di].reshape(B, H, P_)
+    Bc = conv_out[:, di:di + G * N].reshape(B, G, N)
+    Cc = conv_out[:, di + G * N:].reshape(B, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    ssm_state, y = ops.ssd_decode_step(ssm_state, xc, dt, A, Bc, Cc, params["D"])
+    y = y.reshape(B, di)
+    y = common.gated_rmsnorm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = (y @ params["wout"].astype(adt))[:, None]
+    return out, (new_conv_state, ssm_state)

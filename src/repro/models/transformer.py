@@ -1,0 +1,571 @@
+"""The LM trunk: init / train-forward / prefill / decode for every assigned
+architecture family.
+
+Layers are stacked into *pattern units* and iterated with ``lax.scan`` so the
+HLO stays O(1) in depth (46-layer gemma2 compiles as fast as 2 layers):
+
+  * dense / moe / ssm:  unit = 1 layer, scan over n_layers.
+  * gemma2 (local/global alternation): unit = 2 layers (sub0 local window,
+    sub1 global) — both sublayers are distinct programs in the scan body, so
+    compiled FLOPs are honest (no lax.cond double-counting).
+  * deepseek (first layer dense): layer 0 unrolled, units = remaining layers.
+  * zamba2: unit = ``hybrid_attn_every`` mamba layers + ONE application of a
+    *shared* attention block (single param copy, closed over by the scan
+    body; Zamba2's core trick).
+
+Each apply function takes a ``RunCtx`` carrying the mesh context, kernel
+policy, activation-sharding ``constrain`` hook, and remat policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models import common, ssm
+from repro.models.attention import ParamLeaf, pl_, split_leaves
+from repro.models.config import ModelConfig
+from repro.models.layers import NO_MESH, ParallelCtx, init_mlp, init_moe, \
+    mlp_forward, moe_forward
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    v = cfg.vocab_size
+    return (v + VOCAB_PAD - 1) // VOCAB_PAD * VOCAB_PAD
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    parallel: ParallelCtx = NO_MESH
+    kernel_policy: ops.KernelPolicy = ops.DEFAULT_POLICY
+    constrain: Callable[[jax.Array, tuple], jax.Array] | None = None
+    remat: str = "none"                 # none | full | dots
+    decode_cache_len: int = 0           # 0 -> cfg.max_seq_len
+
+
+def unit_size(cfg: ModelConfig) -> int:
+    if cfg.local_global:
+        return 2
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        return cfg.hybrid_attn_every
+    return 1
+
+
+def n_units(cfg: ModelConfig) -> int:
+    u = unit_size(cfg)
+    body_layers = cfg.n_layers - cfg.first_dense_layers
+    if body_layers % u:
+        raise ValueError(f"{cfg.name}: {body_layers} layers not divisible by "
+                         f"pattern unit {u}")
+    return body_layers // u
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+def _init_block(key, cfg: ModelConfig, *, moe: bool, d_ff: int | None = None):
+    """One transformer sublayer: norm -> attn -> norm -> ffn."""
+    k1, k2 = common.split_keys(key, 2)
+    dt = cfg.param_dtype
+    blk: dict[str, Any] = {
+        "norm1": ParamLeaf(_norm_init(cfg), (None,)),
+        "attn": (attn.init_mla(k1, cfg) if cfg.use_mla else attn.init_gqa(k1, cfg)),
+        "norm2": ParamLeaf(_norm_init(cfg), (None,)),
+        "ffn": (init_moe(k2, cfg) if moe else init_mlp(k2, cfg, d_ff)),
+    }
+    if cfg.post_norms:
+        blk["post_attn_norm"] = ParamLeaf(_norm_init(cfg), (None,))
+        blk["post_ffn_norm"] = ParamLeaf(_norm_init(cfg), (None,))
+    return blk
+
+
+def _norm_init(cfg: ModelConfig):
+    # gemma stores (1 + w): init w at 0; others init scale at 1
+    if cfg.post_norms:
+        return common.zeros((cfg.d_model,), cfg.param_dtype)
+    return common.ones((cfg.d_model,), cfg.param_dtype)
+
+
+def _init_unit(key, cfg: ModelConfig):
+    """One pattern unit (see module docstring)."""
+    u = unit_size(cfg)
+    keys = common.split_keys(key, u)
+    unit: dict[str, Any] = {}
+    for i in range(u):
+        if cfg.uses_ssm:
+            unit[f"sub{i}"] = ssm.init_mamba(keys[i], cfg)
+        else:
+            unit[f"sub{i}"] = _init_block(keys[i], cfg, moe=cfg.uses_moe)
+    return unit
+
+
+def _init_shared_attn(key, cfg: ModelConfig):
+    """Zamba2's shared block: input = concat(hidden, embeddings) -> proj to
+    d -> attn + MLP -> residual add into the trunk."""
+    k0, k1 = common.split_keys(key, 2)
+    d = cfg.d_model
+    return {
+        "w_in": pl_(k0, (2 * d, d), ("embed", "embed_out"), dtype=cfg.param_dtype),
+        "block": _init_block(k1, cfg, moe=False),
+    }
+
+
+def init_lm(key, cfg: ModelConfig):
+    """Returns (params, logical_axes) raw trees (ParamLeaf already split)."""
+    keys = common.split_keys(key, 8)
+    Vp = padded_vocab(cfg)
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    tree: dict[str, Any] = {}
+
+    if cfg.n_codebooks:
+        tree["embed"] = pl_(keys[0], (cfg.n_codebooks, Vp, d),
+                            (None, "vocab", "embed"), std=0.02, dtype=dt)
+        tree["lm_head"] = pl_(keys[1], (cfg.n_codebooks, d, Vp),
+                              (None, "embed", "vocab"), std=0.02, dtype=dt)
+    else:
+        tree["embed"] = pl_(keys[0], (Vp, d), ("vocab", "embed"),
+                            std=0.02, dtype=dt)
+        if not cfg.tie_embeddings:
+            tree["lm_head"] = pl_(keys[1], (d, Vp), ("embed", "vocab"),
+                                  std=0.02, dtype=dt)
+
+    if cfg.first_dense_layers:
+        dense_keys = common.split_keys(keys[2], cfg.first_dense_layers)
+        tree["dense_layers"] = [
+            _init_block(dk, cfg, moe=False, d_ff=cfg.dense_d_ff or cfg.d_ff)
+            for dk in dense_keys]
+
+    nu = n_units(cfg)
+    unit_keys = jax.random.split(keys[3], nu)
+    stacked = jax.vmap(functools.partial(_init_unit, cfg=cfg))(unit_keys)
+    # prepend the stacked "layers" axis to every leaf's logical axes
+    is_leaf = lambda x: isinstance(x, ParamLeaf)
+    stacked = jax.tree.map(
+        lambda l: ParamLeaf(l.array, ("layers",) + tuple(l.axes)),
+        stacked, is_leaf=is_leaf)
+    tree["layers"] = stacked
+
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        tree["shared_attn"] = _init_shared_attn(keys[4], cfg)
+
+    tree["final_norm"] = ParamLeaf(_norm_init(cfg), (None,))
+    return split_leaves(tree)
+
+
+# ==========================================================================
+# sublayer application
+# ==========================================================================
+def _norm(x, scale, cfg: ModelConfig):
+    return common.rmsnorm(x, scale, cfg.norm_eps, gemma_style=cfg.post_norms)
+
+
+def _apply_block(blk, x, positions, cfg: ModelConfig, ctx: RunCtx, *,
+                 window: int, aux: jax.Array):
+    h = _norm(x, blk["norm1"], cfg)
+    if cfg.use_mla:
+        a = attn.mla_forward(blk["attn"], h, positions, cfg,
+                             policy=ctx.kernel_policy, constrain=ctx.constrain)
+    else:
+        a = attn.gqa_forward(blk["attn"], h, positions, cfg, window=window,
+                             policy=ctx.kernel_policy, constrain=ctx.constrain)
+    if cfg.post_norms:
+        a = _norm(a, blk["post_attn_norm"], cfg)
+    x = x + a
+    h = _norm(x, blk["norm2"], cfg)
+    if "router" in blk["ffn"]:
+        f, aux_l = moe_forward(blk["ffn"], h, cfg, ctx.parallel,
+                               constrain=ctx.constrain)
+        aux = aux + aux_l
+    else:
+        f = mlp_forward(blk["ffn"], h, cfg, constrain=ctx.constrain)
+    if cfg.post_norms:
+        f = _norm(f, blk["post_ffn_norm"], cfg)
+    return x + f, aux
+
+
+def _apply_shared_attn(shared, x, emb0, positions, cfg: ModelConfig,
+                       ctx: RunCtx, aux):
+    h = jnp.concatenate([x, emb0], axis=-1) @ shared["w_in"].astype(x.dtype)
+    out, aux = _apply_block(shared["block"], h, positions, cfg, ctx,
+                            window=0, aux=aux)
+    return x + (out - h), aux    # residual delta of the shared block
+
+
+def _apply_unit(unit, x, emb0, positions, cfg: ModelConfig, ctx: RunCtx,
+                shared, aux):
+    u = unit_size(cfg)
+    for i in range(u):
+        sub = unit[f"sub{i}"]
+        if cfg.uses_ssm:
+            h = common.rmsnorm(x, sub["pre_norm"], cfg.norm_eps)
+            x = x + ssm.mamba_forward(sub, h, cfg, policy=ctx.kernel_policy,
+                                      constrain=ctx.constrain)
+        else:
+            window = cfg.window_for_layer(i)
+            x, aux = _apply_block(sub, x, positions, cfg, ctx,
+                                  window=window, aux=aux)
+    if shared is not None:
+        x, aux = _apply_shared_attn(shared, x, emb0, positions, cfg, ctx, aux)
+    return x, aux
+
+
+# ==========================================================================
+# embedding / head
+# ==========================================================================
+def embed_tokens(params, tokens, cfg: ModelConfig, ctx: RunCtx):
+    adt = common.dt(cfg.dtype)
+    if cfg.n_codebooks:
+        # tokens: (B, S, n_cb) — sum of per-codebook embeddings
+        embs = params["embed"].astype(adt)          # (n_cb, Vp, d)
+        x = jnp.zeros(tokens.shape[:2] + (cfg.d_model,), adt)
+        for c in range(cfg.n_codebooks):
+            x = x + embs[c][tokens[..., c]]
+    else:
+        x = params["embed"].astype(adt)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)
+    if ctx.constrain is not None:
+        x = ctx.constrain(x, ("batch", None, "embed_act"))
+    return x
+
+
+def lm_logits(params, x, cfg: ModelConfig, ctx: RunCtx):
+    adt = x.dtype
+    Vp = padded_vocab(cfg)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bsd,cdv->bscv", x, params["lm_head"].astype(adt))
+    elif cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(adt).T
+    else:
+        logits = x @ params["lm_head"].astype(adt)
+    if cfg.final_logit_softcap > 0.0:
+        logits = common.softcap(logits, cfg.final_logit_softcap)
+    # mask the padded vocab tail
+    if Vp != cfg.vocab_size:
+        mask = jnp.arange(Vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    if ctx.constrain is not None:
+        spec = ("batch", None, None, "vocab") if cfg.n_codebooks \
+            else ("batch", None, "vocab")
+        logits = ctx.constrain(logits, spec)
+    return logits
+
+
+# ==========================================================================
+# full forward (training)
+# ==========================================================================
+def forward(params, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(), *,
+            extra_embeds: jax.Array | None = None):
+    """Token ids -> logits.  ``extra_embeds`` (B, n_img, d) is the LLaVA
+    vision prefix (precomputed patch embeddings; frontend is a stub)."""
+    x = embed_tokens(params, tokens, cfg, ctx)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    emb0 = x
+    aux0 = jnp.zeros((), jnp.float32)
+
+    for dense_blk in params.get("dense_layers", []):
+        x, aux0 = _apply_block(dense_blk, x, positions, cfg, ctx,
+                               window=cfg.sliding_window, aux=aux0)
+
+    shared = params.get("shared_attn")
+
+    def body(carry, unit):
+        x, aux = carry
+        x, aux = _apply_unit(unit, x, emb0, positions, cfg, ctx, shared, aux)
+        return (x, aux), None
+
+    if ctx.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif ctx.remat == "dots":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+    x = _norm(x, params["final_norm"], cfg)
+    logits = lm_logits(params, x, cfg, ctx)
+    return logits, aux
+
+
+def lm_loss(params, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(), *,
+            extra_embeds: jax.Array | None = None):
+    """Next-token CE (+ MoE aux).  For multi-codebook audio, the loss is the
+    mean CE over codebooks; for VLM, image-prefix positions carry no loss."""
+    if cfg.n_codebooks:
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        logits, aux = forward(params, inputs, cfg, ctx)
+        losses = [common.cross_entropy(logits[:, :, c], labels[..., c])
+                  for c in range(cfg.n_codebooks)]
+        return sum(losses) / cfg.n_codebooks + aux
+    inputs, labels, mask = common.shift_labels(tokens)
+    logits, aux = forward(params, inputs, cfg, ctx, extra_embeds=extra_embeds)
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1]:]
+    return common.cross_entropy(logits, labels, mask) + aux
+
+
+def lm_loss_pre_shifted(params, inputs, targets, cfg: ModelConfig,
+                        ctx: RunCtx = RunCtx(), *,
+                        extra_embeds: jax.Array | None = None):
+    """CE with a pre-shifted (inputs, targets) pair — the production data
+    pipeline emits these so the step sees clean power-of-two seq lengths."""
+    logits, aux = forward(params, inputs, cfg, ctx, extra_embeds=extra_embeds)
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1]:]
+    if cfg.n_codebooks:
+        losses = [common.cross_entropy(logits[:, :, c], targets[..., c])
+                  for c in range(cfg.n_codebooks)]
+        return sum(losses) / cfg.n_codebooks + aux
+    return common.cross_entropy(logits, targets) + aux
+
+
+# ==========================================================================
+# prefill / decode
+# ==========================================================================
+def _cache_len(cfg: ModelConfig, ctx: RunCtx, seq_len: int, window: int) -> int:
+    cap = ctx.decode_cache_len or max(cfg.max_seq_len, seq_len)
+    if window > 0:
+        cap = min(cap, window)
+    return cap
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype: str = "bfloat16"):
+    """Zero-filled decode cache pytree (+ its logical sharding axes)."""
+    adt = common.dt(dtype)
+    hd = cfg.resolved_head_dim
+    nu, u = n_units(cfg), unit_size(cfg)
+
+    def attn_cache(cap):
+        if cfg.use_mla:
+            return {"lat": jnp.zeros(
+                (nu, batch, cap, cfg.kv_lora_rank + cfg.rope_head_dim), adt)}
+        hkv = cfg.padded_kv_heads
+        return {"k": jnp.zeros((nu, batch, cap, hkv, hd), adt),
+                "v": jnp.zeros((nu, batch, cap, hkv, hd), adt)}
+
+    def mamba_cache():
+        cd = ssm.conv_dim(cfg)
+        H, P_, N = cfg.resolved_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        return {"conv": jnp.zeros((nu, batch, cfg.conv_width - 1, cd), adt),
+                "ssm": jnp.zeros((nu, batch, H, P_, N), jnp.float32)}
+
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    units: dict[str, Any] = {}
+    for i in range(u):
+        if cfg.uses_ssm:
+            units[f"sub{i}"] = mamba_cache()
+        else:
+            w = cfg.window_for_layer(i)
+            cap = min(max_len, w) if w > 0 else max_len
+            # MLA caches have no per-head dim; GQA caches are per-kv-head
+            c = attn_cache(cap)
+            units[f"sub{i}"] = c
+    cache["units"] = units
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        cap = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        cache["shared"] = {
+            "k": jnp.zeros((nu, batch, cap, cfg.padded_kv_heads, hd), adt),
+            "v": jnp.zeros((nu, batch, cap, cfg.padded_kv_heads, hd), adt)}
+    if cfg.first_dense_layers:
+        cap = max_len
+        dc = []
+        for _ in range(cfg.first_dense_layers):
+            if cfg.use_mla:
+                dc.append({"lat": jnp.zeros(
+                    (batch, cap, cfg.kv_lora_rank + cfg.rope_head_dim), adt)})
+            else:
+                hkv = cfg.padded_kv_heads
+                dc.append({"k": jnp.zeros((batch, cap, hkv, hd), adt),
+                           "v": jnp.zeros((batch, cap, hkv, hd), adt)})
+        cache["dense"] = dc
+    return cache
+
+
+def _block_prefill(blk, x, positions, cfg: ModelConfig, ctx: RunCtx, *,
+                   window: int, cache_len: int, aux):
+    """_apply_block that also emits this layer's decode cache."""
+    h = _norm(x, blk["norm1"], cfg)
+    if cfg.use_mla:
+        a, lat = attn.mla_prefill(blk["attn"], h, positions, cfg,
+                                  cache_len=cache_len,
+                                  policy=ctx.kernel_policy,
+                                  constrain=ctx.constrain)
+        c = {"lat": lat}
+    else:
+        a, (k, v) = attn.gqa_prefill(blk["attn"], h, positions, cfg,
+                                     window=window, cache_len=cache_len,
+                                     policy=ctx.kernel_policy,
+                                     constrain=ctx.constrain)
+        c = {"k": k, "v": v}
+    if cfg.post_norms:
+        a = _norm(a, blk["post_attn_norm"], cfg)
+    x = x + a
+    h = _norm(x, blk["norm2"], cfg)
+    if "router" in blk["ffn"]:
+        f, aux_l = moe_forward(blk["ffn"], h, cfg, ctx.parallel,
+                               constrain=ctx.constrain)
+        aux = aux + aux_l
+    else:
+        f = mlp_forward(blk["ffn"], h, cfg, constrain=ctx.constrain)
+    if cfg.post_norms:
+        f = _norm(f, blk["post_ffn_norm"], cfg)
+    return x + f, c, aux
+
+
+def prefill(params, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(), *,
+            max_len: int = 0, extra_embeds: jax.Array | None = None):
+    """Process the full prompt and build the decode cache.
+
+    Returns (logits, cache) — logits for every prompt position (the serving
+    layer samples from the last one); cache['pos'] = prompt length.
+    """
+    x = embed_tokens(params, tokens, cfg, ctx)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    max_len = max_len or max(cfg.max_seq_len, S)
+    positions = jnp.arange(S)[None, :]
+    emb0 = x
+    aux = jnp.zeros((), jnp.float32)
+    shared = params.get("shared_attn")
+
+    dense_cache = []
+    for blk in params.get("dense_layers", []):
+        cap = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        x, c, aux = _block_prefill(blk, x, positions, cfg, ctx,
+                                   window=cfg.sliding_window,
+                                   cache_len=cap, aux=aux)
+        dense_cache.append(c)
+
+    def body(carry, unit):
+        x, aux = carry
+        u = unit_size(cfg)
+        unit_cache = {}
+        for i in range(u):
+            sub = unit[f"sub{i}"]
+            if cfg.uses_ssm:
+                h = common.rmsnorm(x, sub["pre_norm"], cfg.norm_eps)
+                out, (conv, ssm_state) = ssm.mamba_forward(
+                    sub, h, cfg, policy=ctx.kernel_policy,
+                    constrain=ctx.constrain, return_state=True)
+                x = x + out
+                unit_cache[f"sub{i}"] = {"conv": conv, "ssm": ssm_state}
+            else:
+                w = cfg.window_for_layer(i)
+                cap = min(max_len, w) if w > 0 else max_len
+                x, c, aux = _block_prefill(sub, x, positions, cfg, ctx,
+                                           window=w, cache_len=cap, aux=aux)
+                unit_cache[f"sub{i}"] = c
+        if shared is not None:
+            h = jnp.concatenate([x, emb0], axis=-1) @ shared["w_in"].astype(x.dtype)
+            out, c, aux = _block_prefill(shared["block"], h, positions, cfg,
+                                         ctx, window=0, cache_len=max_len,
+                                         aux=aux)
+            x = x + (out - h)
+            unit_cache["__shared__"] = c
+        return (x, aux), unit_cache
+
+    (x, aux), unit_caches = jax.lax.scan(body, (x, aux), params["layers"])
+    x = _norm(x, params["final_norm"], cfg)
+    logits = lm_logits(params, x, cfg, ctx)
+
+    cache = {"pos": jnp.asarray(S, jnp.int32),
+             "units": {k: v for k, v in unit_caches.items()
+                       if k != "__shared__"}}
+    if shared is not None:
+        cache["shared"] = unit_caches["__shared__"]
+    if dense_cache:
+        cache["dense"] = dense_cache
+    return logits, cache
+
+
+def _block_decode(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *, window: int):
+    h = _norm(x, blk["norm1"], cfg)
+    if cfg.use_mla:
+        a, lat = attn.mla_decode(blk["attn"], h, pos, c["lat"], cfg,
+                                 constrain=ctx.constrain)
+        c = {"lat": lat}
+    else:
+        a, (k, v) = attn.gqa_decode(blk["attn"], h, pos, (c["k"], c["v"]),
+                                    cfg, window=window, constrain=ctx.constrain)
+        c = {"k": k, "v": v}
+    if cfg.post_norms:
+        a = _norm(a, blk["post_attn_norm"], cfg)
+    x = x + a
+    h = _norm(x, blk["norm2"], cfg)
+    if "router" in blk["ffn"]:
+        f, _ = moe_forward(blk["ffn"], h, cfg, ctx.parallel,
+                           constrain=ctx.constrain)
+    else:
+        f = mlp_forward(blk["ffn"], h, cfg, constrain=ctx.constrain)
+    if cfg.post_norms:
+        f = _norm(f, blk["post_ffn_norm"], cfg)
+    return x + f, c
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx()):
+    """One decode step: tokens (B, 1) [or (B, 1, n_cb)] + cache -> logits,
+    updated cache.  The cache is ring-buffered; ``cache['pos']`` advances."""
+    pos = cache["pos"]
+    x = embed_tokens(params, tokens, cfg, ctx)
+    emb0 = x
+    shared = params.get("shared_attn")
+
+    new_dense = []
+    for blk, c in zip(params.get("dense_layers", []), cache.get("dense", [])):
+        x, c = _block_decode(blk, x, pos, c, cfg, ctx, window=cfg.sliding_window)
+        new_dense.append(c)
+
+    def body(x, xs):
+        unit, c_unit = xs
+        u = unit_size(cfg)
+        new_c = {}
+        for i in range(u):
+            sub, c = unit[f"sub{i}"], c_unit[f"sub{i}"]
+            if cfg.uses_ssm:
+                h = common.rmsnorm(x, sub["pre_norm"], cfg.norm_eps)
+                out, (conv, ssm_state) = ssm.mamba_decode(
+                    sub, h, (c["conv"], c["ssm"]), cfg, constrain=ctx.constrain)
+                x = x + out
+                new_c[f"sub{i}"] = {"conv": conv, "ssm": ssm_state}
+            else:
+                window = cfg.window_for_layer(i)
+                x, c2 = _block_decode(sub, x, pos, c, cfg, ctx, window=window)
+                new_c[f"sub{i}"] = c2
+        if shared is not None:
+            h = jnp.concatenate([x, emb0], axis=-1) @ shared["w_in"].astype(x.dtype)
+            sc = c_unit["__shared__"]
+            out, sc2 = _block_decode(shared["block"], h, pos, sc, cfg, ctx,
+                                     window=0)
+            x = x + (out - h)
+            new_c["__shared__"] = sc2
+        return x, new_c
+
+    units_cache = cache["units"]
+    if shared is not None:
+        units_cache = dict(units_cache)
+        units_cache["__shared__"] = cache["shared"]
+    x, new_units = jax.lax.scan(body, x, (params["layers"], units_cache))
+
+    x = _norm(x, params["final_norm"], cfg)
+    logits = lm_logits(params, x, cfg, ctx)
+
+    new_cache = {"pos": pos + 1, "units": {k: v for k, v in new_units.items()
+                                           if k != "__shared__"}}
+    if shared is not None:
+        new_cache["shared"] = new_units["__shared__"]
+    if new_dense:
+        new_cache["dense"] = new_dense
+    return logits, new_cache

@@ -1,0 +1,11 @@
+"""Sharded optimizers: AdamW / Adam / SGD-momentum + LR schedules + clipping.
+
+Optimizer state mirrors the param tree leaf-for-leaf, so the param
+NamedShardings apply verbatim to the moments — FSDP shards optimizer state
+for free (ZeRO-1/2 equivalent under pjit).
+"""
+from repro.optim.adamw import (OptimizerConfig, adamw_init, adamw_update,
+                               global_norm, make_schedule)
+
+__all__ = ["OptimizerConfig", "adamw_init", "adamw_update", "global_norm",
+           "make_schedule"]

@@ -1,0 +1,172 @@
+"""Fault tolerance + elasticity: the host-side supervisor.
+
+At 1000+ nodes, mean-time-between-failures drops below a training day, so
+the framework assumes failure is routine, not exceptional:
+
+  * heartbeat monitor — every worker (simulated in-container; process/pod in
+    deployment) reports per-step liveness + step latency,
+  * checkpoint/restart — atomic resumable checkpoints (repro.checkpoint),
+    restore-on-failure with at-most-one-step loss of work,
+  * elastic re-mesh — on permanent node loss, the supervisor rebuilds the
+    mesh with a smaller DP extent and reshards the restored checkpoint (the
+    param shardings are pure functions of (cfg, mesh), so resharding is
+    just loading with the new rules),
+  * straggler mitigation — per-node step latencies feed the FROST
+    power-shift allocator (core/powershift): a thermally-derated node gets
+    a *larger* power budget (or its neighbours get capped down to match) —
+    the paper's power capping doubling as straggler control.
+
+Everything here is host-side Python orchestration — testable on CPU,
+hardware-agnostic by construction (the O-RAN portability argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.powershift import ClusterNode, allocate_power, detect_stragglers
+
+
+@dataclasses.dataclass
+class WorkerState:
+    node_id: str
+    last_heartbeat: float = 0.0
+    step: int = 0
+    step_latency_s: float = 0.0
+    alive: bool = True
+    derate: float = 1.0            # thermal/silicon derate (1 = healthy)
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    heartbeat_timeout_s: float = 10.0
+    checkpoint_every: int = 50
+    straggler_threshold: float = 1.15   # >15% above median step time
+    max_restarts: int = 8
+    elastic: bool = True                # drop dead DP ranks instead of stalling
+
+
+class Supervisor:
+    """Drives a training loop with failure injection + recovery.
+
+    The ``step_fn(state, batch) -> (state, metrics)`` and checkpoint hooks
+    are injected, so the same supervisor drives the in-container simulated
+    cluster and a real multi-host launch.
+    """
+
+    def __init__(self, cfg: SupervisorConfig, *,
+                 save_fn: Callable[[Any, int], None],
+                 restore_fn: Callable[[], tuple[Any, int]],
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
+        self.clock = clock
+        self.workers: dict[str, WorkerState] = {}
+        self.restarts = 0
+        self.events: list[dict] = []
+
+    # -- worker lifecycle -----------------------------------------------------
+    def register(self, node_id: str, derate: float = 1.0):
+        self.workers[node_id] = WorkerState(node_id, self.clock(),
+                                            derate=derate)
+
+    def heartbeat(self, node_id: str, step: int, latency_s: float):
+        w = self.workers[node_id]
+        w.last_heartbeat = self.clock()
+        w.step = step
+        w.step_latency_s = latency_s
+
+    def check_liveness(self) -> list[str]:
+        """Returns newly-dead node ids."""
+        now = self.clock()
+        dead = []
+        for w in self.workers.values():
+            if w.alive and now - w.last_heartbeat > self.cfg.heartbeat_timeout_s:
+                w.alive = False
+                dead.append(w.node_id)
+                self.events.append({"t": now, "event": "node_dead",
+                                    "node": w.node_id})
+        return dead
+
+    # -- failure handling -------------------------------------------------------
+    def handle_failure(self, dead: list[str]) -> dict:
+        """Decide the recovery action for the given dead nodes."""
+        self.restarts += 1
+        if self.restarts > self.cfg.max_restarts:
+            return {"action": "abort", "reason": "restart budget exhausted"}
+        alive = [w for w in self.workers.values() if w.alive]
+        if self.cfg.elastic and alive:
+            # shrink the DP extent to the largest power of two that fits
+            new_dp = 1 << (len(alive).bit_length() - 1)
+            return {"action": "remesh", "new_dp": new_dp,
+                    "restore_step": self.restore_fn()[1]}
+        return {"action": "restart", "restore_step": self.restore_fn()[1]}
+
+    # -- stragglers -----------------------------------------------------------
+    def straggler_report(self):
+        nodes = [w.node_id for w in self.workers.values()
+                 if w.alive and w.step_latency_s]
+        lat = [self.workers[n].step_latency_s for n in nodes]
+        if len(lat) < 2:
+            return [], {}
+        idx = detect_stragglers(lat, threshold=self.cfg.straggler_threshold)
+        return [nodes[i] for i in idx], dict(zip(nodes, lat))
+
+    def rebalance_power(self, nodes: list[ClusterNode], budget_w: float):
+        """FROST-as-straggler-mitigation: re-split the global power budget
+        so derated nodes stop dragging the DP step time."""
+        plan = allocate_power(nodes, budget_w)
+        self.events.append({"t": self.clock(), "event": "power_rebalance",
+                            "plan": {a.node_id: a.cap for a in plan.allocations}})
+        return plan
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, step_fn, state, batches, *, start_step: int = 0,
+            inject_failure_at: dict[int, str] | None = None) -> tuple[Any, dict]:
+        """Run to completion with checkpoint/restart.
+
+        ``inject_failure_at``: {step: node_id} — marks the node dead at that
+        step (tests + chaos drills).
+        """
+        step = start_step
+        inject = dict(inject_failure_at or {})
+        history = []
+        it = iter(batches)
+        while True:
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+            if step in inject:
+                w = self.workers.get(inject.pop(step))   # one-shot fault
+                if w:
+                    w.alive = False
+                    w.last_heartbeat = -1e9
+            dead = [w.node_id for w in self.workers.values() if not w.alive]
+            if dead:
+                decision = self.handle_failure(dead)
+                self.events.append({"t": self.clock(), "event": "recovery",
+                                    **decision})
+                if decision["action"] == "abort":
+                    break
+                state, step = self.restore_fn()
+                for d in dead:                      # node replaced / dropped
+                    self.workers[d].alive = True
+                    self.workers[d].last_heartbeat = self.clock()
+                continue
+            t0 = self.clock()
+            state, metrics = step_fn(state, batch)
+            latency = self.clock() - t0
+            for w in self.workers.values():
+                self.heartbeat(w.node_id, step, latency / max(w.derate, 1e-3))
+            step += 1
+            history.append({"step": step, **{k: float(v)
+                                             for k, v in metrics.items()}})
+            if step % self.cfg.checkpoint_every == 0:
+                self.save_fn(state, step)
+        return state, {"history": history, "events": self.events,
+                       "final_step": step, "restarts": self.restarts}

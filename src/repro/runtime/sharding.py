@@ -1,0 +1,203 @@
+"""Sharding rules: logical param/activation axes -> mesh axes.
+
+Scheme (FSDP x TP x EP with pure-DP across pods):
+
+  * batch/tokens  -> ("pod", "data")
+  * vocab (padded to /256), MLP hidden, expert dim, ssm inner -> "model" (TP/EP)
+  * d_model dims of weights -> "data" (FSDP storage; XLA inserts the
+    per-layer all-gathers)
+  * attention heads -> "model" ONLY when the head count divides the model
+    axis (gemma2, stablelm, deepseek, zamba); otherwise heads stay
+    replicated and attention runs batch-parallel with FSDP-gathered weights
+    (smollm's 9 heads, musicgen's 24, llava's 56).  This is what makes the
+    same rule set compile for every assigned arch.
+  * nothing is ever sharded over "pod" except the batch: cross-pod traffic
+    is exactly one gradient all-reduce per step (DCI links are scarce).
+
+Activation constraints are shape-checked: a dim that does not divide the
+mesh axis quietly resolves to replicated instead of failing at lowering —
+this is what lets the long_500k (batch=1) cells share the code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParallelCtx
+from repro.models.ssm import conv_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Resolved logical-axis table for one (cfg, mesh) pair."""
+    mesh: Mesh
+    table: dict[str, str | None]
+    batch_axes: tuple[str, ...]
+    sequence_shard: bool = False    # SP: shard the seq dim of the residual
+                                    # stream over "model" (hillclimb lever)
+
+    # -- params ---------------------------------------------------------------
+    def param_spec(self, axes: tuple[str | None, ...]) -> P:
+        return P(*[self.table.get(a) if a else None for a in axes])
+
+    def param_sharding(self, axes_tree: Any) -> Any:
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+        return jax.tree.map(
+            lambda axes: NamedSharding(self.mesh, self.param_spec(axes)),
+            axes_tree, is_leaf=is_axes)
+
+    # -- activations ------------------------------------------------------------
+    def _axis_size(self, name) -> int:
+        if name is None:
+            return 1
+        if isinstance(name, tuple):
+            return int(np.prod([self.mesh.shape[a] for a in name]))
+        return self.mesh.shape[name]
+
+    def act_spec(self, x, logical: tuple) -> P:
+        """Shape-checked activation spec.  'batch' -> the DP axes; named
+        table entries -> their mesh axis; non-divisible dims -> replicated."""
+        spec: list = []
+        for dim, name in enumerate(logical):
+            if name == "batch":
+                axes = tuple(a for a in self.batch_axes
+                             if a in self.mesh.shape and self.mesh.shape[a] > 1)
+                size = int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+                spec.append(axes if (axes and x.shape[dim] % size == 0) else None)
+            elif name is None:
+                spec.append(None)
+            else:
+                m = self.table.get(name)
+                if m is not None and x.shape[dim] % self.mesh.shape[m] == 0:
+                    spec.append(m)
+                else:
+                    spec.append(None)
+        # sequence parallelism: residual stream (batch, seq, embed_act)
+        if (self.sequence_shard and len(logical) >= 3
+                and logical[0] == "batch" and logical[-1] == "embed_act"
+                and spec[1] is None
+                and x.shape[1] % self.mesh.shape["model"] == 0):
+            spec[1] = "model"
+        return P(*spec)
+
+    def constrain(self, x, logical: tuple):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.act_spec(x, logical)))
+
+    moe_strategy: str = "gather"
+
+    def parallel_ctx(self) -> ParallelCtx:
+        return ParallelCtx(mesh=self.mesh, batch_axes=self.batch_axes,
+                           moe_strategy=self.moe_strategy)
+
+
+def build_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp_axis: str = "data",
+                tp_axis: str = "model", sequence_shard: bool = False,
+                fsdp: bool = True, moe_strategy: str = "gather") -> ShardingRules:
+    tp = mesh.shape.get(tp_axis, 1)
+    dpn = mesh.shape.get(fsdp_axis, 1)
+    dp = fsdp_axis if (fsdp and fsdp_axis in mesh.shape) else None
+
+    def tp_if(n: int) -> str | None:
+        return tp_axis if (n and n % tp == 0) else None
+
+    if moe_strategy == "a2a" and cfg.n_experts and cfg.n_experts % dpn == 0:
+        expert_axes = {"experts": fsdp_axis, "expert_d": None,
+                       "expert_ff": tp_if(cfg.resolved_moe_d_ff)}
+    else:
+        expert_axes = {"experts": tp_if(cfg.n_experts), "expert_d": dp,
+                       "expert_ff": None}
+
+    table: dict[str, str | None] = {
+        "vocab": tp_axis,                      # padded to /256 upstream
+        "embed": dp,                           # FSDP storage shard
+        "embed_out": tp_if(cfg.d_model),
+        "mlp": tp_axis,
+        "mlp_act": tp_axis,
+        **expert_axes,
+        "layers": None,
+        "q_heads": tp_if(cfg.padded_q_heads),
+        "kv_heads": tp_if(cfg.padded_kv_heads),
+        "embed_act": None,                     # residual stream replicated
+        "ssm_inner": tp_if(cfg.d_inner if cfg.uses_ssm else 0),
+        "ssm_act": tp_if(cfg.d_inner if cfg.uses_ssm else 0),
+        "ssm_heads": tp_if(cfg.resolved_ssm_heads if cfg.uses_ssm else 0),
+        "conv_channels": tp_if(conv_dim(cfg) if cfg.uses_ssm else 0),
+        "codebooks": None,
+    }
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    effective = ("a2a" if "experts" in expert_axes
+                 and expert_axes["experts"] == fsdp_axis else "gather")
+    return ShardingRules(mesh=mesh, table=table, batch_axes=batch_axes,
+                         sequence_shard=sequence_shard,
+                         moe_strategy=effective)
+
+
+# --------------------------------------------------------------------------
+# cache shardings (decode)
+# --------------------------------------------------------------------------
+def cache_sharding(rules: ShardingRules, cache: Any, cfg: ModelConfig) -> Any:
+    """NamedShardings for a decode-cache pytree.
+
+    Batch dim shards over the DP axes when divisible; otherwise (long_500k,
+    batch=1) the per-head / channel dims shard over "model" so the 500k KV
+    slabs split across the TP group.
+    """
+    mesh = rules.mesh
+    baxes = tuple(a for a in rules.batch_axes if mesh.shape[a] > 1)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    tp = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        names = [p.key for p in path if hasattr(p, "key")]
+        stacked = "units" in names or "shared" in names   # leading layer dim
+        b_dim = 1 if stacked else 0
+        spec: list = [None] * leaf.ndim
+        if leaf.shape[b_dim] % bsize == 0 and bsize > 1:
+            spec[b_dim] = baxes
+        # shard the head/channel/capacity structure over model.  A 32k-deep
+        # KV slab per sequence does NOT fit one chip for the big archs, so
+        # when heads cannot shard (24/56/9 heads vs 16-way model axis) — or
+        # for MLA latents, which have no head dim at all — the ring
+        # CAPACITY dim shards instead (flash-decode style partial softmax;
+        # XLA SPMD inserts the combine reduce).
+        kind = names[-1]
+        if kind in ("k", "v"):
+            if leaf.shape[-2] % tp == 0:
+                spec[-2] = "model"             # kv heads
+            elif leaf.shape[b_dim + 1] % tp == 0:
+                spec[b_dim + 1] = "model"      # ring capacity
+        elif kind == "ssm" and leaf.shape[b_dim + 1] % tp == 0:
+            spec[b_dim + 1] = "model"          # ssm heads
+        elif kind == "conv" and leaf.shape[-1] % tp == 0:
+            spec[-1] = "model"                 # conv channels
+        elif kind == "lat" and leaf.ndim >= 3 \
+                and leaf.shape[b_dim + 1] % tp == 0:
+            spec[b_dim + 1] = "model"          # MLA latent: shard capacity
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def batch_sharding(rules: ShardingRules, batch: Any) -> Any:
+    """Input batch: dim 0 over the DP axes (replicated if not divisible)."""
+    mesh = rules.mesh
+    baxes = tuple(a for a in rules.batch_axes if mesh.shape[a] > 1)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+
+    def spec_for(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        ok = baxes and leaf.shape[0] % bsize == 0
+        return NamedSharding(mesh, P(baxes if ok else None))
+
+    return jax.tree.map(spec_for, batch)

@@ -1,0 +1,151 @@
+"""Step builders: train_step (grad-accum microbatching + AdamW), prefill_step,
+serve_step (one decode token).  These are the functions the launcher jits
+with in/out shardings and the dry-run lowers.
+
+Overlap strategy: gradients are accumulated over ``n_micro`` microbatches
+inside a lax.scan; the cross-replica psum XLA inserts for the DP axes then
+happens ONCE on the accumulated grads (deferred-psum), and the XLA
+latency-hiding scheduler can overlap the per-layer FSDP all-gathers of
+microbatch i+1 with the compute of microbatch i.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import KernelPolicy
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.layers import NO_MESH
+from repro.models.transformer import RunCtx
+from repro.optim import OptimizerConfig, adamw_init, adamw_update
+from repro.runtime.sharding import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    """Runtime knobs orthogonal to the model config."""
+    n_micro: int = 1                   # grad-accumulation microbatches
+    remat: str = "dots"                # none | dots | full
+    kernel_policy: KernelPolicy = KernelPolicy()
+    optimizer: OptimizerConfig = OptimizerConfig()
+    sequence_shard: bool = False
+    moe_strategy: str = "gather"       # gather | a2a (see models.layers)
+
+
+def make_run_ctx(cfg: ModelConfig, rules: ShardingRules | None,
+                 step_cfg: StepConfig) -> RunCtx:
+    if rules is None:
+        return RunCtx(parallel=NO_MESH, kernel_policy=step_cfg.kernel_policy,
+                      constrain=None, remat=step_cfg.remat)
+    return RunCtx(parallel=rules.parallel_ctx(),
+                  kernel_policy=step_cfg.kernel_policy,
+                  constrain=rules.constrain, remat=step_cfg.remat)
+
+
+def init_train_state(key, cfg: ModelConfig, step_cfg: StepConfig):
+    """(params, axes) + optimizer state, as one state dict."""
+    params, axes = tfm.init_lm(key, cfg)
+    opt = adamw_init(params, step_cfg.optimizer)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}, axes
+
+
+def train_state_sharding(rules: ShardingRules, axes_tree) -> dict[str, Any]:
+    from jax.sharding import NamedSharding, PartitionSpec
+    psh = rules.param_sharding(axes_tree)
+    rep = NamedSharding(rules.mesh, PartitionSpec())
+    opt_cfg_placeholder = {"count": rep, "mu": psh, "nu": psh}
+    return {"params": psh, "opt": opt_cfg_placeholder, "step": rep}
+
+
+def make_train_step(cfg: ModelConfig, step_cfg: StepConfig,
+                    rules: ShardingRules | None = None) -> Callable:
+    """Returns step(state, batch) -> (state, metrics).
+
+    batch = {"inputs": (B, S) [or (B,S,n_cb)], "targets": same,
+             optional "image_embeds": (B, n_img, d)}.
+    """
+    ctx = make_run_ctx(cfg, rules, step_cfg)
+
+    def loss_fn(params, inputs, targets, extra):
+        return tfm.lm_loss_pre_shifted(params, inputs, targets, cfg, ctx,
+                                       extra_embeds=extra)
+
+    def train_step(state, batch):
+        params = state["params"]
+        n_micro = step_cfg.n_micro
+        inputs, targets = batch["inputs"], batch["targets"]
+        extra = batch.get("image_embeds")
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, inputs,
+                                                      targets, extra)
+        else:
+            B = inputs.shape[0]
+            mb = B // n_micro
+
+            def resh(x):
+                return x.reshape((n_micro, mb) + x.shape[1:])
+
+            micro_batches = (resh(inputs), resh(targets),
+                             resh(extra) if extra is not None else None)
+
+            def micro(carry, xs):
+                gsum, lsum = carry
+                mi, mt, me = xs
+                l, g = jax.value_and_grad(loss_fn)(params, mi, mt, me)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32)), micro_batches)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+
+        new_params, new_opt, om = adamw_update(grads, state["opt"], params,
+                                               step_cfg.optimizer)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, step_cfg: StepConfig,
+                      rules: ShardingRules | None = None,
+                      max_len: int = 0) -> Callable:
+    """prefill(params, batch) -> (last_logits, cache)."""
+    ctx = make_run_ctx(cfg, rules, step_cfg)
+
+    def prefill_step(params, batch):
+        logits, cache = tfm.prefill(params, batch["inputs"], cfg, ctx,
+                                    max_len=max_len,
+                                    extra_embeds=batch.get("image_embeds"))
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, step_cfg: StepConfig,
+                    rules: ShardingRules | None = None,
+                    greedy: bool = True) -> Callable:
+    """serve(params, cache, tokens) -> (next_token_or_logits, cache).
+
+    One new token per sequence against the ring-buffer cache — this is the
+    graph the decode_32k / long_500k cells lower.
+    """
+    ctx = make_run_ctx(cfg, rules, step_cfg)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = tfm.decode_step(params, cache, tokens, cfg, ctx)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, cache
+        return logits, cache
+
+    return serve_step

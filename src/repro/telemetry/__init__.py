@@ -1,0 +1,7 @@
+"""Power telemetry: meters + background sampler (paper Sec III-A)."""
+from repro.telemetry.meters import (AnalyticDeviceMeter, CpuProcessMeter,
+                                    DramMeter, Meter, RaplMeter, StackedMeter)
+from repro.telemetry.sampler import PowerSampler
+
+__all__ = ["Meter", "CpuProcessMeter", "RaplMeter", "DramMeter",
+           "AnalyticDeviceMeter", "StackedMeter", "PowerSampler"]

@@ -1,0 +1,171 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret) and the
+chunked-jnp fast paths, all against the pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_pallas
+
+
+def _qkv(key, B, Sq, Sk, Hq, Hkv, D, Dv, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, Dv), dtype)
+    return q, k, v
+
+
+ATTN_SHAPES = [
+    # B, Sq, Sk, Hq, Hkv, D, Dv
+    (1, 128, 128, 4, 4, 32, 32),      # MHA
+    (2, 128, 128, 8, 2, 32, 32),      # GQA 4:1
+    (1, 256, 256, 9, 3, 64, 64),      # smollm's awkward 9/3 heads
+    (1, 128, 128, 4, 1, 48, 16),      # MQA, Dv != D (MLA-shaped)
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_chunked_vs_ref(shape, dtype):
+    B, Sq, Sk, Hq, Hkv, D, Dv = shape
+    q, k, v = _qkv(jax.random.PRNGKey(1), B, Sq, Sk, Hq, Hkv, D, Dv,
+                   jnp.dtype(dtype))
+    tol = 2e-5 if dtype == "float32" else 2e-2
+    for kwargs in [dict(causal=True), dict(causal=True, window=64),
+                   dict(causal=True, logit_cap=30.0), dict(causal=False)]:
+        o_ref = ref.attention_ref(q, k, v, **kwargs)
+        o = ops.flash_attention_jnp(q, k, v, q_chunk=64, k_chunk=64, **kwargs)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(o_ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES[:3])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_pallas_vs_ref(shape, dtype):
+    B, Sq, Sk, Hq, Hkv, D, Dv = shape
+    q, k, v = _qkv(jax.random.PRNGKey(2), B, Sq, Sk, Hq, Hkv, D, Dv,
+                   jnp.dtype(dtype))
+    tol = 2e-5 if dtype == "float32" else 2e-2
+    for kwargs in [dict(causal=True), dict(causal=True, window=32),
+                   dict(causal=True, logit_cap=50.0)]:
+        o_ref = ref.attention_ref(q, k, v, **kwargs)
+        o = flash_attention(q, k, v, block_q=32, block_k=64, interpret=True,
+                            **kwargs)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(o_ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+def test_flash_q_offset_decode_chunk():
+    """Chunked prefill continuation: q block at an absolute offset."""
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, 64, 256, 4, 2, 32, 32,
+                   jnp.float32)
+    o_ref = ref.attention_ref(q, k, v, causal=True, q_offset=192)
+    o = ops.flash_attention_jnp(q, k, v, causal=True, q_offset=192,
+                                q_chunk=32, k_chunk=64)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_ring_cache():
+    """Ring-buffer decode == full attention at the same absolute position."""
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 32
+    q, k, v = _qkv(jax.random.PRNGKey(4), B, S, S, Hq, Hkv, D, D, jnp.float32)
+    # cache smaller than history with window: slot p % C
+    C, window = 32, 24
+    pos = S - 1
+    k_cache = jnp.zeros((B, C, Hkv, D))
+    v_cache = jnp.zeros((B, C, Hkv, D))
+    for p in range(S):
+        k_cache = k_cache.at[:, p % C].set(k[:, p])
+        v_cache = v_cache.at[:, p % C].set(v[:, p])
+    s = jnp.arange(C)
+    k_pos = pos - jnp.mod(pos - s, C)
+    o = ops.decode_attention_jnp(q[:, -1:], k_cache, v_cache, k_pos,
+                                 jnp.asarray(pos), window=window)
+    o_ref = ref.attention_ref(q[:, -1:], k, v, causal=True, window=window,
+                              q_offset=pos)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+
+
+SSD_SHAPES = [
+    # B, S, H, P, G, N, chunk
+    (1, 64, 2, 8, 1, 16, 16),
+    (2, 128, 4, 16, 2, 24, 32),
+    (1, 128, 8, 64, 1, 128, 64),      # mamba2-370m-like head shape
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+def test_ssd_chunked_vs_ref(shape):
+    B, S, H, P, G, N, chunk = shape
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    D = jax.random.normal(ks[5], (H,))
+    y_ref, h_ref = ref.ssd_ref(x, dt, A, Bm, Cm, D, return_state=True)
+    y, h = ops.ssd_chunked_jnp(x, dt, A, Bm, Cm, D, chunk=chunk,
+                               return_state=True)
+    np.testing.assert_allclose(y, y_ref, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(h, h_ref, atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES[:2])
+def test_ssd_pallas_vs_ref(shape):
+    B, S, H, P, G, N, chunk = shape
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    D = jax.random.normal(ks[5], (H,))
+    y_ref = ref.ssd_ref(x, dt, A, Bm, Cm, D)
+    y = ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(y, y_ref, atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_initial_state_and_decode_chain():
+    """Chunked prefill with carried state == one long exact scan; then the
+    O(1) decode steps continue it exactly."""
+    B, S, H, P, G, N = 1, 96, 2, 8, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    split = 64
+    y1, h1 = ops.ssd_chunked_jnp(x[:, :split], dt[:, :split], A,
+                                 Bm[:, :split], Cm[:, :split], None,
+                                 chunk=32, return_state=True)
+    ys = [y1]
+    h = h1
+    for t in range(split, S):
+        h, yt = ops.ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t],
+                                    Cm[:, t], None)
+        ys.append(yt[:, None])
+    y_chain = jnp.concatenate(ys, axis=1)
+    y_ref = ref.ssd_ref(x, dt, A, Bm, Cm, None)
+    np.testing.assert_allclose(y_chain, y_ref, atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("rows,d", [(32, 64), (100, 96), (256, 128)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("gemma", [False, True])
+def test_rmsnorm_pallas(rows, d, dtype, gemma):
+    x = jax.random.normal(jax.random.PRNGKey(8), (rows, d), jnp.dtype(dtype))
+    w = jax.random.normal(jax.random.PRNGKey(9), (d,))
+    o_ref = ref.rmsnorm_ref(x, w, gemma_style=gemma)
+    o = rmsnorm_pallas(x, w, gemma_style=gemma, block_rows=32, interpret=True)
+    tol = 1e-6 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)

@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PowerCappedDevice, TPU_V5E, WorkloadProfile, edp
+from repro.core.fitting import f_curve
+from repro.kernels import ops, ref
+from repro.runtime.compress import compress_residual, dequantize_int8
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# attention invariants
+# --------------------------------------------------------------------------
+@_settings
+@given(st.integers(1, 3), st.integers(2, 6), st.integers(1, 2),
+       st.integers(0, 100))
+def test_attention_output_in_value_hull(B, nS, Hkv, seed):
+    """Softmax weights are a convex combination: |o|_max <= |v|_max."""
+    S, G = 16 * nS, 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv * G, 16))
+    k = jax.random.normal(ks[1], (B, S, Hkv, 16))
+    v = jax.random.normal(ks[2], (B, S, Hkv, 16))
+    o = ops.flash_attention_jnp(q, k, v, causal=True, q_chunk=16, k_chunk=16)
+    assert float(jnp.max(jnp.abs(o))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+@_settings
+@given(st.integers(0, 50))
+def test_causal_no_future_leakage(seed):
+    """Perturbing token t must not change outputs at positions < t."""
+    B, S, H, D = 1, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    t = 20
+    o1 = ops.flash_attention_jnp(q, k, v, causal=True, q_chunk=8, k_chunk=8)
+    k2 = k.at[:, t:].add(jax.random.normal(ks[3], (B, S - t, H, D)))
+    v2 = v.at[:, t:].add(1.0)
+    o2 = ops.flash_attention_jnp(q, k2, v2, causal=True, q_chunk=8, k_chunk=8)
+    np.testing.assert_allclose(o1[:, :t], o2[:, :t], atol=1e-5)
+
+
+@_settings
+@given(st.integers(8, 24), st.integers(0, 30))
+def test_window_equals_truncated_context(window, seed):
+    """SWA == full attention over only the last `window` keys (per query)."""
+    B, S, H, D = 1, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    o_sw = ref.attention_ref(q, k, v, causal=True, window=window)
+    # check the last query explicitly against a hand-truncated context
+    lo = S - window
+    o_trunc = ref.attention_ref(q[:, -1:], k[:, lo:], v[:, lo:], causal=False)
+    np.testing.assert_allclose(o_sw[:, -1:], o_trunc, atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# SSD invariants
+# --------------------------------------------------------------------------
+@_settings
+@given(st.floats(0.25, 4.0), st.integers(0, 30))
+def test_ssd_linear_in_x(alpha, seed):
+    """With gates fixed, the SSD map is linear in x (it IS a linear SSM)."""
+    B, S, H, P, G, N = 1, 64, 2, 8, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y1 = ops.ssd_chunked_jnp(x, dt, A, Bm, Cm, None, chunk=16)
+    y2 = ops.ssd_chunked_jnp(alpha * x, dt, A, Bm, Cm, None, chunk=16)
+    np.testing.assert_allclose(np.asarray(y2), alpha * np.asarray(y1),
+                               rtol=2e-3, atol=2e-3)
+
+
+@_settings
+@given(st.integers(0, 30))
+def test_ssd_state_decays(seed):
+    """A < 0 ==> with zero input the state contribution decays to zero."""
+    B, S, H, P, G, N = 1, 64, 2, 4, 1, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, H))) + 0.5
+    A = -jnp.exp(jax.random.normal(ks[1], (H,))) - 0.5
+    Bm = jax.random.normal(ks[2], (B, S, G, N))
+    Cm = jax.random.normal(ks[3], (B, S, G, N))
+    h0 = 5.0 * jnp.ones((B, H, P, N))
+    y, hT = ops.ssd_chunked_jnp(jnp.zeros((B, S, H, P)), dt, A, Bm, Cm, None,
+                                chunk=16, initial_state=h0, return_state=True)
+    assert float(jnp.max(jnp.abs(hT))) < float(jnp.max(jnp.abs(h0)))
+
+
+# --------------------------------------------------------------------------
+# FROST invariants
+# --------------------------------------------------------------------------
+@_settings
+@given(st.floats(1e-3, 1e3), st.floats(1e-3, 1e3), st.floats(0.0, 4.0))
+def test_edp_positive_and_monotone(e, d, m):
+    assert edp(e, d, m) >= 0
+    assert edp(2 * e, d, m) > edp(e, d, m)
+
+
+@_settings
+@given(st.floats(0.3, 1.0), st.floats(0.3, 1.0),
+       st.floats(1e11, 1e13), st.floats(1e8, 1e11))
+def test_device_model_monotone_in_cap(c1, c2, flops, bts):
+    """Lower cap never makes the step FASTER, never raises board power."""
+    dev = PowerCappedDevice(TPU_V5E)
+    wl = WorkloadProfile(name="w", flops_per_step=flops,
+                         hbm_bytes_per_step=bts)
+    lo, hi = sorted((c1, c2))
+    e_lo, e_hi = dev.estimate(wl, lo), dev.estimate(wl, hi)
+    assert e_lo.step_time_s >= e_hi.step_time_s - 1e-9
+    assert e_lo.power_w <= e_hi.power_w + 1e-6
+
+
+@_settings
+@given(st.lists(st.floats(-100.0, 100.0), min_size=1, max_size=64),
+       st.integers(0, 20))
+def test_quantize_error_bounded_by_half_step(vals, seed):
+    x = jnp.asarray(vals, jnp.float32)
+    q, scale, err = compress_residual(x)
+    assert float(jnp.max(jnp.abs(err))) <= float(scale) * 0.5 + 1e-6
+
+
+@_settings
+@given(st.floats(-2.0, 2.0), st.floats(-5.0, 5.0), st.floats(-5.0, 5.0))
+def test_f_curve_finite_everywhere(a, b, c):
+    """Eq (6) must never overflow for any coefficients the fitter visits."""
+    x = np.linspace(0.0, 1.0, 50)
+    y = f_curve(x, (a, b, c, a, b, c, 1.0))
+    assert np.all(np.isfinite(y))
