@@ -100,7 +100,8 @@ def _profile_cnn_uncached(name: str, *, batch: int = 32, train_steps: int = 12,
     x0, y0 = data.batch_at(0)
     lowered = step.lower(params, opt, jnp.asarray(x0), jnp.asarray(y0))
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    from repro.launch.hloparse import xla_cost
+    cost = xla_cost(compiled)
     flops = float(cost.get("flops", 0.0))
     nbytes = float(cost.get("bytes accessed", 0.0))
 

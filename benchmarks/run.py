@@ -23,8 +23,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (fig2_energy, fig3_overhead, fig4_capping,
-                            fig5_edxp, fig6_tradeoff, roofline)
+    from benchmarks import (ctrl_overhead, fig2_energy, fig3_overhead,
+                            fig4_capping, fig5_edxp, fig6_tradeoff, roofline)
     ART.mkdir(parents=True, exist_ok=True)
     jobs = {
         "fig2": lambda: fig2_energy.main(quick=args.quick),
@@ -32,6 +32,7 @@ def main(argv=None) -> int:
         "fig4": lambda: fig4_capping.main(quick=args.quick),
         "fig5": lambda: fig5_edxp.main(quick=args.quick),
         "fig6": lambda: fig6_tradeoff.main(quick=args.quick),
+        "ctrl": lambda: ctrl_overhead.main(quick=args.quick),
         "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],
     }
     failures = 0

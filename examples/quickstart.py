@@ -1,15 +1,23 @@
-"""Quickstart: FROST in ~60 lines.
+"""Quickstart: FROST in ~60 lines, batch and closed-loop.
 
-Profiles a workload's power-cap response, fits the paper's F(x) cost curve,
-and picks the ED^2P-optimal cap — then shows the A1-policy knob moving the
-decision.
+Part 1 profiles a workload's power-cap response the paper's way (8 x 30 s
+probe windows), fits the F(x) cost curve, and picks the ED^2P-optimal cap —
+showing the A1-policy knob moving the decision.
+
+Part 2 runs the same decision *online*: step telemetry streams over the
+control-plane event bus, the ``OnlineCapProfiler`` amortises its probes
+across live traffic, and cap commands land mid-run — no dedicated probe
+windows.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.control import CapApplied, EventBus, StepDone
+from repro.control.online import OnlineCapProfiler
 from repro.core import (BALANCED, CapProfiler, ENERGY_LEAN, LATENCY_LEAN,
                         PowerCappedDevice, TPU_V5E, WorkloadProfile)
+from repro.core.profiler import RecordingBackend
 
 # 1. Describe a workload by its roofline character (FLOPs + bytes per step).
 #    In production these numbers come from the compiled step's HLO
@@ -32,20 +40,43 @@ class Probe:
         return device.probe(workload, cap, duration_s)
 
 
-# 3. Profile -> fit F(x) = a e^(bx-c) + d sigma(ex-f) + g -> downhill simplex.
+# 3. Batch flow: profile -> fit F(x) -> downhill simplex, per A1 policy.
+batch_decisions = {}
 for policy in (ENERGY_LEAN, BALANCED, LATENCY_LEAN):
-    decision = CapProfiler(Probe(), policy=policy).run()
+    decision = batch_decisions[policy.policy_id] = \
+        CapProfiler(Probe(), policy=policy).run()
     print(f"{policy.policy_id:18s} -> cap {decision.cap:5.0%}  "
           f"energy {decision.predicted_energy_saving:+6.1%}  "
           f"delay {decision.predicted_delay_increase:+6.1%}  "
           f"(fit rmse {decision.fit.rel_rmse:.2%}, "
           f"{'accepted' if decision.fit_accepted else 'FALLBACK'})")
 
-# 4. The raw probe curve, if you want to plot Fig 4 yourself:
-probes = CapProfiler(Probe(), policy=BALANCED).measure()
-caps = [m.cap for m in probes]
-energy = [m.energy_per_sample for m in probes]
-print("\ncap grid   :", [f"{c:.0%}" for c in caps])
+# 4. Closed-loop flow: the SAME decision from streamed events — the online
+#    profiler probes across live steps instead of freezing the pipeline.
+bus = EventBus()
+backend = RecordingBackend()
+profiler = OnlineCapProfiler(bus, backend, policy=BALANCED,
+                             steps_per_probe=2, hold_steps=16,
+                             min_refresh_interval_s=0.0)
+for step in range(40):                       # live traffic
+    cap = backend.current_cap()              # honour the latest cap command
+    est = device.estimate(workload, cap)
+    bus.publish(StepDone(node_id="node-0", step=step,
+                         duration_s=est.step_time_s,
+                         samples=workload.samples_per_step,
+                         energy_j=est.energy_j))
+
+caps = bus.events_of(CapApplied)
+probes = sum(1 for c in caps if c.reason == "probe")
+print(f"\nonline: {len(caps)} cap commands over 40 live steps "
+      f"({probes} amortised probes) -> cap {profiler.decision.cap:.0%} "
+      f"(batch said {batch_decisions[BALANCED.policy_id].cap:.0%})")
+
+# 5. The raw probe curve, if you want to plot Fig 4 yourself:
+probes_m = CapProfiler(Probe(), policy=BALANCED).measure()
+caps_g = [m.cap for m in probes_m]
+energy = [m.energy_per_sample for m in probes_m]
+print("\ncap grid   :", [f"{c:.0%}" for c in caps_g])
 print("J / sample :", [f"{e:.3f}" for e in energy])
-best = caps[int(np.argmin(energy))]
+best = caps_g[int(np.argmin(energy))]
 print(f"energy-optimal probe: {best:.0%} of TDP")

@@ -16,7 +16,8 @@ from repro.core.powermodel import (DEVICES, RTX_3080, RTX_3090, TPU_V5E,
 from repro.core.powershift import (ClusterNode, NodeAllocation, ShiftPlan,
                                    allocate_power, detect_stragglers)
 from repro.core.profiler import (DEFAULT_CAP_GRID, CapDecision, CapProfiler,
-                                 RecordingBackend)
+                                 RecordingBackend, decide_cap,
+                                 interp_measurements)
 from repro.core.service import FrostService, ModelCatalogue
 from repro.core.simplex import SimplexResult, minimize_scalar_on_interval, nelder_mead
 
@@ -31,6 +32,7 @@ __all__ = [
     "ClusterNode", "NodeAllocation", "ShiftPlan", "allocate_power",
     "detect_stragglers",
     "CapDecision", "CapProfiler", "RecordingBackend", "DEFAULT_CAP_GRID",
+    "decide_cap", "interp_measurements",
     "FrostService", "ModelCatalogue",
     "SimplexResult", "nelder_mead", "minimize_scalar_on_interval",
 ]

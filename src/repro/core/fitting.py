@@ -86,15 +86,29 @@ def fit_cost_curve(
     *,
     error_gate: float = 0.05,
     max_iter: int = 4000,
+    x0: Sequence[float] | None = None,
+    multi_start: bool = True,
 ) -> FitResult:
-    """Fit Eq (6) to (cap, ED^mP) probes by MSE (Eq 7)."""
+    """Fit Eq (6) to (cap, ED^mP) probes by MSE (Eq 7).
+
+    ``x0`` warm-starts the simplex from known-good coefficients (e.g. the
+    previous fit in the online profiler's incremental refits); with
+    ``multi_start=False`` only that start (plus its polish) runs — an order
+    of magnitude cheaper, appropriate when the probe data moved slightly.
+    """
     x = np.asarray(caps, dtype=np.float64)
     y = np.asarray(costs, dtype=np.float64)
     if x.size != y.size or x.size < 3:
         raise ValueError("need >=3 (cap, cost) probes")
 
+    seeds: list[np.ndarray] = []
+    if x0 is not None:
+        seeds.append(np.asarray(x0, dtype=np.float64))
+    if multi_start or not seeds:
+        seeds.extend(_initial_guesses(x, y))
+
     best: tuple[float, np.ndarray] | None = None
-    for seed in _initial_guesses(x, y):
+    for seed in seeds:
         res = nelder_mead(lambda c: _mse(c, x, y), seed,
                           initial_step=0.25, max_iter=max_iter,
                           xatol=1e-10, fatol=1e-14)

@@ -143,8 +143,8 @@ def lower_cell(spec: ArchSpec, shape: Shape, mesh, step_cfg: StepConfig):
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
     from repro.launch import hloparse
+    cost = hloparse.xla_cost(compiled)
     hlo = hloparse.analyze(compiled.as_text())
 
     record = {

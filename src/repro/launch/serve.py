@@ -8,6 +8,12 @@ requests arrive with ragged prompts, are right-aligned into a fixed prefill
 batch, decoded with the ring-buffer cache, and FROST caps the device using
 the *decode* roofline (decode is memory-bound, so deep caps are near-free —
 the paper's central trade, measured rather than assumed).
+
+The FROST loop is the event-driven control plane: every decode step
+publishes ``StepDone`` + ``PowerSampled`` onto the bus, the
+``OnlineCapProfiler`` amortises its probes across the live token stream,
+and cap commands are honoured mid-run through the enforcement backend (the
+analytic device meter stands in for ``nvidia-smi`` on this container).
 """
 from __future__ import annotations
 
@@ -19,13 +25,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import QoSPolicy
+from repro.control import CapApplied, EventBus, StepDone
+from repro.control.online import OnlineCapProfiler
+from repro.core import (BALANCED, PowerCappedDevice, QoSPolicy, TPU_V5E,
+                        WorkloadProfile)
+from repro.core.profiler import RecordingBackend
 from repro.data import DataConfig, TokenBatches
 from repro.launch.mesh import make_host_mesh
 from repro.runtime.sharding import build_rules
 from repro.runtime.steps import (StepConfig, make_prefill_step,
                                  make_serve_step)
 from repro.models import transformer as tfm
+from repro.telemetry.meters import AnalyticDeviceMeter, CpuProcessMeter, DramMeter
+from repro.telemetry.sampler import PowerSampler
+
+
+def decode_workload(cfg, requests: int) -> WorkloadProfile:
+    """Decode-step roofline from first principles: every generated token
+    streams the full parameter set from HBM once (memory-bound — the reason
+    deep caps are near-free while serving), with 2 FLOPs per param per
+    sequence of compute on top."""
+    p = float(cfg.param_count())
+    return WorkloadProfile(
+        name=f"{cfg.name}-decode",
+        flops_per_step=2.0 * p * requests,
+        hbm_bytes_per_step=2.0 * p,          # bf16 weights once per token
+        samples_per_step=requests,
+    )
 
 
 def main():
@@ -36,6 +62,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-frost", action="store_true",
+                    help="disable the FROST control plane")
+    ap.add_argument("--edp-exponent", type=float, default=2.0)
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -49,6 +78,25 @@ def main():
     prefill = jax.jit(make_prefill_step(cfg, step_cfg, rules, max_len=max_len))
     serve = jax.jit(make_serve_step(cfg, step_cfg, rules), donate_argnums=(1,))
 
+    # -- FROST control plane (paper Fig 1, event-driven) ----------------------
+    bus = EventBus()
+    backend = RecordingBackend()
+    device = PowerCappedDevice(TPU_V5E)
+    wl = decode_workload(cfg, args.requests)
+    meter = AnalyticDeviceMeter(device, wl)
+    sampler = PowerSampler({"gpu": meter, "cpu": CpuProcessMeter(),
+                            "dram": DramMeter(4, 16)},
+                           rate_hz=0.1, bus=bus, node_id="serve-0")
+    cap_log = bus.tap(CapApplied)        # lossless cap-command accounting
+    profiler = None
+    if not args.no_frost:
+        policy = QoSPolicy(policy_id=f"serve-ed{args.edp_exponent:g}p",
+                           edp_exponent=args.edp_exponent) \
+            if args.edp_exponent != BALANCED.edp_exponent else BALANCED
+        profiler = OnlineCapProfiler(
+            bus, backend, policy=policy, node_id="serve-0",
+            model_id=cfg.name, steps_per_probe=1, hold_steps=8)
+
     # synth request batch
     data = TokenBatches(DataConfig(seed=args.seed, vocab_size=cfg.vocab_size,
                                    seq_len=args.prompt_len,
@@ -61,13 +109,28 @@ def main():
     nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
     t_prefill = time.time() - t0
 
+    def emit_step(step_idx: int) -> None:
+        """Stream the step's telemetry: the cap currently in force shapes the
+        (simulated) accelerator's step time + energy; the wall loop provides
+        the traffic cadence."""
+        cap = backend.current_cap()          # honour latest cap command
+        meter.set_cap(cap)
+        meter.set_workload(wl, busy=True)
+        est = device.estimate(wl, cap)
+        sampler.sample_once()                # -> PowerSampled on the bus
+        bus.publish(StepDone(node_id="serve-0", step=step_idx,
+                             duration_s=est.step_time_s,
+                             samples=args.requests, energy_j=est.energy_j,
+                             model_id=cfg.name))
+
     generated = [nxt]
     t0 = time.time()
-    for _ in range(args.gen - 1):
+    for i in range(args.gen - 1):
         tok = generated[-1].reshape(args.requests, 1, -1) if cfg.n_codebooks \
             else generated[-1].reshape(args.requests, 1)
         nxt, cache = serve(params, cache, tok)
         generated.append(nxt)
+        emit_step(i)
     toks_out = np.stack([np.asarray(g) for g in generated], axis=1)
     t_decode = time.time() - t0
 
@@ -76,6 +139,22 @@ def main():
           f"{t_prefill*1e3:.0f} ms; decode {n_gen} tokens in "
           f"{t_decode*1e3:.0f} ms ({n_gen/max(t_decode,1e-9):.0f} tok/s)")
     print(f"[serve] sample continuation: {toks_out[0].ravel()[:16].tolist()}")
+
+    if profiler is not None:
+        caps = cap_log
+        probes = sum(1 for c in caps if c.reason == "probe")
+        decisions = [c for c in caps if c.reason == "decision"]
+        timeline = " -> ".join(f"{c.cap:.0%}({c.reason[0]})" for c in caps[:12])
+        print(f"[frost-ctrl] {len(caps)} cap commands mid-run "
+              f"({probes} amortised probes, {len(decisions)} decisions): "
+              f"{timeline}{' ...' if len(caps) > 12 else ''}")
+        if profiler.decision is not None:
+            d = profiler.decision
+            print(f"[frost-ctrl] serving cap {d.cap:.0%} of TDP "
+                  f"(pred. energy saving {d.predicted_energy_saving:+.1%}, "
+                  f"delay {d.predicted_delay_increase:+.1%}, "
+                  f"fit {'accepted' if d.fit_accepted else 'fallback'})")
+        profiler.close()
     return 0
 
 

@@ -4,10 +4,16 @@
         --smoke --steps 20 --frost
 
 Wires together: config registry -> data pipeline -> sharded train step ->
-FROST cap profiler (tunes the power limit before the long run) -> FT
-supervisor (heartbeats, checkpoint/restart, straggler power-shifting) ->
-telemetry ledger.  On this CPU container use --smoke (reduced configs);
-the full configs are exercised through the dry-run.
+FROST control plane (batch profile warm-starts an online profiler that
+keeps retuning the cap from streamed step telemetry) -> FT supervisor
+(heartbeats, checkpoint/restart, straggler power-shifting) -> telemetry
+ledger.  On this CPU container use --smoke (reduced configs); the full
+configs are exercised through the dry-run.
+
+Every train step publishes ``StepDone`` on the control-plane bus and reads
+the enforcement backend before the next step, so cap commands issued by the
+online profiler (or a cluster coordinator) take effect mid-run — the
+paper's Fig 1 loop, not a one-shot offline probe.
 
 Real-TPU deployments additionally want the XLA latency-hiding scheduler:
     LIBTPU_INIT_ARGS="--xla_tpu_enable_async_collective_fusion=true"
@@ -17,15 +23,16 @@ Real-TPU deployments additionally want the XLA latency-hiding scheduler:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
-from repro.core import (BALANCED, CapProfiler, EnergyLedger, FrostService,
-                        PowerCappedDevice, QoSPolicy, TPU_V5E, WorkloadProfile)
+from repro.control import CapApplied, EventBus, StepDone
+from repro.control.online import OnlineCapProfiler
+from repro.core import (CapProfiler, PowerCappedDevice, QoSPolicy, TPU_V5E,
+                        WorkloadProfile)
+from repro.core.profiler import RecordingBackend
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, TokenBatches
 from repro.launch.mesh import make_host_mesh
@@ -34,11 +41,16 @@ from repro.optim import OptimizerConfig
 from repro.runtime.fault import Supervisor, SupervisorConfig
 from repro.runtime.sharding import build_rules
 from repro.runtime.steps import StepConfig, init_train_state, make_train_step
+from repro.telemetry.meters import AnalyticDeviceMeter, CpuProcessMeter, DramMeter
+from repro.telemetry.sampler import PowerSampler
 
 
 def profile_cap_for_step(cfg: ModelConfig, flops: float, bytes_hbm: float,
-                         coll: float, policy: QoSPolicy) -> float:
-    """FROST pass: given the compiled step's roofline terms, pick the cap."""
+                         coll: float, policy: QoSPolicy, *,
+                         bus=None, backend=None):
+    """FROST batch pass: given the compiled step's roofline terms, pick the
+    cap.  Returns (decision, workload, device) so the online profiler can
+    warm-start from the same artefacts."""
     wl = WorkloadProfile(name=cfg.name, flops_per_step=flops,
                          hbm_bytes_per_step=bytes_hbm,
                          collective_bytes_per_step=coll,
@@ -49,8 +61,9 @@ def profile_cap_for_step(cfg: ModelConfig, flops: float, bytes_hbm: float,
         def probe(self, cap, duration_s):
             return dev.probe(wl, cap, duration_s)
 
-    prof = CapProfiler(_W(), policy=policy, probe_seconds=30.0)
-    return prof.run()
+    prof = CapProfiler(_W(), policy=policy, probe_seconds=30.0,
+                       bus=bus, backend=backend, node_id="node-0")
+    return prof.run(), wl, dev
 
 
 def main():
@@ -66,7 +79,8 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--frost", action="store_true",
-                    help="run the FROST cap profiler before training")
+                    help="run the FROST control plane (batch profile warm-"
+                         "starts an online retuner over the step stream)")
     ap.add_argument("--edp-exponent", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -94,7 +108,11 @@ def main():
         seed=args.seed, vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch, n_codebooks=cfg.n_codebooks))
 
-    # -- FROST pass (paper Sec III-C) ------------------------------------------
+    # -- FROST control plane (paper Sec III-C + Fig 1 loop) --------------------
+    bus = EventBus()
+    backend = RecordingBackend()
+    cap_log = bus.tap(CapApplied)        # lossless cap-command accounting
+    frost_wl = frost_dev = online = gpu_meter = None
     if args.frost:
         policy = QoSPolicy(policy_id=f"train-ed{args.edp_exponent:g}p",
                            edp_exponent=args.edp_exponent)
@@ -103,14 +121,27 @@ def main():
         lowered = train_step.lower(state, data.batch(0))
         compiled = lowered.compile()
         h = hloparse.analyze(compiled.as_text())
-        decision = profile_cap_for_step(
-            cfg, h["dot_flops"], float(compiled.cost_analysis()
-                                       .get("bytes accessed", 0.0)),
-            h["collective_bytes"], policy)
+        ca = hloparse.xla_cost(compiled)
+        decision, frost_wl, frost_dev = profile_cap_for_step(
+            cfg, h["dot_flops"], float(ca.get("bytes accessed", 0.0)),
+            h["collective_bytes"], policy, bus=bus, backend=backend)
         print(f"[frost] selected cap = {decision.cap:.0%} "
               f"(pred. energy saving {decision.predicted_energy_saving:+.1%}, "
               f"delay {decision.predicted_delay_increase:+.1%}, "
               f"fit rmse {decision.fit.rel_rmse:.3%})")
+        # warm-start the online retuner: no further dedicated probe windows —
+        # refreshes are amortised across live train steps
+        gpu_meter = AnalyticDeviceMeter(frost_dev, frost_wl, cap=decision.cap)
+        gpu_meter.set_workload(frost_wl, busy=True)
+        online = OnlineCapProfiler(bus, backend, policy=policy,
+                                   node_id="node-0", model_id=cfg.name,
+                                   steps_per_probe=2, hold_steps=16,
+                                   warm_start=decision)
+
+    meters = {"cpu": CpuProcessMeter(), "dram": DramMeter(4, 16)}
+    if gpu_meter is not None:
+        meters["gpu"] = gpu_meter
+    sampler = PowerSampler(meters, rate_hz=0.1, bus=bus, node_id="node-0")
 
     # -- supervised run ----------------------------------------------------------
     ckpt = CheckpointManager(args.ckpt_dir, keep=2, save_async=True)
@@ -121,14 +152,44 @@ def main():
         restore_fn=lambda: (ckpt.restore(state), ckpt.latest_step() or 0))
     sup.register("node-0")
 
+    step_no = {"i": 0}
+
+    def instrumented_step(state, batch):
+        """The step loop as a control-plane producer: run the jitted step,
+        honour whatever cap is currently enforced, publish StepDone."""
+        state, metrics = train_step(state, batch)
+        cap = backend.current_cap()            # cap commands land mid-run
+        if frost_dev is not None:
+            gpu_meter.set_cap(cap)
+            est = frost_dev.estimate(frost_wl, cap)
+            duration_s, energy_j = est.step_time_s, est.energy_j
+        else:
+            duration_s, energy_j = 0.0, 0.0
+        i = step_no["i"] = step_no["i"] + 1
+        if duration_s > 0:
+            # samples must match the profile workload's samples_per_step (1):
+            # the online drift check compares time/SAMPLE against the batch
+            # profile's expectation, so mixed units read as huge fake drift.
+            bus.publish(StepDone(node_id="node-0", step=i,
+                                 duration_s=duration_s,
+                                 samples=frost_wl.samples_per_step,
+                                 energy_j=energy_j, model_id=cfg.name))
+        return state, metrics
+
     batches = (data.batch(i) for i in range(args.steps))
     t0 = time.time()
-    state, report = sup.run(train_step, state, batches)
+    with sampler:
+        state, report = sup.run(instrumented_step, state, batches)
     dt = time.time() - t0
     losses = [h["loss"] for h in report["history"]]
     print(f"[train] {report['final_step']} steps in {dt:.1f}s "
           f"({dt/max(report['final_step'],1):.3f}s/step); "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    if online is not None:
+        print(f"[frost-ctrl] {len(cap_log)} cap commands over the run; "
+              f"online refits={online.n_refits} "
+              f"cap now {backend.current_cap():.0%}")
+        online.close()
     ckpt.wait()
     return 0
 

@@ -1,26 +1,39 @@
 """Background power sampler — FROST runs *in parallel to* the ML pipeline
 (paper Sec I) at 0.1 Hz default (Fig 3: lower rate ⇒ lower overhead than
 CodeCarbon/Eco2AI's 1 Hz, at equal energy-trend fidelity).
+
+When handed a control-plane bus, every sample is also published as a
+``PowerSampled`` event (from the sampler's daemon thread — the bus is
+thread-safe), feeding the online profiler and the cluster coordinator in
+addition to the private ``EnergyLedger``.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Callable
+from typing import TYPE_CHECKING, Callable
 
+from repro.control.events import PowerSampled
 from repro.core.energy import EnergyLedger, PowerSample
 from repro.telemetry.meters import Meter, StackedMeter
 
+if TYPE_CHECKING:
+    from repro.control.bus import EventBus
+
 
 class PowerSampler:
-    """Samples meters on a daemon thread into an EnergyLedger."""
+    """Samples meters on a daemon thread into an EnergyLedger (and onto the
+    control-plane bus, when attached)."""
 
     def __init__(self, meters: dict[str, Meter], *, rate_hz: float = 0.1,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 bus: "EventBus | None" = None, node_id: str = "node-0"):
         self.meters = meters
         self.period = 1.0 / rate_hz
         self.clock = clock
         self.ledger = EnergyLedger()
+        self.bus = bus
+        self.node_id = node_id
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self.n_samples = 0
@@ -34,6 +47,10 @@ class PowerSampler:
         )
         self.ledger.record(s)
         self.n_samples += 1
+        if self.bus is not None:
+            self.bus.publish(PowerSampled(node_id=self.node_id, t=s.t,
+                                          cpu_w=s.cpu_w, gpu_w=s.gpu_w,
+                                          dram_w=s.dram_w))
         return s
 
     def __enter__(self):

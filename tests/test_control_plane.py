@@ -1,0 +1,424 @@
+"""The event-driven control plane: bus semantics, online profiler, cluster
+coordinator, drift -> re-profile paths, and powershift edge cases."""
+import numpy as np
+import pytest
+
+from repro.control import (CapApplied, DriftDetected, Event, EventBus,
+                           FitUpdated, PolicyUpdated, PowerSampled, StepDone)
+from repro.control.coordinator import ClusterCoordinator
+from repro.control.online import OnlineCapProfiler
+from repro.core import (BALANCED, CapProfiler, ClusterNode, FrostService,
+                        PowerCappedDevice, QoSPolicy, RTX_3080, TPU_V5E,
+                        WorkloadProfile, allocate_power)
+from repro.core.profiler import RecordingBackend
+from repro.telemetry.meters import DramMeter
+from repro.telemetry.sampler import PowerSampler
+
+WL_COMPUTE = WorkloadProfile(name="big", flops_per_step=5e12,
+                             hbm_bytes_per_step=2e9, samples_per_step=128)
+WL_MEMORY = WorkloadProfile(name="decode", flops_per_step=5e10,
+                            hbm_bytes_per_step=1.5e10, samples_per_step=128)
+
+
+def drive(bus, backend, device, wl, n_steps, node_id="node-0", start=0):
+    """Simulated node: run n steps under whatever cap is currently enforced,
+    streaming StepDone events (the launchers' emit loop, minus the model)."""
+    for i in range(start, start + n_steps):
+        est = device.estimate(wl, backend.current_cap())
+        bus.publish(StepDone(node_id=node_id, step=i,
+                             duration_s=est.step_time_s,
+                             samples=wl.samples_per_step,
+                             energy_j=est.energy_j))
+
+
+# --------------------------------------------------------------------------
+# bus semantics
+# --------------------------------------------------------------------------
+def test_bus_publish_subscribe_unsubscribe():
+    bus = EventBus()
+    seen = []
+    unsub = bus.subscribe(StepDone, seen.append)
+    assert bus.publish(StepDone(node_id="n", step=1, duration_s=0.1)) == 1
+    assert bus.publish(PowerSampled(node_id="n", t=0.0, gpu_w=5.0)) == 0
+    unsub()
+    bus.publish(StepDone(node_id="n", step=2, duration_s=0.1))
+    assert [e.step for e in seen] == [1]
+
+
+def test_bus_isinstance_dispatch_and_history():
+    bus = EventBus(history=4)
+    everything = []
+    bus.subscribe(Event, everything.append)       # base class sees all
+    bus.publish(StepDone(node_id="n", step=1, duration_s=0.1))
+    bus.publish(PowerSampled(node_id="n", t=0.0))
+    assert len(everything) == 2
+    assert len(bus.events_of(StepDone)) == 1
+    for i in range(10):
+        bus.publish(StepDone(node_id="n", step=i, duration_s=0.1))
+    assert len(bus.history) == 4                  # ring buffer
+
+
+def test_bus_handler_errors_are_isolated():
+    bus = EventBus()
+    seen = []
+
+    def bad(_):
+        raise RuntimeError("subscriber exploded")
+
+    bus.subscribe(StepDone, bad)
+    bus.subscribe(StepDone, seen.append)
+    n = bus.publish(StepDone(node_id="n", step=1, duration_s=0.1))
+    assert n == 2 and len(seen) == 1              # pipeline survives
+    assert len(bus.drain_errors()) == 1 and not bus.errors
+
+
+def test_power_sampler_publishes_on_bus():
+    bus = EventBus()
+    sampler = PowerSampler({"dram": DramMeter(4, 16)}, rate_hz=0.1,
+                           bus=bus, node_id="host-1")
+    sampler.sample_once()
+    ev = bus.events_of(PowerSampled)
+    assert len(ev) == 1 and ev[0].node_id == "host-1"
+    assert ev[0].dram_w == pytest.approx(24.0)    # 4 x 3/8 x 16
+    assert sampler.ledger is not None and sampler.n_samples == 1
+
+
+def test_batch_profiler_publishes_cap_events():
+    bus = EventBus()
+    dev = PowerCappedDevice(RTX_3080)
+
+    class W:
+        def probe(self, cap, duration_s):
+            return dev.probe(WL_MEMORY, cap, duration_s)
+
+    decision = CapProfiler(W(), policy=BALANCED, bus=bus).run()
+    caps = bus.events_of(CapApplied)
+    assert sum(1 for c in caps if c.reason == "probe") == 8
+    assert caps[-1].reason == "decision"
+    assert caps[-1].cap == pytest.approx(decision.cap)
+
+
+# --------------------------------------------------------------------------
+# online profiler
+# --------------------------------------------------------------------------
+def test_online_profiler_converges_from_stream():
+    bus = EventBus()
+    backend = RecordingBackend()
+    dev = PowerCappedDevice(TPU_V5E)
+    prof = OnlineCapProfiler(bus, backend, policy=BALANCED,
+                             steps_per_probe=2, hold_steps=8,
+                             min_refresh_interval_s=0.0)
+    drive(bus, backend, dev, WL_MEMORY, 40)
+    assert prof.decision is not None
+    assert prof.mode == "hold"
+    # memory-bound => deep cap is near-free; must undercut the uncapped case
+    assert prof.decision.cap <= 0.7
+    assert 0.3 <= backend.current_cap() <= 1.0
+    decisions = [c for c in bus.events_of(CapApplied) if c.reason == "decision"]
+    assert decisions, "at least one decision cap command on the bus"
+    assert bus.events_of(FitUpdated)
+
+
+def test_online_profiler_amortises_probes_in_hold():
+    bus = EventBus()
+    backend = RecordingBackend()
+    dev = PowerCappedDevice(TPU_V5E)
+    prof = OnlineCapProfiler(bus, backend, policy=BALANCED,
+                             steps_per_probe=1, hold_steps=4,
+                             min_refresh_interval_s=0.0)
+    drive(bus, backend, dev, WL_COMPUTE, 60)
+    probes = [c for c in bus.events_of(CapApplied) if c.reason == "probe"]
+    # initial sweep (8) plus round-robin refreshes, never a second full sweep
+    assert len(probes) > 8
+    assert prof.n_refits >= 2                     # refreshes refit incrementally
+
+
+def test_online_profiler_detects_drift_and_resweeps():
+    bus = EventBus()
+    backend = RecordingBackend()
+    dev = PowerCappedDevice(TPU_V5E)
+    prof = OnlineCapProfiler(bus, backend, policy=BALANCED,
+                             steps_per_probe=2, hold_steps=8,
+                             min_refresh_interval_s=0.0)
+    drive(bus, backend, dev, WL_COMPUTE, 40)
+    cap_before = prof.decision.cap
+    # workload changes character under us: compute-bound -> memory-bound
+    drive(bus, backend, dev, WL_MEMORY, 60, start=40)
+    drifts = bus.events_of(DriftDetected)
+    assert drifts and drifts[0].drift > prof.drift_threshold
+    assert prof.decision is not None
+    assert prof.decision.cap < cap_before         # deeper cap fits decode
+
+
+def test_online_profiler_policy_update_retunes_without_resweep():
+    bus = EventBus()
+    backend = RecordingBackend()
+    dev = PowerCappedDevice(TPU_V5E)
+    prof = OnlineCapProfiler(bus, backend, policy=QoSPolicy(edp_exponent=1.0),
+                             steps_per_probe=2, hold_steps=8,
+                             min_refresh_interval_s=0.0)
+    drive(bus, backend, dev, WL_COMPUTE, 30)
+    cap_lean = prof.decision.cap
+    refits_before = prof.n_refits
+    bus.publish(PolicyUpdated(node_id="node-0",
+                              policy=QoSPolicy(edp_exponent=3.0)))
+    # the accumulated buckets are still valid physics: refit, don't resweep
+    assert prof.n_refits == refits_before + 1
+    assert prof.decision.cap >= cap_lean - 1e-9   # delay-lean => higher cap
+
+
+def test_online_profiler_without_energy_parks_at_max_cap():
+    """No sampler and energy_j=0: the profiler must not throttle the
+    pipeline on blind data — it parks at the highest legal cap and waits."""
+    bus = EventBus()
+    backend = RecordingBackend()
+    prof = OnlineCapProfiler(bus, backend, policy=BALANCED,
+                             steps_per_probe=1, hold_steps=4,
+                             min_refresh_interval_s=0.0)
+    for i in range(20):
+        bus.publish(StepDone(node_id="node-0", step=i, duration_s=0.01))
+    assert prof.mode == "waiting"
+    assert backend.current_cap() == pytest.approx(1.0)
+    assert prof.n_refits == 0
+    # telemetry appears (PowerSampled watts): sweep restarts and converges
+    dev = PowerCappedDevice(TPU_V5E)
+    bus.publish(PowerSampled(node_id="node-0", t=0.0, gpu_w=150.0))
+    drive(bus, backend, dev, WL_COMPUTE, 40, start=20)
+    assert prof.mode != "waiting"
+    assert prof.decision is not None
+
+
+def test_online_profiler_drift_check_uses_per_sample_units():
+    """A StepDone stream whose time/sample matches the warm-start profile
+    must NOT trip drift, whatever the absolute samples count is."""
+    dev = PowerCappedDevice(TPU_V5E)
+
+    class W:
+        def probe(self, cap, duration_s):
+            return dev.probe(WL_COMPUTE, cap, duration_s)
+
+    batch = CapProfiler(W(), policy=BALANCED).run()
+    bus = EventBus()
+    backend = RecordingBackend()
+    prof = OnlineCapProfiler(bus, backend, policy=BALANCED,
+                             warm_start=batch, hold_steps=64)
+    drive(bus, backend, dev, WL_COMPUTE, 12)
+    assert not bus.events_of(DriftDetected)
+    assert prof.decision is not None and prof.decision.cap == batch.cap
+
+
+def test_online_profiler_policy_narrowing_evicts_illegal_cap():
+    """Hysteresis must never defend a cap outside a newly-narrowed policy
+    window — the enforced cap has to move inside [min_cap, max_cap]."""
+    bus = EventBus()
+    backend = RecordingBackend()
+    dev = PowerCappedDevice(TPU_V5E)
+    prof = OnlineCapProfiler(bus, backend, policy=QoSPolicy(edp_exponent=3.0),
+                             steps_per_probe=2, hold_steps=8,
+                             min_refresh_interval_s=0.0)
+    drive(bus, backend, dev, WL_COMPUTE, 30)          # latency-lean: high cap
+    bus.publish(PolicyUpdated(node_id="node-0",
+                              policy=QoSPolicy(policy_id="narrow",
+                                               edp_exponent=3.0,
+                                               max_cap=0.80)))
+    assert backend.current_cap() <= 0.80 + 1e-9
+    drive(bus, backend, dev, WL_COMPUTE, 20, start=30)
+    assert backend.current_cap() <= 0.80 + 1e-9       # stays legal
+
+
+def test_service_reprofile_publishes_profiler_caps_once():
+    """A bus-attached service routes its CapProfiler through the bus: probe
+    and decision caps appear as CapApplied events, with no duplicates."""
+    bus = EventBus()
+    cap_log = bus.tap(CapApplied)
+    svc = FrostService("n0", probe_seconds=5.0, bus=bus)
+    svc.on_new_model("m", _Workload(WL_COMPUTE))
+    probes = [c for c in cap_log if c.reason == "probe"]
+    decisions = [c for c in cap_log if c.reason == "decision"]
+    assert len(probes) == 8
+    assert len(decisions) == 1
+
+
+def test_online_profiler_warm_start_skips_sweep():
+    dev = PowerCappedDevice(TPU_V5E)
+
+    class W:
+        def probe(self, cap, duration_s):
+            return dev.probe(WL_COMPUTE, cap, duration_s)
+
+    batch = CapProfiler(W(), policy=BALANCED).run()
+    bus = EventBus()
+    backend = RecordingBackend()
+    prof = OnlineCapProfiler(bus, backend, policy=BALANCED,
+                             warm_start=batch, hold_steps=64)
+    assert prof.mode == "hold"
+    assert backend.current_cap() == pytest.approx(batch.cap)
+    drive(bus, backend, dev, WL_COMPUTE, 10)
+    probes = [c for c in bus.events_of(CapApplied) if c.reason == "probe"]
+    assert not probes                             # no dedicated probe windows
+
+
+# --------------------------------------------------------------------------
+# FrostService: drift -> re-profile (direct call and via the bus)
+# --------------------------------------------------------------------------
+class _Workload:
+    def __init__(self, wl, dev=None):
+        self.dev = dev or PowerCappedDevice(RTX_3080)
+        self.wl = wl
+
+    def probe(self, cap, duration_s):
+        return self.dev.probe(self.wl, cap, duration_s)
+
+
+def test_service_drift_triggers_reprofile_direct_call():
+    svc = FrostService("n0", probe_seconds=5.0)
+    d0 = svc.on_new_model("m", _Workload(WL_COMPUTE))
+    # small wobble: no re-profile
+    expected = FrostService._interp_time(d0, d0.cap)
+    assert svc.on_step_report("m", expected * 1.05) is None
+    # big drift: re-profile fires WITHOUT passing the workload again (the
+    # service remembers how to probe the model it deployed)
+    d1 = svc.on_step_report("m", expected * 2.0)
+    assert d1 is not None
+    kinds = [e.kind for e in svc.events]
+    assert kinds.count("profiled") == 2 and "drift" in kinds
+
+
+def test_service_drift_reprofile_via_bus_events():
+    bus = EventBus()
+    svc = FrostService("n0", probe_seconds=5.0, bus=bus)
+    d0 = svc.on_new_model("m", _Workload(WL_COMPUTE))
+    expected = FrostService._interp_time(d0, d0.cap)
+    bus.publish(StepDone(node_id="n0", step=1, duration_s=expected * 2.0,
+                         samples=1, model_id="m"))
+    assert len(bus.events_of(DriftDetected)) == 1
+    kinds = [e.kind for e in svc.events]
+    assert kinds.count("profiled") == 2           # bus-driven re-profile
+    # other nodes' events are ignored
+    bus.publish(StepDone(node_id="other", step=2, duration_s=expected * 9,
+                         samples=1, model_id="m"))
+    assert kinds.count("profiled") == 2
+
+
+def test_service_drift_without_reprofile_publishes_only():
+    """reprofile_on_drift=False: the service flags drift on the bus but never
+    blocks the publish path with a batch re-profile (that's the online
+    profiler's job)."""
+    bus = EventBus()
+    svc = FrostService("n0", probe_seconds=5.0, bus=bus,
+                       reprofile_on_drift=False)
+    d0 = svc.on_new_model("m", _Workload(WL_COMPUTE))
+    expected = FrostService._interp_time(d0, d0.cap)
+    bus.publish(StepDone(node_id="n0", step=1, duration_s=expected * 2.0,
+                         samples=1, model_id="m"))
+    assert len(bus.events_of(DriftDetected)) == 1
+    kinds = [e.kind for e in svc.events]
+    assert kinds.count("profiled") == 1           # no blocking re-profile
+
+
+def test_service_policy_via_bus_invalidates_decisions():
+    bus = EventBus()
+    svc = FrostService("n0", probe_seconds=5.0, bus=bus)
+    svc.on_new_model("m", _Workload(WL_COMPUTE))
+    assert svc.decision_for("m") is not None
+    bus.publish(PolicyUpdated(node_id="n0",
+                              policy=QoSPolicy(policy_id="new-ed1p",
+                                               edp_exponent=1.0)))
+    assert svc.policy.policy_id == "new-ed1p"
+    assert svc.decision_for("m") is None          # cached caps invalidated
+
+
+# --------------------------------------------------------------------------
+# cluster coordinator
+# --------------------------------------------------------------------------
+def test_coordinator_infers_derate_and_shifts_power():
+    bus = EventBus()
+    budget = 0.9 * 4 * TPU_V5E.tdp_w
+    coord = ClusterCoordinator(bus, global_budget_w=budget,
+                               rebalance_every=8)
+    true_dev = {}
+    backends = {}
+    for i in range(4):
+        nid = f"n{i}"
+        derate = 0.75 if i == 2 else 1.0
+        true_dev[nid] = PowerCappedDevice(TPU_V5E, derate=derate)
+        node = ClusterNode(nid, PowerCappedDevice(TPU_V5E), WL_COMPUTE)
+        backends[nid] = coord.register_node(node)
+
+    for step in range(2):
+        for nid, dev in true_dev.items():
+            est = dev.estimate(WL_COMPUTE, backends[nid].current_cap())
+            bus.publish(PowerSampled(node_id=nid, t=float(step),
+                                     gpu_w=est.power_w))
+            bus.publish(StepDone(node_id=nid, step=step,
+                                 duration_s=est.step_time_s,
+                                 samples=WL_COMPUTE.samples_per_step,
+                                 energy_j=est.energy_j))
+
+    assert coord.plans, "rebalance fired after rebalance_every step events"
+    assert coord.derates()["n2"] < 0.9 < coord.derates()["n0"]
+    caps = coord.current_caps()
+    assert caps["n2"] > caps["n0"]                # straggler gets more watts
+    plan = coord.plans[-1]
+    assert plan.total_power_w <= budget * 1.001
+    assert bus.events_of(CapApplied)              # commands visible on the bus
+    # budget audit: measured watts (from PowerSampled EWMAs) were recorded
+    audit = coord.audit[-1]
+    assert audit["window_measured_w"] is not None
+    assert audit["window_measured_w"] > 0
+    assert audit["budget_w"] == pytest.approx(budget)
+
+
+def test_coordinator_ignores_unknown_nodes():
+    bus = EventBus()
+    coord = ClusterCoordinator(bus, global_budget_w=1000.0, rebalance_every=1)
+    coord.register_node(ClusterNode("n0", PowerCappedDevice(TPU_V5E),
+                                    WL_COMPUTE))
+    bus.publish(StepDone(node_id="ghost", step=0, duration_s=0.1))
+    assert not coord.plans                        # ghost didn't trip rebalance
+
+
+# --------------------------------------------------------------------------
+# allocate_power edge cases
+# --------------------------------------------------------------------------
+def test_allocate_power_infeasible_budget_is_best_effort():
+    nodes = [ClusterNode(f"n{i}", PowerCappedDevice(TPU_V5E), WL_COMPUTE)
+             for i in range(3)]
+    floor_w = sum(TPU_V5E.min_cap * TPU_V5E.tdp_w for _ in nodes)
+    plan = allocate_power(nodes, floor_w * 0.5)   # below the physical floor
+    assert not plan.feasible
+    for a in plan.allocations:                    # best effort: min caps
+        assert a.cap == pytest.approx(TPU_V5E.min_cap)
+
+
+def test_allocate_power_single_node_cluster():
+    node = ClusterNode("solo", PowerCappedDevice(TPU_V5E), WL_COMPUTE)
+    generous = allocate_power([node], 2 * TPU_V5E.tdp_w)
+    assert generous.feasible
+    # cheapest cap achieving the uncapped step time (clock saturates <1.0)
+    t_uncapped = node.step_time(1.0)
+    assert generous.step_time_s == pytest.approx(t_uncapped, rel=1e-3)
+    tight = allocate_power([node], 0.5 * TPU_V5E.tdp_w)
+    assert tight.allocations[0].cap <= 0.5 + 1e-6
+    assert tight.total_power_w <= 0.5 * TPU_V5E.tdp_w * 1.001
+
+
+def test_allocate_power_heterogeneous_tdps():
+    # a 215 W TPU next to a 320 W GPU: caps are fractions of DIFFERENT TDPs
+    nodes = [ClusterNode("tpu", PowerCappedDevice(TPU_V5E), WL_COMPUTE),
+             ClusterNode("gpu", PowerCappedDevice(RTX_3080), WL_COMPUTE)]
+    budget = 0.8 * (TPU_V5E.tdp_w + RTX_3080.tdp_w)
+    plan = allocate_power(nodes, budget)
+    assert plan.feasible
+    assert plan.total_power_w <= budget * 1.001
+    by_id = {a.node_id: a for a in plan.allocations}
+    assert by_id["tpu"].power_w <= TPU_V5E.tdp_w + 1e-6
+    assert by_id["gpu"].power_w <= RTX_3080.tdp_w + 1e-6
+    # the slower device is the straggler: it must not be starved below the
+    # faster one's cap fraction of its OWN tdp
+    assert by_id["gpu"].cap >= by_id["tpu"].cap - 1e-6
+
+
+def test_allocate_power_empty_cluster_raises():
+    with pytest.raises(ValueError):
+        allocate_power([], 100.0)

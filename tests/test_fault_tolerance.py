@@ -137,11 +137,12 @@ def test_compressed_psum_single_device_mesh():
     def inner(g, e):
         return compressed_psum(g, "pod", e)
 
-    out, err = jax.shard_map(
+    from repro.models.common import shard_map
+    out, err = shard_map(
         inner, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(), g),) * 2,
         out_specs=(jax.tree.map(lambda _: P(), g),) * 2,
-        check_vma=False)(g, e)
+        check=False)(g, e)
     np.testing.assert_allclose(np.asarray(out["w"]), [0.5, -1.5, 2.0],
                                atol=0.02)
     # error feedback captured the quantization residual
