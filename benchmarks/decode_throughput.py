@@ -1,0 +1,149 @@
+"""Decode fast-path throughput: per-token host loop vs fused lax.scan.
+
+The serving question behind FROST's J/token metric: decode is memory-bound,
+so its energy per token is nearly cap-invariant — but its *throughput* is
+host-limited when every token pays a Python dispatch + device sync.  This
+benchmark measures that gap on the smoke config across KV-cache lengths:
+
+  a. per-token  — jitted ``make_serve_step`` driven from a Python loop with
+                  a host sync per token (the pre-fast-path serving cadence),
+  b. fused      — ``make_decode_loop``: the same sampling + cache update
+                  inside ONE jitted ``lax.scan`` per block.
+
+J/token comes from the calibrated device model at 100% TDP and at a deep
+cap, so the artifact records how throughput gains compound with capping
+(tok/s up at constant J/token => W down, the paper's serving trade).
+
+Emits ``decode.*`` CSV lines and a JSON artifact (via benchmarks.run) so
+future PRs have a perf trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import PowerCappedDevice, TPU_V5E, WorkloadProfile
+from repro.models import transformer as tfm
+from repro.runtime.steps import (StepConfig, make_decode_loop,
+                                 make_prefill_step, make_serve_step)
+
+DEEP_CAP = 0.5                      # the near-free decode cap (paper Sec IV)
+
+
+def _j_per_token(cfg, requests: int, cap: float) -> float:
+    """Analytic J/token for the decode roofline under ``cap``."""
+    p = float(cfg.param_count())
+    wl = WorkloadProfile(name=f"{cfg.name}-decode",
+                         flops_per_step=2.0 * p * requests,
+                         hbm_bytes_per_step=2.0 * p,
+                         samples_per_step=requests)
+    est = PowerCappedDevice(TPU_V5E).estimate(wl, cap)
+    return est.energy_j / requests
+
+
+def bench_one(cfg, *, cache_len: int, requests: int, prompt_len: int,
+              gen: int, seed: int = 0) -> dict:
+    step_cfg = StepConfig(remat="none")
+    params, _ = tfm.init_lm(jax.random.PRNGKey(seed), cfg)
+    prefill = jax.jit(make_prefill_step(cfg, step_cfg, max_len=cache_len))
+    serve = jax.jit(make_serve_step(cfg, step_cfg))
+    # no cache donation here: both paths restart from the same prefill state
+    loop = jax.jit(make_decode_loop(cfg, step_cfg, n_tokens=gen))
+
+    prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                 (requests, prompt_len), 0, cfg.vocab_size)
+    if cfg.n_codebooks:
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(seed + 1),
+            (requests, prompt_len, cfg.n_codebooks), 0, cfg.vocab_size)
+    last_logits, cache = prefill(params, {"inputs": prompts})
+    first = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    tok0 = first[:, None]
+    jax.block_until_ready(cache)
+
+    # -- a. per-token host loop (sync per token: the old serving cadence) ---
+    def run_per_token():
+        tok, c = tok0, cache
+        for _ in range(gen):
+            nxt, c = serve(params, c, tok)
+            nxt = jax.block_until_ready(nxt)     # host sync per token
+            tok = nxt[:, None]
+        return tok
+
+    def best_of(fn, reps: int = 3) -> float:
+        """Min over repeats — the noise floor of a shared CI box."""
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    run_per_token()                              # warm the jit
+    t_per_token = best_of(run_per_token)
+
+    # -- b. fused lax.scan block ------------------------------------------
+    def run_fused():
+        jax.block_until_ready(loop(params, cache, tok0)[0])
+
+    run_fused()                                  # warm the jit
+    t_fused = best_of(run_fused)
+
+    n_tok = gen * requests
+    return {
+        "cache_len": cache_len,
+        "requests": requests,
+        "gen": gen,
+        "per_token_tok_per_s": n_tok / max(t_per_token, 1e-9),
+        "fused_tok_per_s": n_tok / max(t_fused, 1e-9),
+        "speedup": t_per_token / max(t_fused, 1e-9),
+        "j_per_token_cap100": _j_per_token(cfg, requests, 1.0),
+        "j_per_token_deep_cap": _j_per_token(cfg, requests, DEEP_CAP),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    spec = get_arch("smollm-135m")
+    # the benchmark isolates HOST-LOOP overhead, so the model is shrunk below
+    # even the smoke config: per-step device compute must not drown the
+    # per-token dispatch+sync cost this benchmark exists to measure
+    cfg = dataclasses.replace(spec.smoke, d_model=64, d_ff=128, head_dim=16,
+                              name=spec.smoke.name + "-bench")
+    cache_lens = [64, 128] if quick else [64, 128, 256]
+    gen = 32 if quick else 96
+    rows = [bench_one(cfg, cache_len=c, requests=2, prompt_len=16, gen=gen)
+            for c in cache_lens]
+    head = rows[-1]                  # largest cache = the honest serving point
+    return {
+        "arch": cfg.name,
+        "deep_cap": DEEP_CAP,
+        "rows": rows,
+        "tok_per_s": head["fused_tok_per_s"],
+        "per_token_tok_per_s": head["per_token_tok_per_s"],
+        "speedup": head["speedup"],
+        "j_per_token_cap100": head["j_per_token_cap100"],
+        "j_per_token_deep_cap": head["j_per_token_deep_cap"],
+    }
+
+
+def main(quick: bool = False) -> dict:
+    res = run(quick=quick)
+    for r in res["rows"]:
+        print(f"decode.tok_per_s,{r['fused_tok_per_s']:.1f},"
+              f"fused lax.scan loop (C={r['cache_len']}, B={r['requests']})")
+        print(f"decode.per_token_tok_per_s,{r['per_token_tok_per_s']:.1f},"
+              f"per-token host loop (C={r['cache_len']})")
+        print(f"decode.speedup,{r['speedup']:.2f}x,"
+              f"fused vs per-token (C={r['cache_len']})")
+    print(f"decode.j_per_token,{res['j_per_token_cap100']:.3g},"
+          f"analytic @100% TDP ({res['j_per_token_deep_cap']:.3g} "
+          f"@{DEEP_CAP:.0%} cap — near-free: decode is memory-bound)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

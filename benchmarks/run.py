@@ -23,8 +23,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (ctrl_overhead, fig2_energy, fig3_overhead,
-                            fig4_capping, fig5_edxp, fig6_tradeoff, roofline)
+    from benchmarks import (ctrl_overhead, decode_throughput, fig2_energy,
+                            fig3_overhead, fig4_capping, fig5_edxp,
+                            fig6_tradeoff, roofline)
     ART.mkdir(parents=True, exist_ok=True)
     jobs = {
         "fig2": lambda: fig2_energy.main(quick=args.quick),
@@ -33,6 +34,7 @@ def main(argv=None) -> int:
         "fig5": lambda: fig5_edxp.main(quick=args.quick),
         "fig6": lambda: fig6_tradeoff.main(quick=args.quick),
         "ctrl": lambda: ctrl_overhead.main(quick=args.quick),
+        "decode": lambda: decode_throughput.main(quick=args.quick),
         "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],
     }
     failures = 0
@@ -45,6 +47,10 @@ def main(argv=None) -> int:
             res = job()
             (ART / f"{name}.json").write_text(json.dumps(res, default=str))
             print(f"{name}.seconds,{time.time()-t0:.1f},ok")
+            if name == "decode":       # headline perf-trajectory line for CI
+                print(f"decode.tok_per_s,{res['tok_per_s']:.1f},"
+                      f"fused loop, {res['speedup']:.2f}x over per-token "
+                      f"host loop (largest cache)")
         except Exception as e:                         # keep the harness alive
             failures += 1
             print(f"{name}.seconds,{time.time()-t0:.1f},"

@@ -1,0 +1,153 @@
+"""Single-token decode attention as a split-K Pallas TPU kernel.
+
+Decode is the memory-bound end of the serving stack (PAPER.md Sec IV: the
+whole KV cache streams HBM -> VMEM once per generated token, against one
+query row of compute), so the kernel's only job is to touch each cache byte
+exactly once, in its storage dtype, and keep every reduction in on-chip
+fp32 scratch:
+
+  * grid = (batch, q_heads, k_blocks) — split-K over KV-cache blocks: for a
+    fixed (b, h) the kernel revisits the same single-row output tile while
+    streaming ``decode_k_chunk``-sized k/v blocks; the online-softmax
+    partial state (m, l, acc) lives in fp32 VMEM scratch across those
+    revolutions, exactly as in ``flash_attention.py``.
+  * GQA is folded into the k/v index_map (q head h reads kv head
+    h // (Hq // Hkv)) — no kv replication in HBM.
+  * the cache is a *ring buffer*: slot s holds absolute position
+    ``pos - ((pos - s) mod C)``.  That mapping is recomputed from a
+    block-relative iota inside the kernel, so validity (slot not yet
+    written => negative position) and the sliding window are masked without
+    materialising a position array in HBM.
+  * ``pos`` arrives via scalar prefetch (SMEM) so the masks are dynamic;
+    blocks whose slots are wholly past ``pos`` (ring not yet wrapped) are
+    predicated off with ``pl.when`` — no MXU work, and on real hardware a
+    grid prune would skip their DMA too.
+  * k/v blocks are cast to fp32 only inside VMEM (block-local); the HBM
+    cache stays in storage dtype — the whole-cache fp32 cast this kernel
+    replaces tripled decode HBM traffic.
+
+Validated in interpret mode against ``kernels/ref.decode_attention_ref``
+and ``ops.decode_attention_jnp`` (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, window: int, logit_cap: float,
+                   block_k: int, n_k: int, cache_len: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    # ring invariant: slot s holds absolute position pos - ((pos - s) mod C);
+    # slots not yet written resolve to negative positions and mask off.
+    slot = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    k_pos = pos - jnp.remainder(pos - slot, cache_len)
+    valid = k_pos >= 0
+    if window > 0:
+        valid = jnp.logical_and(valid, k_pos > pos - window)
+
+    # blocks with no valid slot (wholly past pos, or wholly outside the
+    # window) contribute nothing — skip their MXU work entirely
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, Dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if logit_cap > 0.0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_cache: jax.Array,            # (B, C, Hkv, D)   ring buffer, storage dtype
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    pos: jax.Array,                # () int32 absolute position of q
+    *,
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    block_k: int = 256, interpret: bool = False,
+) -> jax.Array:
+    """Split-K decode attention against the canonical ring-buffer cache
+    (slot = p % C).  Assumes that invariant — callers with an arbitrary
+    ``k_pos`` layout must use the jnp/ref paths."""
+    B, _, Hq, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    block_k = min(block_k, C)
+    if C % block_k:
+        # largest divisor of C that still fits the requested block: keeps the
+        # split-K streaming (and its VMEM budget) instead of degrading to one
+        # whole-cache block
+        block_k = next(b for b in range(block_k, 0, -1) if C % b == 0)
+    n_k = C // block_k
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, 1, D)
+    kt = k_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, D)
+    vt = v_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, Dv)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, logit_cap=logit_cap,
+        block_k=block_k, n_k=n_k, cache_len=C)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, ik, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, ik, pos_ref, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, ik, pos_ref, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Dv),
+                               lambda b, h, ik, pos_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),       # running max m
+            pltpu.VMEM((1,), jnp.float32),       # running denom l
+            pltpu.VMEM((1, Dv), jnp.float32),    # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, Dv), q.dtype),
+        interpret=interpret,
+    )(pos_arr, qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)             # (B, 1, Hq, Dv)

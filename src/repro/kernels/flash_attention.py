@@ -109,7 +109,13 @@ def flash_attention(
         scale = D ** -0.5
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
-    assert Sq % block_q == 0 and Sk % block_k == 0, "pad seq to block size"
+    if Sq % block_q or Sk % block_k:
+        # graceful fallback for ragged shapes, matching the chunked path's
+        # behaviour (lazy import: ops imports this module lazily too)
+        from repro.kernels.ops import flash_attention_jnp
+        return flash_attention_jnp(q, k, v, causal=causal, window=window,
+                                   logit_cap=logit_cap, scale=scale,
+                                   q_offset=q_offset)
     n_q, n_k = Sq // block_q, Sk // block_k
 
     qt = q.transpose(0, 2, 1, 3)        # (B, Hq, Sq, D)

@@ -9,7 +9,12 @@ Every op has three interchangeable implementations:
                    the same tiling the Pallas kernels use, so the roofline
                    derived from its HLO carries over.
   * ``pallas``   — the TPU kernel (kernels/flash_attention.py, ssd_scan.py,
-                   rmsnorm.py), validated in interpret mode on CPU.
+                   rmsnorm.py, decode_attention.py), validated in interpret
+                   mode on CPU.
+
+Decode attention (the serving hot path) has its own backend axis on
+``KernelPolicy`` (``decode``): ``jnp`` is the chunk-free CPU default,
+``ref`` the whole-cache fp32 oracle, ``pallas`` the split-K TPU kernel.
 
 Models call these wrappers; the backend is chosen by ``KernelPolicy``.
 """
@@ -31,9 +36,11 @@ class KernelPolicy:
     attention: str = "auto"      # auto | ref | chunked | pallas | pallas_interpret
     ssd: str = "auto"
     rmsnorm: str = "auto"
+    decode: str = "auto"         # auto | ref | jnp | pallas | pallas_interpret
     q_chunk: int = 1024
     k_chunk: int = 1024
     ssd_chunk: int = 128
+    decode_k_chunk: int = 256    # split-K block for the Pallas decode kernel
 
 
 DEFAULT_POLICY = KernelPolicy()
@@ -149,15 +156,22 @@ def decode_attention_jnp(
     pos: jax.Array,                # () current absolute position of q
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
 ) -> jax.Array:
-    """Single-token decode against a (ring-buffer) KV cache."""
+    """Single-token decode against a (ring-buffer) KV cache.
+
+    The cache stays in its storage dtype end to end; the two einsums
+    accumulate in fp32 via ``preferred_element_type`` (same rationale as
+    ``flash_attention_jnp``: decode streams the WHOLE cache per token, so a
+    whole-cache fp32 pre-cast would triple the hot path's HBM traffic).
+    """
     B, _, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
-    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32),
+    qf = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache,
                    preferred_element_type=jnp.float32) * scale
+    s = s.astype(jnp.float32)
     if logit_cap > 0.0:
         s = logit_cap * jnp.tanh(s / logit_cap)
     valid = (k_pos >= 0) & (k_pos <= pos)
@@ -165,8 +179,59 @@ def decode_attention_jnp(
         valid &= k_pos > pos - window
     s = jnp.where(valid[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache,
+                   preferred_element_type=jnp.float32)
     return o.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+def ring_positions(pos: jax.Array, cache_len: int) -> jax.Array:
+    """Absolute position held by each ring-buffer slot under the canonical
+    layout (slot = p % C): ``pos - ((pos - s) mod C)``.  Slots not yet
+    written resolve to negative positions (masked as invalid everywhere)."""
+    s = jnp.arange(cache_len)
+    return pos - jnp.mod(pos - s, cache_len)
+
+
+def decode_attention(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_cache: jax.Array,            # (B, C, Hkv, D)   ring buffer
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    pos: jax.Array,                # () current absolute position of q
+    *,
+    k_pos: jax.Array | None = None,   # (C,) slot positions; None -> canonical ring
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    policy: KernelPolicy = DEFAULT_POLICY,
+) -> jax.Array:
+    """Backend-dispatching decode-attention entry point (serving hot path).
+
+    ``auto`` resolves to the split-K Pallas kernel on TPU and the chunk-free
+    jnp path elsewhere (CPU stand-ins cannot lower Pallas TPU kernels).  The
+    Pallas path derives slot positions from ``pos`` inside the kernel and
+    therefore requires the canonical ring layout — callers passing a custom
+    ``k_pos`` are routed to the jnp path instead.
+    """
+    backend = policy.decode
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend in ("pallas", "pallas_interpret") and k_pos is not None:
+        backend = "jnp"            # custom slot layout: ring derivation invalid
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import decode_attention as da
+        return da.decode_attention_pallas(
+            q, k_cache, v_cache, pos, window=window, logit_cap=logit_cap,
+            scale=scale, block_k=policy.decode_k_chunk,
+            interpret=backend == "pallas_interpret")
+    if k_pos is None:
+        k_pos = ring_positions(pos, k_cache.shape[1])
+    if backend == "ref":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, k_pos, pos,
+                                         window=window, logit_cap=logit_cap,
+                                         scale=scale)
+    if backend == "jnp":
+        return decode_attention_jnp(q, k_cache, v_cache, k_pos, pos,
+                                    window=window, logit_cap=logit_cap,
+                                    scale=scale)
+    raise ValueError(f"unknown decode backend {backend!r}")
 
 
 def attention(q, k, v, *, causal=True, window=0, logit_cap=0.0, scale=None,

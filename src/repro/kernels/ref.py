@@ -61,6 +61,37 @@ def attention_ref(
 
 
 # --------------------------------------------------------------------------
+# decode-attention oracle — single token vs a ring-buffer KV cache
+# --------------------------------------------------------------------------
+def decode_attention_ref(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_cache: jax.Array,            # (B, C, Hkv, D)
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    k_pos: jax.Array,              # (C,) absolute position per slot (<0 invalid)
+    pos: jax.Array,                # () absolute position of q
+    *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+) -> jax.Array:
+    """Naive decode oracle: whole-cache fp32 math, explicit slot positions.
+    Ground truth for the chunked-jnp path and the split-K Pallas kernel."""
+    B, _, Hq, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if window > 0:
+        valid &= k_pos > pos - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
 # Mamba2 SSD oracle — sequential recurrence over time
 # --------------------------------------------------------------------------
 def ssd_ref(

@@ -130,7 +130,7 @@ def gqa_prefill(params, x, positions, cfg: ModelConfig, *, window: int = 0,
 
 
 def gqa_decode(params, x, pos, cache_kv, cfg: ModelConfig, *, window: int = 0,
-               constrain=None):
+               policy: ops.KernelPolicy = ops.DEFAULT_POLICY, constrain=None):
     """One-token decode. x: (B, 1, d); cache_kv = (k, v) ring buffers of
     capacity C; pos: () int32 absolute position of the new token."""
     adt = x.dtype
@@ -147,13 +147,10 @@ def gqa_decode(params, x, pos, cache_kv, cfg: ModelConfig, *, window: int = 0,
                                            (0, slot, 0, 0))
     v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
                                            (0, slot, 0, 0))
-    # absolute position held by each ring slot
-    s = jnp.arange(C)
-    k_pos = pos - jnp.mod(pos - s, C)
     scale = cfg.query_scale or cfg.resolved_head_dim ** -0.5
-    o = ops.decode_attention_jnp(q, k_cache, v_cache, k_pos, pos,
-                                 window=window,
-                                 logit_cap=cfg.attn_logit_softcap, scale=scale)
+    o = ops.decode_attention(q, k_cache, v_cache, pos, window=window,
+                             logit_cap=cfg.attn_logit_softcap, scale=scale,
+                             policy=policy)
     o = _mask_padded_heads(o, cfg)
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
     return out, (k_cache, v_cache)

@@ -499,7 +499,9 @@ def _block_decode(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *, window: int)
         c = {"lat": lat}
     else:
         a, (k, v) = attn.gqa_decode(blk["attn"], h, pos, (c["k"], c["v"]),
-                                    cfg, window=window, constrain=ctx.constrain)
+                                    cfg, window=window,
+                                    policy=ctx.kernel_policy,
+                                    constrain=ctx.constrain)
         c = {"k": k, "v": v}
     if cfg.post_norms:
         a = _norm(a, blk["post_attn_norm"], cfg)

@@ -3,9 +3,9 @@ gradient compression."""
 from repro.runtime.sharding import (ShardingRules, batch_sharding,
                                     build_rules, cache_sharding)
 from repro.runtime.steps import (StepConfig, init_train_state,
-                                 make_prefill_step, make_serve_step,
-                                 make_train_step)
+                                 make_decode_loop, make_prefill_step,
+                                 make_serve_step, make_train_step)
 
 __all__ = ["ShardingRules", "build_rules", "batch_sharding", "cache_sharding",
            "StepConfig", "init_train_state", "make_train_step",
-           "make_prefill_step", "make_serve_step"]
+           "make_prefill_step", "make_serve_step", "make_decode_loop"]

@@ -1,6 +1,7 @@
 """Step builders: train_step (grad-accum microbatching + AdamW), prefill_step,
-serve_step (one decode token).  These are the functions the launcher jits
-with in/out shardings and the dry-run lowers.
+serve_step (one decode token), decode_loop (a whole multi-token block in one
+lax.scan).  These are the functions the launcher jits with in/out shardings
+and the dry-run lowers.
 
 Overlap strategy: gradients are accumulated over ``n_micro`` microbatches
 inside a lax.scan; the cross-replica psum XLA inserts for the DP axes then
@@ -149,3 +150,46 @@ def make_serve_step(cfg: ModelConfig, step_cfg: StepConfig,
         return logits, cache
 
     return serve_step
+
+
+def make_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
+                     rules: ShardingRules | None = None,
+                     n_tokens: int = 16, *, greedy: bool = True,
+                     temperature: float = 1.0) -> Callable:
+    """decode_loop(params, cache, tokens, key=None) -> (token_block, cache).
+
+    Runs ``n_tokens`` decode steps (sampling + cache update) inside ONE
+    jitted ``lax.scan`` — no host round-trip per token, which is what makes
+    the serving loop dispatch-free (benchmarks/decode_throughput.py measures
+    the gap vs the per-token ``make_serve_step`` host loop).  ``tokens`` is
+    the (B, 1) [or (B, 1, n_cb)] token that *enters* the model first; the
+    returned block (B, n_tokens[, n_cb]) holds the tokens sampled after it.
+    Jit with ``donate_argnums`` on the cache so the ring buffers update in
+    place across chunks.
+    """
+    ctx = make_run_ctx(cfg, rules, step_cfg)
+
+    def decode_loop(params, cache, tokens, key=None):
+        if greedy:
+            keys = None                        # no PRNG work on the hot path
+        else:
+            if key is None:
+                key = jax.random.PRNGKey(0)
+            keys = jax.random.split(key, n_tokens)
+
+        def body(carry, key_t):
+            cache, tok = carry
+            logits, cache = tfm.decode_step(params, cache, tok, cfg, ctx)
+            last = logits[:, -1]               # (B, V) or (B, n_cb, V)
+            if greedy:
+                nxt = jnp.argmax(last, axis=-1)
+            else:
+                nxt = jax.random.categorical(key_t, last / temperature, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            return (cache, nxt[:, None]), nxt
+
+        (cache, _), toks = jax.lax.scan(body, (cache, tokens), keys,
+                                        length=n_tokens)
+        return jnp.moveaxis(toks, 0, 1), cache   # (B, n_tokens[, n_cb])
+
+    return decode_loop

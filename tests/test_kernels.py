@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_pallas
@@ -72,7 +73,8 @@ def test_flash_q_offset_decode_chunk():
 
 
 def test_decode_attention_ring_cache():
-    """Ring-buffer decode == full attention at the same absolute position."""
+    """Ring-buffer decode == full attention at the same absolute position —
+    for every backend behind ops.decode_attention."""
     B, S, Hq, Hkv, D = 2, 64, 4, 2, 32
     q, k, v = _qkv(jax.random.PRNGKey(4), B, S, S, Hq, Hkv, D, D, jnp.float32)
     # cache smaller than history with window: slot p % C
@@ -83,13 +85,150 @@ def test_decode_attention_ring_cache():
     for p in range(S):
         k_cache = k_cache.at[:, p % C].set(k[:, p])
         v_cache = v_cache.at[:, p % C].set(v[:, p])
-    s = jnp.arange(C)
-    k_pos = pos - jnp.mod(pos - s, C)
-    o = ops.decode_attention_jnp(q[:, -1:], k_cache, v_cache, k_pos,
-                                 jnp.asarray(pos), window=window)
+    k_pos = ops.ring_positions(jnp.asarray(pos), C)
     o_ref = ref.attention_ref(q[:, -1:], k, v, causal=True, window=window,
                               q_offset=pos)
+    o = ops.decode_attention_jnp(q[:, -1:], k_cache, v_cache, k_pos,
+                                 jnp.asarray(pos), window=window)
     np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+    for backend in ("ref", "jnp", "pallas_interpret"):
+        pol = ops.KernelPolicy(decode=backend, decode_k_chunk=16)
+        o_b = ops.decode_attention(q[:, -1:], k_cache, v_cache,
+                                   jnp.asarray(pos), window=window, policy=pol)
+        np.testing.assert_allclose(o_b, o_ref, atol=2e-5, rtol=2e-5,
+                                   err_msg=backend)
+
+
+def _ring_cache(key, B, C, Hkv, D, Dv, pos, dtype):
+    """Full history of length pos+1 folded into a slot = p % C ring."""
+    S = pos + 1
+    ks = jax.random.split(key, 2)
+    k = jax.random.normal(ks[0], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[1], (B, S, Hkv, Dv), dtype)
+    k_cache = jnp.zeros((B, C, Hkv, D), dtype)
+    v_cache = jnp.zeros((B, C, Hkv, Dv), dtype)
+    for p in range(S):
+        k_cache = k_cache.at[:, p % C].set(k[:, p])
+        v_cache = v_cache.at[:, p % C].set(v[:, p])
+    return k_cache, v_cache
+
+
+DECODE_SHAPES = [
+    # B, C, Hq, Hkv, D, Dv
+    (1, 64, 4, 4, 32, 32),      # MHA
+    (2, 64, 8, 2, 32, 32),      # GQA 4:1
+    (1, 96, 9, 3, 64, 64),      # smollm's awkward 9/3 heads
+    (2, 64, 4, 1, 32, 16),      # MQA, Dv != D (MLA-shaped)
+]
+
+DECODE_CASES = [
+    # pos, window, logit_cap — pos < C-1 leaves unwritten (invalid) slots;
+    # pos >= C exercises ring wrap-around
+    dict(pos=30, window=0, logit_cap=0.0),      # partial fill, invalid slots
+    dict(pos=63, window=0, logit_cap=0.0),      # exactly full
+    dict(pos=150, window=48, logit_cap=0.0),    # wrapped + sliding window
+    dict(pos=100, window=0, logit_cap=30.0),    # wrapped + tanh softcap
+]
+
+
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_decode_pallas_vs_ref(shape, dtype):
+    """Split-K Pallas decode kernel (interpret) and the chunk-free jnp path
+    vs the whole-cache fp32 oracle, across GQA group sizes, ring wrap,
+    sliding window, logit cap, and bf16 storage."""
+    B, C, Hq, Hkv, D, Dv = shape
+    dt = jnp.dtype(dtype)
+    tol = 2e-5 if dtype == "float32" else 2e-2
+    for case in DECODE_CASES:
+        pos, window, logit_cap = case["pos"], case["window"], case["logit_cap"]
+        q = jax.random.normal(jax.random.PRNGKey(pos), (B, 1, Hq, D), dt)
+        k_cache, v_cache = _ring_cache(jax.random.PRNGKey(pos + 1),
+                                       B, C, Hkv, D, Dv, pos, dt)
+        k_pos = ops.ring_positions(jnp.asarray(pos), C)
+        o_ref = ref.decode_attention_ref(q, k_cache, v_cache, k_pos,
+                                         jnp.asarray(pos), window=window,
+                                         logit_cap=logit_cap)
+        o_jnp = ops.decode_attention_jnp(q, k_cache, v_cache, k_pos,
+                                         jnp.asarray(pos), window=window,
+                                         logit_cap=logit_cap)
+        # block_k=16 forces a multi-block split-K grid for every C here
+        o_pl = decode_attention_pallas(q, k_cache, v_cache, jnp.asarray(pos),
+                                       window=window, logit_cap=logit_cap,
+                                       block_k=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_jnp, np.float32),
+                                   np.asarray(o_ref, np.float32),
+                                   atol=tol, rtol=tol, err_msg=str(case))
+        np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                                   np.asarray(o_ref, np.float32),
+                                   atol=tol, rtol=tol, err_msg=str(case))
+
+
+def test_decode_invalid_slots_masked():
+    """Slots marked invalid (k_pos = -1, e.g. never written) carry no
+    weight, whatever garbage their k/v rows hold."""
+    B, C, Hkv, D = 1, 16, 2, 32
+    pos = 40
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, 4, D))
+    k_cache, v_cache = _ring_cache(jax.random.PRNGKey(1), B, C, Hkv, D, D, pos,
+                                   jnp.float32)
+    k_pos = ops.ring_positions(jnp.asarray(pos), C)
+    # poison three slots: mark them invalid and fill with huge values
+    bad = jnp.asarray([1, 5, 11])
+    k_pos_bad = k_pos.at[bad].set(-1)
+    k_poison = k_cache.at[:, bad].set(1e4)
+    v_poison = v_cache.at[:, bad].set(1e4)
+    o_clean = ops.decode_attention_jnp(
+        q, k_cache, v_cache,
+        k_pos.at[bad].set(-1), jnp.asarray(pos))
+    o_poison = ops.decode_attention_jnp(q, k_poison, v_poison, k_pos_bad,
+                                        jnp.asarray(pos))
+    np.testing.assert_allclose(o_poison, o_clean, atol=2e-5, rtol=2e-5)
+    o_ref = ref.decode_attention_ref(q, k_poison, v_poison, k_pos_bad,
+                                     jnp.asarray(pos))
+    np.testing.assert_allclose(o_poison, o_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_pallas_ragged_fallback():
+    """Ragged Sq/Sk no longer assert: the Pallas wrapper falls back to the
+    chunked jnp path, matching its behaviour."""
+    q, k, v = _qkv(jax.random.PRNGKey(11), 1, 100, 100, 4, 2, 32, 32,
+                   jnp.float32)
+    o_ref = ref.attention_ref(q, k, v, causal=True)
+    o = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_loop_matches_serve_step():
+    """The fused lax.scan decode loop produces the exact token stream of the
+    per-token host loop from the same prefill state."""
+    from repro.configs import get_arch
+    from repro.models import transformer as tfm
+    from repro.runtime.steps import (StepConfig, make_decode_loop,
+                                     make_prefill_step, make_serve_step)
+    cfg = get_arch("smollm-135m").smoke
+    step_cfg = StepConfig(remat="none")
+    n_tokens = 6
+    params, _ = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    prefill = jax.jit(make_prefill_step(cfg, step_cfg, max_len=32))
+    serve = jax.jit(make_serve_step(cfg, step_cfg))
+    loop = jax.jit(make_decode_loop(cfg, step_cfg, n_tokens=n_tokens))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    last_logits, cache = prefill(params, {"inputs": prompts})
+    tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
+
+    tok, c = tok0, cache
+    stream = []
+    for _ in range(n_tokens):
+        nxt, c = serve(params, c, tok)
+        stream.append(np.asarray(nxt))
+        tok = nxt[:, None]
+    per_token = np.stack(stream, axis=1)            # (B, n_tokens)
+
+    fused, c2 = loop(params, cache, tok0)
+    np.testing.assert_array_equal(np.asarray(fused), per_token)
+    np.testing.assert_allclose(np.asarray(c2["pos"]), np.asarray(c["pos"]))
 
 
 SSD_SHAPES = [
