@@ -25,7 +25,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (ctrl_overhead, decode_throughput, fig2_energy,
                             fig3_overhead, fig4_capping, fig5_edxp,
-                            fig6_tradeoff, roofline)
+                            fig6_tradeoff, roofline, serve_engine)
     ART.mkdir(parents=True, exist_ok=True)
     jobs = {
         "fig2": lambda: fig2_energy.main(quick=args.quick),
@@ -35,6 +35,7 @@ def main(argv=None) -> int:
         "fig6": lambda: fig6_tradeoff.main(quick=args.quick),
         "ctrl": lambda: ctrl_overhead.main(quick=args.quick),
         "decode": lambda: decode_throughput.main(quick=args.quick),
+        "serve": lambda: serve_engine.main(quick=args.quick),
         "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],
     }
     failures = 0
@@ -51,6 +52,10 @@ def main(argv=None) -> int:
                 print(f"decode.tok_per_s,{res['tok_per_s']:.1f},"
                       f"fused loop, {res['speedup']:.2f}x over per-token "
                       f"host loop (largest cache)")
+            if name == "serve":        # continuous-batching trajectory
+                print(f"serve.tok_per_s,{res['tok_per_s']:.1f},"
+                      f"engine vs static: {res['j_per_token_ratio']:.2f}x "
+                      f"J/token, {res['p50_latency_ratio']:.2f}x p50 latency")
         except Exception as e:                         # keep the harness alive
             failures += 1
             print(f"{name}.seconds,{time.time()-t0:.1f},"

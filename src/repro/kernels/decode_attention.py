@@ -1,4 +1,5 @@
-"""Single-token decode attention as a split-K Pallas TPU kernel.
+"""Single-token decode attention as split-K Pallas TPU kernels — one for the
+canonical ring-buffer cache, one for a paged (block-table) cache.
 
 Decode is the memory-bound end of the serving stack (PAPER.md Sec IV: the
 whole KV cache streams HBM -> VMEM once per generated token, against one
@@ -150,4 +151,121 @@ def decode_attention_pallas(
         out_shape=jax.ShapeDtypeStruct((B, Hq, 1, Dv), q.dtype),
         interpret=interpret,
     )(pos_arr, qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)             # (B, 1, Hq, Dv)
+
+
+def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                         logit_cap: float, page_size: int, n_blocks: int):
+    ib, ij = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # paged layout is *linear*: logical block j of request b holds absolute
+    # positions [j*ps, (j+1)*ps) — no ring arithmetic, the block table alone
+    # says where those positions live in the pool
+    pos = pos_ref[ib]
+    k_pos = ij * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = k_pos <= pos
+    if window > 0:
+        valid = jnp.logical_and(valid, k_pos > pos - window)
+
+    # blocks wholly beyond the request's length (or outside the window) are
+    # predicated off — under partial occupancy most of the grid is this case
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (ps, D)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (ps, Dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if logit_cap > 0.0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ij == n_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *,
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Split-K decode attention over a paged KV cache.
+
+    Same online-softmax accumulator discipline as the ring kernel, but the
+    k/v ``index_map`` gathers through the scalar-prefetched block table:
+    grid step ``(b, h, j)`` DMAs physical page ``block_tables[b, j]`` for kv
+    head ``h // G``.  The pool is shared across requests — a request's pages
+    need not be contiguous, only its table row must list them in logical
+    order.  ``pos`` is per-request (ragged batch), so validity masks are
+    per-row, unlike the ring kernel's single scalar."""
+    B, _, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    nb = block_tables.shape[1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, 1, D)
+    kt = k_pages.transpose(0, 2, 1, 3)           # (P, Hkv, ps, D)
+    vt = v_pages.transpose(0, 2, 1, 3)           # (P, Hkv, ps, Dv)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, window=window, logit_cap=logit_cap,
+        page_size=ps, n_blocks=nb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block table + positions
+        grid=(B, Hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, j, bt_ref, pos_ref, G=G:
+                         (bt_ref[b, j], h // G, 0, 0)),
+            pl.BlockSpec((1, 1, ps, Dv),
+                         lambda b, h, j, bt_ref, pos_ref, G=G:
+                         (bt_ref[b, j], h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Dv),
+                               lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),       # running max m
+            pltpu.VMEM((1,), jnp.float32),       # running denom l
+            pltpu.VMEM((1, Dv), jnp.float32),    # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, Dv), q.dtype),
+        interpret=interpret,
+    )(bt, pos_arr, qt, kt, vt)
     return out.transpose(0, 2, 1, 3)             # (B, 1, Hq, Dv)

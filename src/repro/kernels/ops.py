@@ -15,6 +15,9 @@ Every op has three interchangeable implementations:
 Decode attention (the serving hot path) has its own backend axis on
 ``KernelPolicy`` (``decode``): ``jnp`` is the chunk-free CPU default,
 ``ref`` the whole-cache fp32 oracle, ``pallas`` the split-K TPU kernel.
+The same axis drives both cache layouts — ``decode_attention`` (ring
+buffer) and ``paged_decode_attention`` (block-table page pool, the
+continuous-batching serving engine's layout).
 
 Models call these wrappers; the backend is chosen by ``KernelPolicy``.
 """
@@ -182,6 +185,83 @@ def decode_attention_jnp(
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache,
                    preferred_element_type=jnp.float32)
     return o.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+def paged_decode_attention_jnp(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+) -> jax.Array:
+    """Single-token decode against a paged KV cache, pure jnp.
+
+    Gathers each request's pages into logical order (block j holds positions
+    [j*ps, (j+1)*ps)) and keeps the pool in its storage dtype — the einsums
+    accumulate in fp32 via ``preferred_element_type``, same discipline as
+    ``decode_attention_jnp``.  ``pos`` is per-request: the batch is ragged,
+    so validity is a (B, K) mask rather than the ring path's shared (C,)."""
+    B, _, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    Dv = v_pages.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
+    vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, Dv)
+    qf = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kg,
+                   preferred_element_type=jnp.float32) * scale
+    s = s.astype(jnp.float32)
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    k_pos = jnp.arange(nb * ps)[None, :]
+    posb = jnp.asarray(pos).reshape(B, 1)
+    valid = k_pos <= posb
+    if window > 0:
+        valid &= k_pos > posb - window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, vg,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, Dv).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *,
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    policy: KernelPolicy = DEFAULT_POLICY,
+) -> jax.Array:
+    """Backend-dispatching paged decode attention (continuous-batching hot
+    path).  Shares the ``decode`` backend axis with the ring entry point:
+    ``auto`` resolves to the block-table-gather Pallas kernel on TPU and the
+    gather-then-attend jnp path elsewhere.  The split-K block is the page
+    size — pages are the DMA unit, so ``decode_k_chunk`` does not apply."""
+    backend = policy.decode
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import decode_attention as da
+        return da.paged_decode_attention_pallas(
+            q, k_pages, v_pages, block_tables, pos, window=window,
+            logit_cap=logit_cap, scale=scale,
+            interpret=backend == "pallas_interpret")
+    if backend == "ref":
+        return _ref.paged_decode_attention_ref(
+            q, k_pages, v_pages, block_tables, pos, window=window,
+            logit_cap=logit_cap, scale=scale)
+    if backend == "jnp":
+        return paged_decode_attention_jnp(
+            q, k_pages, v_pages, block_tables, pos, window=window,
+            logit_cap=logit_cap, scale=scale)
+    raise ValueError(f"unknown decode backend {backend!r}")
 
 
 def ring_positions(pos: jax.Array, cache_len: int) -> jax.Array:

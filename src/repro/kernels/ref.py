@@ -92,6 +92,45 @@ def decode_attention_ref(
 
 
 # --------------------------------------------------------------------------
+# paged decode-attention oracle — single token vs a block-table KV cache
+# --------------------------------------------------------------------------
+def paged_decode_attention_ref(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32 page index per logical block
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+) -> jax.Array:
+    """Naive paged decode oracle: gather every request's pages into a
+    contiguous (B, nb*ps, Hkv, *) view, then whole-cache fp32 math.  Pages
+    are laid out linearly (logical block j holds positions [j*ps, (j+1)*ps)),
+    so validity is simply k_pos <= pos[b] (+ sliding window).  Ground truth
+    for the chunked-jnp path and the block-table-gather Pallas kernel."""
+    B, _, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
+    vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, v_pages.shape[-1])
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kg.astype(jnp.float32)) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    k_pos = jnp.arange(nb * ps)[None, :]                     # (1, K)
+    posb = jnp.asarray(pos).reshape(B, 1)
+    valid = k_pos <= posb
+    if window > 0:
+        valid &= k_pos > posb - window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, vg.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, v_pages.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
 # Mamba2 SSD oracle — sequential recurrence over time
 # --------------------------------------------------------------------------
 def ssd_ref(

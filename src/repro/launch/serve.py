@@ -1,22 +1,31 @@
-"""Serving launcher: batched prefill + host-free multi-token decode.
+"""Serving launcher — thin CLI over the continuous-batching engine.
 
+    # continuous batching under a Poisson arrival trace (the O-RAN xAPP
+    # serving path: ragged requests joining and finishing mid-decode)
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
-        --requests 8 --prompt-len 32 --gen 16 --decode-chunk 8
+        --traffic poisson --requests 8 --gen 16
 
-Implements the O-RAN inference-host path (models deployed as xAPPs):
-requests arrive with ragged prompts, are right-aligned into a fixed prefill
-batch, decoded with the ring-buffer cache, and FROST caps the device using
-the *decode* roofline (decode is memory-bound, so deep caps are near-free —
-the paper's central trade, measured rather than assumed).
+    # static-batch baseline (everything arrives at once, one fused run)
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
+        --traffic batch --requests 8 --prompt-len 32 --gen 16
 
-Decode runs in fused chunks of ``--decode-chunk`` tokens: sampling + cache
-update happen inside one jitted ``lax.scan`` with a donated cache
-(runtime.steps.make_decode_loop), so there is no host round-trip per token.
-Every chunk publishes ONE ``StepDone`` + ``PowerSampled`` onto the bus with
-the *measured* wall time (the analytic device estimate remains the energy
-stand-in where no meter exists); the ``OnlineCapProfiler`` amortises its
-probes across the live token stream and cap commands are honoured between
-chunks through the enforcement backend.
+Two serving modes share the decode fast path (fused ``lax.scan`` chunks,
+split-K decode-attention kernels, AOT-compiled executables):
+
+  * ``batch``   — the fixed-batch run-to-completion baseline: one prefill,
+    then fused ring-buffer decode chunks.  The final ragged chunk is padded
+    to ``--decode-chunk`` and the overrun discarded, so the whole run uses
+    ONE decode executable.
+  * ``poisson`` — ``repro.serving.ServeEngine``: requests join fixed decode
+    slots mid-stream (prefill-on-join into the paged KV cache) and free on
+    EOS / token budget.  J/token charges only occupied slots.
+
+FROST (unless ``--no-frost``, which skips building the sampler/meters and
+publishes nothing): every chunk emits one ``StepDone`` + ``PowerSampled``
+with the *measured* wall time and the useful token count; the
+``OnlineCapProfiler`` amortises probes over the live stream and cap
+commands are honoured between chunks.  ``--power-budget`` additionally
+gates admission on the predicted board draw under the cap in force.
 """
 from __future__ import annotations
 
@@ -39,6 +48,8 @@ from repro.runtime.sharding import build_rules
 from repro.runtime.steps import (StepConfig, make_decode_loop,
                                  make_prefill_step)
 from repro.models import transformer as tfm
+from repro.serving import (EnergyAwareAdmission, EngineConfig, ServeEngine,
+                           poisson_trace)
 from repro.telemetry.meters import AnalyticDeviceMeter, CpuProcessMeter, DramMeter
 from repro.telemetry.sampler import PowerSampler
 
@@ -47,14 +58,209 @@ def decode_workload(cfg, requests: int) -> WorkloadProfile:
     """Decode-step roofline from first principles: every generated token
     streams the full parameter set from HBM once (memory-bound — the reason
     deep caps are near-free while serving), with 2 FLOPs per param per
-    sequence of compute on top."""
+    *live* sequence of compute on top.  Under partial occupancy the HBM
+    term is unchanged (weights stream regardless) while compute scales with
+    the requests actually served — utilisation-honest."""
     p = float(cfg.param_count())
     return WorkloadProfile(
         name=f"{cfg.name}-decode",
-        flops_per_step=2.0 * p * requests,
+        flops_per_step=2.0 * p * max(requests, 1),
         hbm_bytes_per_step=2.0 * p,          # bf16 weights once per token
-        samples_per_step=requests,
+        samples_per_step=max(requests, 1),
     )
+
+
+class FrostPlane:
+    """The control-plane wiring for a serving run: bus, simulated capped
+    device, analytic meter + sampler, online profiler, cap ledger.  Built
+    ONLY when FROST is enabled — ``--no-frost`` runs meter-free."""
+
+    def __init__(self, cfg, n_slots: int, edp_exponent: float):
+        self.bus = EventBus()
+        self.backend = RecordingBackend()
+        self.device = PowerCappedDevice(TPU_V5E)
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.meter = AnalyticDeviceMeter(self.device,
+                                         decode_workload(cfg, n_slots))
+        self.sampler = PowerSampler(
+            {"gpu": self.meter, "cpu": CpuProcessMeter(),
+             "dram": DramMeter(4, 16)},
+            rate_hz=0.1, bus=self.bus, node_id="serve-0")
+        self.cap_log = self.bus.tap(CapApplied)
+        policy = QoSPolicy(policy_id=f"serve-ed{edp_exponent:g}p",
+                           edp_exponent=edp_exponent) \
+            if edp_exponent != BALANCED.edp_exponent else BALANCED
+        self.profiler = OnlineCapProfiler(
+            self.bus, self.backend, policy=policy, node_id="serve-0",
+            model_id=cfg.name, steps_per_probe=1, hold_steps=8)
+        self._step = 0
+
+    def emit_chunk(self, n_useful: int, n_active: int, n_steps: int,
+                   wall_s: float) -> float:
+        """One fused chunk's telemetry: measured wall time + useful token
+        count feed the profiler; the cap in force shapes the (simulated)
+        accelerator's energy.  The workload is rebuilt at the chunk's live
+        occupancy (``n_active`` slots) and charged for every step the
+        device ran (incl. overrun/parked work) — the caller divides by the
+        tokens it actually *served*.  Returns the chunk's J."""
+        cap = self.backend.current_cap()     # honour latest cap command
+        wl = decode_workload(self.cfg, n_active)
+        self.meter.set_cap(cap)
+        self.meter.set_workload(wl, busy=True)
+        est = self.device.estimate(wl, cap)
+        energy_j = est.energy_j * max(n_steps, 1)
+        self.sampler.sample_once()           # -> PowerSampled on the bus
+        self.bus.publish(StepDone(node_id="serve-0", step=self._step,
+                                  duration_s=wall_s, samples=n_useful,
+                                  energy_j=energy_j, model_id=self.cfg.name))
+        self._step += 1
+        return energy_j
+
+    def summary(self):
+        caps = self.cap_log
+        probes = sum(1 for c in caps if c.reason == "probe")
+        decisions = [c for c in caps if c.reason == "decision"]
+        timeline = " -> ".join(f"{c.cap:.0%}({c.reason[0]})" for c in caps[:12])
+        print(f"[frost-ctrl] {len(caps)} cap commands mid-run "
+              f"({probes} amortised probes, {len(decisions)} decisions): "
+              f"{timeline}{' ...' if len(caps) > 12 else ''}")
+        if self.profiler.decision is not None:
+            d = self.profiler.decision
+            print(f"[frost-ctrl] serving cap {d.cap:.0%} of TDP "
+                  f"(pred. energy saving {d.predicted_energy_saving:+.1%}, "
+                  f"delay {d.predicted_delay_increase:+.1%}, "
+                  f"fit {'accepted' if d.fit_accepted else 'fallback'})")
+        self.profiler.close()
+
+
+def run_batch(args, cfg, step_cfg, rules, params, frost: FrostPlane | None) -> int:
+    """Static-batch baseline: batched prefill + fused ring decode chunks."""
+    greedy = args.temperature <= 0.0
+    max_len = args.prompt_len + args.gen
+    prefill = jax.jit(make_prefill_step(cfg, step_cfg, rules, max_len=max_len))
+    chunk = max(1, args.decode_chunk)
+    # ONE decode executable per run: the final ragged chunk is padded to
+    # ``chunk`` and its overrun tokens discarded (the old path compiled a
+    # second executable for the tail).  AOT-compiled so compile time never
+    # lands in a chunk's measured duration.
+    loop_fn = jax.jit(
+        make_decode_loop(cfg, step_cfg, rules, chunk, greedy=greedy,
+                         temperature=max(args.temperature, 1e-6)),
+        donate_argnums=(1,))
+    loop = None
+
+    data = TokenBatches(DataConfig(seed=args.seed, vocab_size=cfg.vocab_size,
+                                   seq_len=args.prompt_len,
+                                   global_batch=args.requests,
+                                   n_codebooks=cfg.n_codebooks))
+    prompts = data.batch(0)["inputs"]
+
+    t0 = time.time()
+    last_logits, cache = prefill(params, {"inputs": jnp.asarray(prompts)})
+    if greedy:
+        nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    else:
+        key0 = jax.random.fold_in(jax.random.PRNGKey(args.sample_seed), 2**30)
+        nxt = jax.random.categorical(
+            key0, last_logits / args.temperature, axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    generated = [np.asarray(nxt)[:, None]]   # token sampled from prefill
+    tok = nxt[:, None]                       # (B, 1) or (B, 1, n_cb)
+    remaining = args.gen - 1
+    decode_energy_j = 0.0
+    chunk_idx = 0
+    t_decode = 0.0                           # execution only, compile excluded
+    while remaining > 0:
+        args_loop = [params, cache, tok]
+        if not greedy:
+            args_loop.append(jax.random.fold_in(
+                jax.random.PRNGKey(args.sample_seed), chunk_idx))
+        if loop is None:
+            loop = loop_fn.lower(*args_loop).compile()
+        t_c = time.perf_counter()
+        toks, cache = loop(*args_loop)
+        toks = jax.block_until_ready(toks)
+        wall = time.perf_counter() - t_c
+        t_decode += wall
+        keep = min(chunk, remaining)
+        if frost is not None:
+            decode_energy_j += frost.emit_chunk(
+                keep * args.requests, args.requests, chunk, wall)
+        generated.append(np.asarray(toks)[:, :keep])
+        tok = toks[:, -1:]
+        remaining -= keep
+        chunk_idx += 1
+    toks_out = np.concatenate(generated, axis=1)
+
+    # the first token came from prefill: tok/s and J/token charge only the
+    # (gen - 1) * requests tokens the decode loop actually produced
+    n_decoded = (args.gen - 1) * args.requests
+    tok_per_s = n_decoded / max(t_decode, 1e-9)
+    j_line = ""
+    if frost is not None:
+        j_line = f"; {decode_energy_j / max(n_decoded, 1):.3g} J/token analytic"
+    print(f"[serve] prefill {args.requests}x{args.prompt_len} in "
+          f"{t_prefill*1e3:.0f} ms; decode {n_decoded} tokens in "
+          f"{t_decode*1e3:.0f} ms ({tok_per_s:.0f} tok/s measured, "
+          f"fused chunks of {chunk}, one executable{j_line})")
+    print(f"[serve] sample continuation: {toks_out[0].ravel()[:16].tolist()}")
+    return 0
+
+
+def run_engine(args, cfg, step_cfg, rules, params,
+               frost: FrostPlane | None) -> int:
+    """Continuous batching: Poisson arrivals into the paged-KV engine."""
+    greedy = args.temperature <= 0.0
+    max_len = args.prompt_len + args.gen
+    ecfg = EngineConfig(n_slots=args.n_slots, page_size=args.page_size,
+                        max_len=max_len, decode_chunk=max(1, args.decode_chunk),
+                        greedy=greedy,
+                        temperature=max(args.temperature, 1e-6),
+                        sample_seed=args.sample_seed)
+    on_chunk = None
+    if frost is not None:
+        on_chunk = lambda s: frost.emit_chunk(   # noqa: E731
+            s.tokens_kept, s.n_active, ecfg.decode_chunk, s.wall_s)
+    admission = None
+    if args.power_budget > 0:
+        device = frost.device if frost is not None else PowerCappedDevice(TPU_V5E)
+        admission = EnergyAwareAdmission(
+            device, lambda n: decode_workload(cfg, n), args.power_budget,
+            backend=frost.backend if frost is not None else None)
+
+    p_lo = min(max(4, args.prompt_len // 2), args.prompt_len)
+    g_lo = min(max(2, args.gen // 2), args.gen)
+    trace = poisson_trace(
+        args.requests, rate_per_step=args.arrival_rate, seed=args.seed,
+        vocab_size=cfg.vocab_size,
+        prompt_len=(p_lo, args.prompt_len),
+        max_new_tokens=(g_lo, args.gen),
+        n_codebooks=cfg.n_codebooks, eos_id=args.eos_id)
+    engine = ServeEngine(cfg, ecfg, params, step_cfg=step_cfg, rules=rules,
+                         on_chunk=on_chunk, admission=admission)
+    rep = engine.run(trace)
+
+    lat = rep.latency_percentiles((50, 95))
+    waits = [r.wait_steps for r in rep.results if r.admit_step >= 0]
+    print(f"[serve] engine: {len(rep.results)} requests over {rep.n_chunks} "
+          f"chunks of {ecfg.decode_chunk} ({args.n_slots} slots, "
+          f"page_size {args.page_size}, occupancy {rep.occupancy:.0%})")
+    j_line = f", {rep.j_per_token:.3g} J/token (occupied slots only)" \
+        if frost is not None else ""
+    print(f"[serve] decode {rep.tokens_kept} useful / {rep.tokens_computed} "
+          f"computed tokens in {rep.decode_wall_s*1e3:.0f} ms "
+          f"({rep.tok_per_s:.0f} tok/s measured{j_line})")
+    print(f"[serve] latency p50 {lat[50]:.0f} / p95 {lat[95]:.0f} steps; "
+          f"queue wait mean {np.mean(waits):.1f} steps"
+          if waits else "[serve] nothing admitted")
+    for r in rep.results[:4]:
+        print(f"[serve]   rid={r.rid} L={r.prompt_len} "
+              f"gen={r.n_tokens}/{r.max_new_tokens} wait={r.wait_steps} "
+              f"lat={r.latency_steps} fin={r.finish_reason}"
+              + (f" J/tok={r.j_per_token:.3g}" if frost is not None else ""))
+    return 0
 
 
 def main():
@@ -66,10 +272,26 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--decode-chunk", type=int, default=8,
-                    help="tokens per fused lax.scan decode chunk (1 = the "
-                         "old per-token host loop cadence)")
+                    help="tokens per fused lax.scan decode chunk")
+    ap.add_argument("--traffic", choices=("batch", "poisson"), default="batch",
+                    help="batch: static fixed-batch baseline; poisson: "
+                         "continuous-batching engine under Poisson arrivals")
+    ap.add_argument("--arrival-rate", type=float, default=0.25,
+                    help="poisson arrivals per decode step")
+    ap.add_argument("--n-slots", type=int, default=4,
+                    help="decode slots (engine batch dimension)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV-cache page size (tokens per block)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples with this temperature")
+    ap.add_argument("--sample-seed", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="free a slot early when this token is sampled")
+    ap.add_argument("--power-budget", type=float, default=0.0,
+                    help="W; >0 gates admission on predicted board draw")
     ap.add_argument("--no-frost", action="store_true",
-                    help="disable the FROST control plane")
+                    help="disable the FROST control plane (no sampler, "
+                         "meters, or bus are even built)")
     ap.add_argument("--edp-exponent", type=float, default=2.0)
     args = ap.parse_args()
 
@@ -78,122 +300,18 @@ def main():
     step_cfg = StepConfig(remat="none")
     mesh = make_host_mesh()
     rules = build_rules(cfg, mesh) if mesh.devices.size > 1 else None
-
     params, _ = tfm.init_lm(jax.random.PRNGKey(args.seed), cfg)
-    max_len = args.prompt_len + args.gen
-    prefill = jax.jit(make_prefill_step(cfg, step_cfg, rules, max_len=max_len))
 
-    # fused decode loops, one executable per chunk size actually used (the
-    # final ragged chunk compiles its own); the cache is donated so the ring
-    # buffers update in place across chunks.  AOT-compiled on first use so
-    # compile time never lands in a chunk's measured duration_s — the
-    # profiler would read it as a grossly slow probe and flag drift.
-    loops: dict[int, object] = {}
+    n_par = args.n_slots if args.traffic == "poisson" else args.requests
+    frost = None if args.no_frost else FrostPlane(cfg, n_par, args.edp_exponent)
 
-    def chunk_loop(n: int, *loop_args):
-        if n not in loops:
-            fn = jax.jit(make_decode_loop(cfg, step_cfg, rules, n),
-                         donate_argnums=(1,))
-            loops[n] = fn.lower(*loop_args).compile()  # lowering donates nothing
-        return loops[n]
-
-    # -- FROST control plane (paper Fig 1, event-driven) ----------------------
-    bus = EventBus()
-    backend = RecordingBackend()
-    device = PowerCappedDevice(TPU_V5E)
-    wl = decode_workload(cfg, args.requests)
-    meter = AnalyticDeviceMeter(device, wl)
-    sampler = PowerSampler({"gpu": meter, "cpu": CpuProcessMeter(),
-                            "dram": DramMeter(4, 16)},
-                           rate_hz=0.1, bus=bus, node_id="serve-0")
-    cap_log = bus.tap(CapApplied)        # lossless cap-command accounting
-    profiler = None
-    if not args.no_frost:
-        policy = QoSPolicy(policy_id=f"serve-ed{args.edp_exponent:g}p",
-                           edp_exponent=args.edp_exponent) \
-            if args.edp_exponent != BALANCED.edp_exponent else BALANCED
-        profiler = OnlineCapProfiler(
-            bus, backend, policy=policy, node_id="serve-0",
-            model_id=cfg.name, steps_per_probe=1, hold_steps=8)
-
-    # synth request batch
-    data = TokenBatches(DataConfig(seed=args.seed, vocab_size=cfg.vocab_size,
-                                   seq_len=args.prompt_len,
-                                   global_batch=args.requests,
-                                   n_codebooks=cfg.n_codebooks))
-    prompts = data.batch(0)["inputs"]
-
-    t0 = time.time()
-    last_logits, cache = prefill(params, {"inputs": jnp.asarray(prompts)})
-    nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
-
-    def emit_chunk(step_idx: int, n_tok: int, wall_s: float) -> float:
-        """One fused chunk's telemetry: the *measured* wall time and token
-        count feed the profiler; the cap currently in force shapes the
-        (simulated) accelerator's energy — the analytic estimate remains the
-        energy stand-in where no meter exists.  Returns the chunk's J."""
-        cap = backend.current_cap()          # honour latest cap command
-        meter.set_cap(cap)
-        meter.set_workload(wl, busy=True)
-        est = device.estimate(wl, cap)
-        energy_j = est.energy_j * n_tok      # wl is per decode token batch
-        sampler.sample_once()                # -> PowerSampled on the bus
-        bus.publish(StepDone(node_id="serve-0", step=step_idx,
-                             duration_s=wall_s,
-                             samples=n_tok * args.requests,
-                             energy_j=energy_j, model_id=cfg.name))
-        return energy_j
-
-    generated = [np.asarray(nxt)[:, None]]   # token sampled from prefill
-    tok = nxt[:, None]                       # (B, 1) or (B, 1, n_cb)
-    remaining = args.gen - 1
-    chunk = max(1, args.decode_chunk)
-    decode_energy_j = 0.0
-    step_idx = 0
-    t_decode = 0.0                           # execution only, compile excluded
-    while remaining > 0:
-        n = min(chunk, remaining)
-        loop = chunk_loop(n, params, cache, tok)
-        t_c = time.perf_counter()
-        toks, cache = loop(params, cache, tok)
-        toks = jax.block_until_ready(toks)
-        wall = time.perf_counter() - t_c
-        t_decode += wall
-        decode_energy_j += emit_chunk(step_idx, n, wall)
-        generated.append(np.asarray(toks))
-        tok = toks[:, -1:]
-        remaining -= n
-        step_idx += 1
-    toks_out = np.concatenate(generated, axis=1)
-
-    # the first token came from prefill: tok/s and J/token charge only the
-    # (gen - 1) * requests tokens the decode loop actually produced
-    n_decoded = (args.gen - 1) * args.requests
-    tok_per_s = n_decoded / max(t_decode, 1e-9)
-    j_per_tok = decode_energy_j / max(n_decoded, 1)
-    print(f"[serve] prefill {args.requests}x{args.prompt_len} in "
-          f"{t_prefill*1e3:.0f} ms; decode {n_decoded} tokens in "
-          f"{t_decode*1e3:.0f} ms ({tok_per_s:.0f} tok/s measured, "
-          f"fused chunks of {chunk}; {j_per_tok:.3g} J/token analytic)")
-    print(f"[serve] sample continuation: {toks_out[0].ravel()[:16].tolist()}")
-
-    if profiler is not None:
-        caps = cap_log
-        probes = sum(1 for c in caps if c.reason == "probe")
-        decisions = [c for c in caps if c.reason == "decision"]
-        timeline = " -> ".join(f"{c.cap:.0%}({c.reason[0]})" for c in caps[:12])
-        print(f"[frost-ctrl] {len(caps)} cap commands mid-run "
-              f"({probes} amortised probes, {len(decisions)} decisions): "
-              f"{timeline}{' ...' if len(caps) > 12 else ''}")
-        if profiler.decision is not None:
-            d = profiler.decision
-            print(f"[frost-ctrl] serving cap {d.cap:.0%} of TDP "
-                  f"(pred. energy saving {d.predicted_energy_saving:+.1%}, "
-                  f"delay {d.predicted_delay_increase:+.1%}, "
-                  f"fit {'accepted' if d.fit_accepted else 'fallback'})")
-        profiler.close()
-    return 0
+    if args.traffic == "poisson":
+        rc = run_engine(args, cfg, step_cfg, rules, params, frost)
+    else:
+        rc = run_batch(args, cfg, step_cfg, rules, params, frost)
+    if frost is not None:
+        frost.summary()
+    return rc
 
 
 if __name__ == "__main__":

@@ -156,6 +156,47 @@ def gqa_decode(params, x, pos, cache_kv, cfg: ModelConfig, *, window: int = 0,
     return out, (k_cache, v_cache)
 
 
+def gqa_decode_paged(params, x, pos, cache_kv, block_tables, cfg: ModelConfig,
+                     *, window: int = 0,
+                     policy: ops.KernelPolicy = ops.DEFAULT_POLICY,
+                     constrain=None):
+    """One-token decode against a paged KV cache.  x: (B, 1, d);
+    cache_kv = (k_pages, v_pages) pools of shape (P, ps, Hkv, *);
+    block_tables: (B, nb) physical page per logical block; pos: (B,)
+    per-request absolute position of the new token (the batch is ragged —
+    every slot of the continuous-batching engine sits at its own depth).
+
+    The new k/v row is scattered into physical row
+    ``block_tables[b, pos[b] // ps] * ps + pos[b] % ps`` of the flattened
+    pool — slots parked on their scratch page by the engine overwrite that
+    scratch harmlessly."""
+    adt = x.dtype
+    k_pages, v_pages = cache_kv
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(adt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(adt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(adt))
+    posb = jnp.asarray(pos)[:, None]                       # (B, 1)
+    q = common.apply_rope_partial(q, posb, cfg.rope_theta, cfg.rope_fraction)
+    k = common.apply_rope_partial(k, posb, cfg.rope_theta, cfg.rope_fraction)
+    page = jnp.take_along_axis(block_tables, pos[:, None] // ps, axis=1)[:, 0]
+    row = page * ps + pos % ps                             # (B,)
+    k_flat = k_pages.reshape(P * ps, *k_pages.shape[2:])
+    v_flat = v_pages.reshape(P * ps, *v_pages.shape[2:])
+    k_flat = k_flat.at[row].set(k[:, 0].astype(k_flat.dtype))
+    v_flat = v_flat.at[row].set(v[:, 0].astype(v_flat.dtype))
+    k_pages = k_flat.reshape(k_pages.shape)
+    v_pages = v_flat.reshape(v_pages.shape)
+    scale = cfg.query_scale or cfg.resolved_head_dim ** -0.5
+    o = ops.paged_decode_attention(q, k_pages, v_pages, block_tables, pos,
+                                   window=window,
+                                   logit_cap=cfg.attn_logit_softcap,
+                                   scale=scale, policy=policy)
+    o = _mask_padded_heads(o, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
+    return out, (k_pages, v_pages)
+
+
 # ==========================================================================
 # MLA (DeepSeek-V2)
 # ==========================================================================

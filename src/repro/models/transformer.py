@@ -393,6 +393,46 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """The paged layout covers the GQA attention families (dense / MoE /
+    multi-codebook).  SSM state is O(1) per slot (nothing to page), MLA
+    caches latents not k/v heads, and sliding-window / hybrid layouts need a
+    per-layer table — all natural follow-ons, rejected loudly for now."""
+    return (not cfg.uses_ssm and not cfg.use_mla
+            and not cfg.first_dense_layers and not cfg.local_global
+            and cfg.sliding_window == 0
+            and not (cfg.family == "hybrid" and cfg.hybrid_attn_every))
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
+                     page_size: int, max_blocks: int,
+                     dtype: str = "bfloat16"):
+    """Zero-filled paged decode cache: per-unit page *pools* shared by every
+    slot, one block table and one position counter per slot.
+
+    Layout per attention unit: k/v pools (n_units, n_pages, page_size, Hkv,
+    hd).  ``block_tables[s, j]`` is the physical page holding slot s's
+    logical block j (positions [j*ps, (j+1)*ps)); the engine parks free
+    slots on a reserved per-slot scratch page so decode needs no validity
+    branch.  ``pos`` is per-slot — the batch is ragged by construction."""
+    if not supports_paged_cache(cfg):
+        raise ValueError(f"{cfg.name}: paged KV cache supports dense GQA "
+                         "families only (no ssm/mla/window/hybrid)")
+    adt = common.dt(dtype)
+    hd = cfg.resolved_head_dim
+    nu, u = n_units(cfg), unit_size(cfg)
+    hkv = cfg.padded_kv_heads
+    units = {
+        f"sub{i}": {
+            "k": jnp.zeros((nu, n_pages, page_size, hkv, hd), adt),
+            "v": jnp.zeros((nu, n_pages, page_size, hkv, hd), adt)}
+        for i in range(u)
+    }
+    return {"pos": jnp.zeros((n_slots,), jnp.int32),
+            "block_tables": jnp.zeros((n_slots, max_blocks), jnp.int32),
+            "units": units}
+
+
 def _block_prefill(blk, x, positions, cfg: ModelConfig, ctx: RunCtx, *,
                    window: int, cache_len: int, aux):
     """_apply_block that also emits this layer's decode cache."""
@@ -491,12 +531,20 @@ def prefill(params, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(), *,
     return logits, cache
 
 
-def _block_decode(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *, window: int):
+def _block_decode(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *,
+                  window: int, block_tables: jax.Array | None = None):
     h = _norm(x, blk["norm1"], cfg)
     if cfg.use_mla:
         a, lat = attn.mla_decode(blk["attn"], h, pos, c["lat"], cfg,
                                  constrain=ctx.constrain)
         c = {"lat": lat}
+    elif block_tables is not None:
+        a, (k, v) = attn.gqa_decode_paged(blk["attn"], h, pos,
+                                          (c["k"], c["v"]), block_tables,
+                                          cfg, window=window,
+                                          policy=ctx.kernel_policy,
+                                          constrain=ctx.constrain)
+        c = {"k": k, "v": v}
     else:
         a, (k, v) = attn.gqa_decode(blk["attn"], h, pos, (c["k"], c["v"]),
                                     cfg, window=window,
@@ -517,9 +565,48 @@ def _block_decode(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *, window: int)
     return x + f, c
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx()):
+def _paged_decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx,
+                       active: jax.Array | None):
+    """decode_step over the paged cache layout: per-slot positions, block
+    tables, shared page pools.  ``active`` (B,) gates the position advance —
+    parked slots keep rewriting row ``pos[b]`` of their scratch page and
+    their sampled tokens are discarded by the engine, so one executable
+    serves every occupancy pattern."""
+    pos = cache["pos"]                                     # (B,)
+    bt = cache["block_tables"]
+    x = embed_tokens(params, tokens, cfg, ctx)
+
+    def body(x, xs):
+        unit, c_unit = xs
+        new_c = {}
+        for i in range(unit_size(cfg)):
+            sub, c = unit[f"sub{i}"], c_unit[f"sub{i}"]
+            x, c2 = _block_decode(sub, x, pos, c, cfg, ctx, window=0,
+                                  block_tables=bt)
+            new_c[f"sub{i}"] = c2
+        return x, new_c
+
+    x, new_units = jax.lax.scan(body, x, (params["layers"], cache["units"]))
+    x = _norm(x, params["final_norm"], cfg)
+    logits = lm_logits(params, x, cfg, ctx)
+    adv = jnp.ones_like(pos) if active is None \
+        else jnp.asarray(active, jnp.int32)
+    new_cache = {"pos": pos + adv, "block_tables": bt, "units": new_units}
+    return logits, new_cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(),
+                *, active: jax.Array | None = None):
     """One decode step: tokens (B, 1) [or (B, 1, n_cb)] + cache -> logits,
-    updated cache.  The cache is ring-buffered; ``cache['pos']`` advances."""
+    updated cache.
+
+    Two cache layouts share this seam, discriminated by pytree structure
+    (keys are static under jit): the classic ring buffer (scalar ``pos``,
+    per-slot ring per layer) and the paged layout from ``init_paged_cache``
+    (per-slot ``pos``/``block_tables``, shared page pools).  ``active``
+    applies to the paged layout only: it gates which slots advance."""
+    if "block_tables" in cache:
+        return _paged_decode_step(params, cache, tokens, cfg, ctx, active)
     pos = cache["pos"]
     x = embed_tokens(params, tokens, cfg, ctx)
     emb0 = x

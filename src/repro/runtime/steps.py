@@ -152,6 +152,36 @@ def make_serve_step(cfg: ModelConfig, step_cfg: StepConfig,
     return serve_step
 
 
+def _decode_loop_impl(params, cache, tokens, active, key, *, cfg, ctx,
+                      n_tokens, greedy, temperature):
+    """Shared fused-loop body: ``n_tokens`` decode steps (model forward,
+    sampling, cache update) in ONE ``lax.scan``.  ``active`` is None for
+    the ring layout; for the paged layout it gates the per-slot position
+    advance (see ``make_paged_decode_loop``)."""
+    if greedy:
+        keys = None                            # no PRNG work on the hot path
+    else:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        keys = jax.random.split(key, n_tokens)
+
+    def body(carry, key_t):
+        cache, tok = carry
+        logits, cache = tfm.decode_step(params, cache, tok, cfg, ctx,
+                                        active=active)
+        last = logits[:, -1]                   # (B, V) or (B, n_cb, V)
+        if greedy:
+            nxt = jnp.argmax(last, axis=-1)
+        else:
+            nxt = jax.random.categorical(key_t, last / temperature, axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        return (cache, nxt[:, None]), nxt
+
+    (cache, _), toks = jax.lax.scan(body, (cache, tokens), keys,
+                                    length=n_tokens)
+    return jnp.moveaxis(toks, 0, 1), cache     # (B, n_tokens[, n_cb])
+
+
 def make_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
                      rules: ShardingRules | None = None,
                      n_tokens: int = 16, *, greedy: bool = True,
@@ -170,26 +200,34 @@ def make_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
     ctx = make_run_ctx(cfg, rules, step_cfg)
 
     def decode_loop(params, cache, tokens, key=None):
-        if greedy:
-            keys = None                        # no PRNG work on the hot path
-        else:
-            if key is None:
-                key = jax.random.PRNGKey(0)
-            keys = jax.random.split(key, n_tokens)
+        return _decode_loop_impl(params, cache, tokens, None, key, cfg=cfg,
+                                 ctx=ctx, n_tokens=n_tokens, greedy=greedy,
+                                 temperature=temperature)
 
-        def body(carry, key_t):
-            cache, tok = carry
-            logits, cache = tfm.decode_step(params, cache, tok, cfg, ctx)
-            last = logits[:, -1]               # (B, V) or (B, n_cb, V)
-            if greedy:
-                nxt = jnp.argmax(last, axis=-1)
-            else:
-                nxt = jax.random.categorical(key_t, last / temperature, axis=-1)
-            nxt = nxt.astype(jnp.int32)
-            return (cache, nxt[:, None]), nxt
+    return decode_loop
 
-        (cache, _), toks = jax.lax.scan(body, (cache, tokens), keys,
-                                        length=n_tokens)
-        return jnp.moveaxis(toks, 0, 1), cache   # (B, n_tokens[, n_cb])
+
+def make_paged_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
+                           rules: ShardingRules | None = None,
+                           n_tokens: int = 16, *, greedy: bool = True,
+                           temperature: float = 1.0) -> Callable:
+    """decode_loop(params, cache, tokens, active, key=None)
+    -> (token_block, cache) over the *paged* cache layout.
+
+    The continuous-batching engine's inner loop: ``cache`` comes from
+    ``transformer.init_paged_cache`` (per-slot positions + block tables +
+    shared page pools) and ``active`` (B,) marks which slots hold a live
+    request.  Every slot decodes every step — the grid is fixed so ONE
+    executable serves all occupancy patterns — but only active slots
+    advance their position; parked slots spin on their scratch page and
+    their tokens are discarded by the engine at harvest.  Jit with
+    ``donate_argnums`` on the cache so the pools update in place."""
+    ctx = make_run_ctx(cfg, rules, step_cfg)
+
+    def decode_loop(params, cache, tokens, active, key=None):
+        return _decode_loop_impl(params, cache, tokens,
+                                 jnp.asarray(active, jnp.int32), key,
+                                 cfg=cfg, ctx=ctx, n_tokens=n_tokens,
+                                 greedy=greedy, temperature=temperature)
 
     return decode_loop

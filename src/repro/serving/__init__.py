@@ -1,0 +1,25 @@
+"""Continuous-batching serving engine (paged KV cache, mid-stream joins).
+
+Layering::
+
+    traffic      arrival processes (Poisson / batch) -> Request lists
+    request      Request / RequestResult accounting
+    paged_kv     PagedKVCache — block tables + free list over page pools
+    scheduler    RequestQueue + Scheduler — ragged requests -> fixed slots
+    engine       ServeEngine — prefill-on-join, fused masked decode chunks,
+                 free-on-finish, per-request latency + J/token accounting
+
+See docs/serving_engine.md.
+"""
+from repro.serving.engine import (ChunkStats, EnergyAwareAdmission,
+                                  EngineConfig, EngineReport, ServeEngine)
+from repro.serving.paged_kv import PagedKVCache
+from repro.serving.request import Request, RequestResult
+from repro.serving.scheduler import RequestQueue, Scheduler
+from repro.serving.traffic import batch_trace, poisson_trace
+
+__all__ = [
+    "ChunkStats", "EnergyAwareAdmission", "EngineConfig", "EngineReport",
+    "PagedKVCache", "Request", "RequestQueue", "RequestResult",
+    "Scheduler", "ServeEngine", "batch_trace", "poisson_trace",
+]

@@ -1,0 +1,117 @@
+"""Paged KV-cache manager: block tables + free list over shared page pools.
+
+Replaces per-request ring buffers with a pool of fixed-size pages shared by
+every decode slot (vLLM's PagedAttention layout, collapsed to the needs of
+this engine).  The device side — per-unit pools of shape ``(n_units,
+n_pages, page_size, Hkv, hd)`` plus per-slot ``block_tables``/``pos`` —
+comes from :func:`repro.models.transformer.init_paged_cache`; this class
+owns the *host* side: which physical page backs which logical block of
+which slot, and which pages are free.
+
+Invariants the decode path relies on:
+
+  * pages 0..n_slots-1 are reserved per-slot *scratch* pages; a free slot's
+    whole table row points at its scratch page, so parked slots can keep
+    executing (write + attend on scratch garbage, output discarded) without
+    any validity branch in the jitted loop;
+  * a live slot's table rows beyond its allocation also point at scratch,
+    so within-chunk overrun past a request's budget stays contained;
+  * distinct slots never share a non-scratch page — the per-layer scatter
+    in ``gqa_decode_paged`` therefore never sees duplicate rows across the
+    batch.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from repro.models import transformer as tfm
+
+
+class PagedKVCache:
+    """Host-side page allocator for the paged decode cache."""
+
+    def __init__(self, cfg, *, n_slots: int, page_size: int, max_len: int,
+                 n_pages: int | None = None, dtype: str = "bfloat16"):
+        if not tfm.supports_paged_cache(cfg):
+            raise ValueError(f"{cfg.name}: paged KV cache supports dense "
+                             "GQA families only (no ssm/mla/window/hybrid)")
+        self.cfg = cfg
+        self.n_slots = int(n_slots)
+        self.page_size = int(page_size)
+        self.max_len = int(max_len)
+        self.max_blocks = -(-self.max_len // self.page_size)
+        if n_pages is None:
+            # full provisioning: every slot can hold max_len, plus scratch
+            n_pages = self.n_slots * self.max_blocks + self.n_slots
+        self.n_pages = int(n_pages)
+        self.dtype = dtype
+        # scratch page s backs every unallocated block of slot s
+        self.tables = np.arange(self.n_slots, dtype=np.int32)[:, None].repeat(
+            self.max_blocks, axis=1)
+        self.free: deque[int] = deque(range(self.n_slots, self.n_pages))
+        self.allocated: dict[int, list[int]] = {}   # slot -> pages
+
+    # -- device side --------------------------------------------------------
+    def make_cache(self):
+        """Fresh zero-filled device cache pytree matching this manager."""
+        return tfm.init_paged_cache(self.cfg, self.n_slots, self.n_pages,
+                                    self.page_size, self.max_blocks,
+                                    dtype=self.dtype)
+
+    # -- allocation ---------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(int(n_tokens), 1) // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= len(self.free)
+
+    def admit(self, slot: int, n_tokens: int) -> list[int]:
+        """Allocate pages covering ``n_tokens`` context positions for
+        ``slot`` and point its table's leading blocks at them."""
+        if slot in self.allocated:
+            raise ValueError(f"slot {slot} already holds an allocation")
+        need = self.pages_for(n_tokens)
+        if need > len(self.free):
+            raise ValueError(f"slot {slot}: {need} pages needed, "
+                             f"{len(self.free)} free")
+        if need > self.max_blocks:
+            raise ValueError(f"request needs {need} blocks > table width "
+                             f"{self.max_blocks} (max_len {self.max_len})")
+        pages = [self.free.popleft() for _ in range(need)]
+        self.tables[slot, :] = slot                 # park the tail on scratch
+        self.tables[slot, :need] = pages
+        self.allocated[slot] = pages
+        return pages
+
+    def release(self, slot: int) -> None:
+        """Return ``slot``'s pages to the free list and park it."""
+        pages = self.allocated.pop(slot, [])
+        self.free.extend(pages)
+        self.tables[slot, :] = slot
+
+    # -- injection helper ---------------------------------------------------
+    def inject_rows(self, slot: int, bucket_len: int, n_valid: int) -> np.ndarray:
+        """Flat pool-row destinations for copying a prefill cache (padded to
+        ``bucket_len``) into ``slot``'s pages.  Rows past ``n_valid`` (the
+        real prompt length) map out of bounds and are dropped by the
+        ``mode="drop"`` scatter."""
+        rows = np.empty((bucket_len,), np.int32)
+        for i in range(bucket_len):
+            if i < n_valid:
+                page = self.tables[slot, i // self.page_size]
+                rows[i] = page * self.page_size + i % self.page_size
+            else:
+                rows[i] = self.n_pages * self.page_size    # dropped
+        return rows
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of non-scratch pages currently allocated."""
+        usable = self.n_pages - self.n_slots
+        return 1.0 - len(self.free) / max(usable, 1)

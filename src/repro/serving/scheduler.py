@@ -1,0 +1,111 @@
+"""Request queue + slot scheduler for the continuous-batching engine.
+
+The engine owns a fixed grid of ``n_slots`` decode slots (the jitted loop's
+batch dimension never changes — one AOT executable for every occupancy
+pattern).  The scheduler's job is to map a stream of ragged requests onto
+those slots: FIFO admission as slots and KV pages free up, an optional
+*admission hook* (energy-aware policies plug in here), and bookkeeping of
+which slot runs which request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+from repro.serving.paged_kv import PagedKVCache
+from repro.serving.request import Request
+
+
+class RequestQueue:
+    """Arrival-ordered FIFO with a virtual-step clock."""
+
+    def __init__(self, requests: list[Request]):
+        self._pending = deque(sorted(requests, key=lambda r:
+                                     (r.arrival_step, r.rid)))
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def next_arrival(self) -> int | None:
+        return self._pending[0].arrival_step if self._pending else None
+
+    def peek_ready(self, now_step: int) -> Request | None:
+        if self._pending and self._pending[0].arrival_step <= now_step:
+            return self._pending[0]
+        return None
+
+    def pop(self) -> Request:
+        return self._pending.popleft()
+
+
+@dataclasses.dataclass
+class SlotState:
+    """A live request bound to a decode slot."""
+    request: Request
+    remaining: int                # decode-loop tokens still wanted
+    next_token: object            # host-side (1,) or (1, n_cb) np token
+    finished: bool = False
+
+
+# admission hook: (request, n_active_after_admit) -> admit?  Policies that
+# need device state (cap in force, power budget) close over it — see
+# ``engine.EnergyAwareAdmission``.
+AdmissionHook = Callable[[Request, int], bool]
+
+
+class Scheduler:
+    """Admits ragged requests into fixed decode slots, mid-stream.
+
+    ``poll`` is called between chunks: it binds as many ready requests as
+    slots, pages, and the admission hook allow.  Freeing (EOS / token
+    budget) is driven by the engine at harvest time via ``finish``.
+    """
+
+    def __init__(self, n_slots: int, kv: PagedKVCache,
+                 admission: AdmissionHook | None = None):
+        self.n_slots = n_slots
+        self.kv = kv
+        self.admission = admission
+        self.slots: list[SlotState | None] = [None] * n_slots
+        self._free = deque(range(n_slots))
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def poll(self, queue: RequestQueue, now_step: int) -> list[tuple[int, Request]]:
+        """Admit ready requests into free slots; returns (slot, request)
+        pairs the engine must prefill-join this cycle."""
+        joins: list[tuple[int, Request]] = []
+        while self._free:
+            req = queue.peek_ready(now_step)
+            if req is None:
+                break
+            # pages must cover every position a kept token attends to:
+            # prompt + max_new - 1 (the last fed token's write)
+            ctx_tokens = req.prompt_len + req.max_new_tokens - 1
+            if not self.kv.can_admit(ctx_tokens):
+                break                        # FIFO: no overtaking on pages
+            if self.admission is not None and \
+                    not self.admission(req, self.n_active + 1):
+                break
+            queue.pop()
+            slot = self._free.popleft()
+            self.kv.admit(slot, ctx_tokens)
+            self.slots[slot] = SlotState(request=req,
+                                         remaining=req.max_new_tokens - 1,
+                                         next_token=None)
+            joins.append((slot, req))
+        return joins
+
+    def finish(self, slot: int) -> None:
+        """Free the slot and its pages (called at harvest on EOS/budget)."""
+        if self.slots[slot] is None:
+            raise ValueError(f"slot {slot} is not active")
+        self.kv.release(slot)
+        self.slots[slot] = None
+        self._free.append(slot)

@@ -189,6 +189,74 @@ def test_decode_invalid_slots_masked():
     np.testing.assert_allclose(o_poison, o_ref, atol=2e-5, rtol=2e-5)
 
 
+def _paged_cache(key, B, ps, nb, P, Hkv, D, Dv, pos, dtype):
+    """Per-request linear histories scattered into a shuffled page pool.
+    Returns (k_pages, v_pages, tables, ring_caches) where ring_caches[b]
+    holds the same history in the canonical slot = p % C ring layout."""
+    rng = np.random.default_rng(int(np.sum(pos)))
+    k_pages = np.zeros((P, ps, Hkv, D), dtype)
+    v_pages = np.zeros((P, ps, Hkv, Dv), dtype)
+    perm = rng.permutation(P)
+    tables = perm[:B * nb].reshape(B, nb).astype(np.int32)
+    rings = []
+    C = nb * ps
+    for b in range(B):
+        S = int(pos[b]) + 1
+        ks = jax.random.split(jax.random.fold_in(key, b), 2)
+        k = np.asarray(jax.random.normal(ks[0], (S, Hkv, D), dtype))
+        v = np.asarray(jax.random.normal(ks[1], (S, Hkv, Dv), dtype))
+        for p in range(S):
+            page, off = tables[b, p // ps], p % ps
+            k_pages[page, off] = k[p]
+            v_pages[page, off] = v[p]
+        k_ring = np.zeros((C, Hkv, D), dtype)
+        v_ring = np.zeros((C, Hkv, Dv), dtype)
+        for p in range(S):
+            k_ring[p % C] = k[p]
+            v_ring[p % C] = v[p]
+        rings.append((k_ring, v_ring))
+    return jnp.asarray(k_pages), jnp.asarray(v_pages), jnp.asarray(tables), rings
+
+
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_paged_decode_vs_ring(shape, dtype):
+    """Paged decode == ring decode on the same (ragged) histories, for every
+    backend behind ops.paged_decode_attention — block-table gather through a
+    shuffled physical page layout, per-request positions, partially-filled
+    final pages, window and logit-cap flavours, bf16 storage."""
+    B, C, Hq, Hkv, D, Dv = shape
+    ps, nb, P = 8, C // 8, C // 8 * B + B + 3
+    dt = jnp.dtype(dtype)
+    tol = 2e-5 if dtype == "float32" else 2e-2
+    # ragged depths incl. a page-boundary-1 and a partially-filled page
+    pos = np.asarray([(C - 1) if b == 0 else (ps * (2 + b) + b) % (C - 1)
+                      for b in range(B)])
+    key = jax.random.PRNGKey(11)
+    k_pages, v_pages, tables, rings = _paged_cache(
+        key, B, ps, nb, P, Hkv, D, Dv, pos, dt)
+    q = jax.random.normal(jax.random.PRNGKey(12), (B, 1, Hq, D), dt)
+    for case in [dict(window=0, logit_cap=0.0),
+                 dict(window=ps * 2, logit_cap=0.0),
+                 dict(window=0, logit_cap=30.0)]:
+        # ring ground truth, one request at a time (scalar pos)
+        o_ring = jnp.concatenate([
+            ops.decode_attention_jnp(
+                q[b:b + 1], jnp.asarray(rings[b][0])[None],
+                jnp.asarray(rings[b][1])[None],
+                ops.ring_positions(jnp.asarray(int(pos[b])), nb * ps),
+                jnp.asarray(int(pos[b])), **case)
+            for b in range(B)], axis=0)
+        for backend in ("ref", "jnp", "pallas_interpret"):
+            pol = ops.KernelPolicy(decode=backend)
+            o = ops.paged_decode_attention(q, k_pages, v_pages, tables,
+                                           jnp.asarray(pos), policy=pol,
+                                           **case)
+            np.testing.assert_allclose(
+                np.asarray(o, np.float32), np.asarray(o_ring, np.float32),
+                atol=tol, rtol=tol, err_msg=f"{backend} {case}")
+
+
 def test_flash_pallas_ragged_fallback():
     """Ragged Sq/Sk no longer assert: the Pallas wrapper falls back to the
     chunked jnp path, matching its behaviour."""
