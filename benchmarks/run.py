@@ -2,7 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2,roofline]
 
-Prints ``name,value,derived`` CSV lines (and saves JSON artifacts).
+Prints ``name,value,derived`` CSV lines and saves JSON artifacts.  The
+serving-path jobs (decode / serve / spec) additionally write compact
+machine-readable ``BENCH_<name>.json`` trajectory files at the repo root
+(tok/s, J/token, acceptance) so the perf trajectory is tracked across PRs
+— diff them in review like any other artifact.
 """
 from __future__ import annotations
 
@@ -11,7 +15,46 @@ import json
 import pathlib
 import time
 
-ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+ART = ROOT / "artifacts" / "bench"
+
+# headline perf-trajectory schema per serving-path job: every field must be
+# a plain number so cross-PR diffs stay line-per-metric
+TRAJECTORY = {
+    "decode": lambda r: {
+        "tok_per_s": r["tok_per_s"],
+        "speedup_vs_per_token": r["speedup"],
+        "j_per_token": r["j_per_token_cap100"],
+        "j_per_token_deep_cap": r["j_per_token_deep_cap"],
+    },
+    "serve": lambda r: {
+        "tok_per_s": r["tok_per_s"],
+        "j_per_token": r["engine"]["j_per_token"],
+        "j_per_token_ratio_vs_static": r["j_per_token_ratio"],
+        "p50_latency_ratio_vs_static": r["p50_latency_ratio"],
+    },
+    "spec": lambda r: {
+        "tok_per_s": r["tok_per_s"],
+        "speedup_vs_plain": r["speedup"],
+        "best_k": r["best_k"],
+        "acceptance": r["acceptance"],
+        "j_per_accepted_token": r["j_per_token"],
+        "j_per_token_plain": r["j_per_token_plain"],
+    },
+}
+
+
+def _write_trajectory(name: str, res: dict, quick: bool) -> None:
+    if quick:
+        # --quick shrinks the workload (CI smoke); overwriting the repo-root
+        # artifact would make cross-PR diffs compare incommensurate runs
+        print(f"{name}.trajectory,skipped,--quick runs do not rewrite "
+              f"BENCH_{name}.json")
+        return
+    path = ROOT / f"BENCH_{name}.json"
+    payload = {"bench": name, **TRAJECTORY[name](res)}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"{name}.trajectory,{path.name},machine-readable perf artifact")
 
 
 def main(argv=None) -> int:
@@ -25,7 +68,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (ctrl_overhead, decode_throughput, fig2_energy,
                             fig3_overhead, fig4_capping, fig5_edxp,
-                            fig6_tradeoff, roofline, serve_engine)
+                            fig6_tradeoff, roofline, serve_engine,
+                            spec_decode)
     ART.mkdir(parents=True, exist_ok=True)
     jobs = {
         "fig2": lambda: fig2_energy.main(quick=args.quick),
@@ -36,6 +80,7 @@ def main(argv=None) -> int:
         "ctrl": lambda: ctrl_overhead.main(quick=args.quick),
         "decode": lambda: decode_throughput.main(quick=args.quick),
         "serve": lambda: serve_engine.main(quick=args.quick),
+        "spec": lambda: spec_decode.main(quick=args.quick),
         "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],
     }
     failures = 0
@@ -47,6 +92,8 @@ def main(argv=None) -> int:
         try:
             res = job()
             (ART / f"{name}.json").write_text(json.dumps(res, default=str))
+            if name in TRAJECTORY:
+                _write_trajectory(name, res, args.quick)
             print(f"{name}.seconds,{time.time()-t0:.1f},ok")
             if name == "decode":       # headline perf-trajectory line for CI
                 print(f"decode.tok_per_s,{res['tok_per_s']:.1f},"
@@ -56,6 +103,11 @@ def main(argv=None) -> int:
                 print(f"serve.tok_per_s,{res['tok_per_s']:.1f},"
                       f"engine vs static: {res['j_per_token_ratio']:.2f}x "
                       f"J/token, {res['p50_latency_ratio']:.2f}x p50 latency")
+            if name == "spec":         # speculative-decoding trajectory
+                print(f"spec.tok_per_s,{res['tok_per_s']:.1f},"
+                      f"{res['speedup']:.2f}x over plain fused loop at "
+                      f"K={res['best_k']} (replay acceptance "
+                      f"{res['acceptance']:.2f})")
         except Exception as e:                         # keep the harness alive
             failures += 1
             print(f"{name}.seconds,{time.time()-t0:.1f},"

@@ -27,6 +27,13 @@ fp32 scratch:
     cache stays in storage dtype — the whole-cache fp32 cast this kernel
     replaces tripled decode HBM traffic.
 
+Both layouts also carry a *multi-query verify* variant for speculative
+decoding (``verify_attention_pallas`` / ``paged_verify_attention_pallas``):
+``q_len = K+1`` query rows share ONE cache sweep, the causal offset masks
+fold into the same iota/pos machinery, and the fed block's own k/v arrive
+as a separate in-flight input folded at the last grid step — speculative
+candidates never land in HBM, so rejection needs no cache rollback.
+
 Validated in interpret mode against ``kernels/ref.decode_attention_ref``
 and ``ops.decode_attention_jnp`` (tests/test_kernels.py).
 """
@@ -40,6 +47,50 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _online_softmax_update(q, k, v, valid, m_ref, l_ref, acc_ref, *,
+                           scale: float, logit_cap: float):
+    """One k/v block's online-softmax update into the fp32 VMEM
+    accumulators — the numerically delicate core shared by every kernel in
+    this module (single-token and multi-query, ring and paged).
+
+    q: (R, D) query rows; k: (bk, D); v: (bk, Dv); valid: (R, bk);
+    m/l: (R,); acc: (R, Dv)."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _fold_candidates_and_finish(q_ref, kn_ref, vn_ref, o_ref, m_ref, l_ref,
+                                acc_ref, *, scale: float, window: int,
+                                logit_cap: float, q_len: int):
+    """Verify-kernel epilogue, shared by the ring and paged variants: fold
+    the in-flight candidate block (causal within the fed tokens — query row
+    i attends to candidates j <= i), then normalize into the output tile."""
+    ri = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0)
+    cj = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
+    cand_valid = cj <= ri
+    if window > 0:
+        cand_valid = jnp.logical_and(cand_valid, cj > ri - window)
+    _online_softmax_update(
+        q_ref[0, 0].astype(jnp.float32),
+        kn_ref[0, 0].astype(jnp.float32),
+        vn_ref[0, 0].astype(jnp.float32),
+        cand_valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+    l = jnp.maximum(l_ref[...], 1e-30)
+    o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
@@ -66,24 +117,11 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     # window) contribute nothing — skip their MXU work entirely
     @pl.when(jnp.any(valid))
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)                  # (1, D)
-        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
-        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, Dv)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        if logit_cap > 0.0:
-            s = logit_cap * jnp.tanh(s / logit_cap)
-        s = jnp.where(valid, s, NEG_INF)
-
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
-        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        _online_softmax_update(
+            q_ref[0, 0].astype(jnp.float32),                 # (1, D)
+            k_ref[0, 0].astype(jnp.float32),                 # (bk, D)
+            v_ref[0, 0].astype(jnp.float32),                 # (bk, Dv)
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when(ik == n_k - 1)
     def _finish():
@@ -154,6 +192,235 @@ def decode_attention_pallas(
     return out.transpose(0, 2, 1, 3)             # (B, 1, Hq, Dv)
 
 
+def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                   logit_cap: float, block_k: int, n_k: int, cache_len: int,
+                   q_len: int):
+    """Multi-query speculative verify against the ring cache.
+
+    Same split-K streaming as ``_decode_kernel`` but with ``q_len = K+1``
+    query rows sharing one cache sweep — the online-softmax state is per
+    query row.  Query row i sits at absolute position ``pos + i``; the
+    cache is committed through ``pos - 1`` and the fed block's own k/v
+    arrive as a separate in-flight input (``kn/vn``) folded in at the last
+    grid step, so nothing speculative ever lands in HBM.  Ring-eviction
+    semantics (``k_pos > q_pos - C``) mask the entries the sequential loop
+    would already have overwritten by query i."""
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q_len, block_k), 0)
+    q_pos = pos + qi
+    slot = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (q_len, block_k), 1)
+    last = pos - 1                    # committed through pos - 1
+    k_pos = last - jnp.remainder(last - slot, cache_len)
+    valid = (k_pos >= 0) & (k_pos > q_pos - cache_len)
+    if window > 0:
+        valid = jnp.logical_and(valid, k_pos > q_pos - window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        _online_softmax_update(
+            q_ref[0, 0].astype(jnp.float32),                 # (Q, D)
+            k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32),
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        _fold_candidates_and_finish(
+            q_ref, kn_ref, vn_ref, o_ref, m_ref, l_ref, acc_ref,
+            scale=scale, window=window, logit_cap=logit_cap, q_len=q_len)
+
+
+def verify_attention_pallas(
+    q: jax.Array,                  # (B, Q, Hq, D)   Q = K+1 fed tokens
+    k_cache: jax.Array,            # (B, C, Hkv, D)  committed through pos-1
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)  in-flight candidate rows
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    pos: jax.Array,                # () int32 absolute position of q[:, 0]
+    *,
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    block_k: int = 256, interpret: bool = False,
+) -> jax.Array:
+    """Split-K speculative verify attention against the canonical ring
+    cache.  Assumes the ring invariant for the *committed* prefix (last
+    write at ``(pos - 1) % C``); the fed block's candidates never touch the
+    cache — rejection therefore needs no rollback."""
+    B, Q, Hq, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = Hq // Hkv
+    if Q > C:
+        raise ValueError(f"verify block {Q} exceeds cache capacity {C}")
+    if scale is None:
+        scale = D ** -0.5
+    block_k = min(block_k, C)
+    if C % block_k:
+        block_k = next(b for b in range(block_k, 0, -1) if C % b == 0)
+    n_k = C // block_k
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, Q, D)
+    kt = k_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, D)
+    vt = v_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, Dv)
+    knt = k_new.transpose(0, 2, 1, 3)            # (B, Hkv, Q, D)
+    vnt = v_new.transpose(0, 2, 1, 3)            # (B, Hkv, Q, Dv)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _verify_kernel, scale=scale, window=window, logit_cap=logit_cap,
+        block_k=block_k, n_k=n_k, cache_len=C, q_len=Q)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, D),
+                         lambda b, h, ik, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, ik, pos_ref, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, ik, pos_ref, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, Q, D),
+                         lambda b, h, ik, pos_ref, G=G: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Q, Dv),
+                         lambda b, h, ik, pos_ref, G=G: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, Dv),
+                               lambda b, h, ik, pos_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Q,), jnp.float32),       # running max m, per query
+            pltpu.VMEM((Q,), jnp.float32),       # running denom l
+            pltpu.VMEM((Q, Dv), jnp.float32),    # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Q, Dv), q.dtype),
+        interpret=interpret,
+    )(pos_arr, qt, kt, vt, knt, vnt)
+    return out.transpose(0, 2, 1, 3)             # (B, Q, Hq, Dv)
+
+
+def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                         window: int, logit_cap: float, page_size: int,
+                         n_blocks: int, q_len: int):
+    """Paged analogue of ``_verify_kernel``: linear layout (no eviction
+    mask), per-request ``pos``, block-table gather in the k/v index_map."""
+    ib, ij = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[ib]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q_len, page_size), 0)
+    q_pos = pos + qi
+    k_pos = ij * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (q_len, page_size), 1)
+    valid = k_pos < pos                # committed rows only
+    if window > 0:
+        valid = jnp.logical_and(valid, k_pos > q_pos - window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        _online_softmax_update(
+            q_ref[0, 0].astype(jnp.float32),                 # (Q, D)
+            k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32),
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+
+    @pl.when(ij == n_blocks - 1)
+    def _finish():
+        _fold_candidates_and_finish(
+            q_ref, kn_ref, vn_ref, o_ref, m_ref, l_ref, acc_ref,
+            scale=scale, window=window, logit_cap=logit_cap, q_len=q_len)
+
+
+def paged_verify_attention_pallas(
+    q: jax.Array,                  # (B, Q, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)    in-flight candidates
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) absolute position of q[:, 0]
+    *,
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Split-K speculative verify attention over a paged KV cache: same
+    block-table gather as ``paged_decode_attention_pallas``, ``q_len = K+1``
+    query rows per (b, h) tile, in-flight candidates folded at the last
+    grid step.  ``pos`` is per-request (ragged batch)."""
+    B, Q, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    nb = block_tables.shape[1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, Q, D)
+    kt = k_pages.transpose(0, 2, 1, 3)           # (P, Hkv, ps, D)
+    vt = v_pages.transpose(0, 2, 1, 3)           # (P, Hkv, ps, Dv)
+    knt = k_new.transpose(0, 2, 1, 3)            # (B, Hkv, Q, D)
+    vnt = v_new.transpose(0, 2, 1, 3)            # (B, Hkv, Q, Dv)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
+
+    kernel = functools.partial(
+        _paged_verify_kernel, scale=scale, window=window, logit_cap=logit_cap,
+        page_size=ps, n_blocks=nb, q_len=Q)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block table + positions
+        grid=(B, Hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, D),
+                         lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, j, bt_ref, pos_ref, G=G:
+                         (bt_ref[b, j], h // G, 0, 0)),
+            pl.BlockSpec((1, 1, ps, Dv),
+                         lambda b, h, j, bt_ref, pos_ref, G=G:
+                         (bt_ref[b, j], h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Q, D),
+                         lambda b, h, j, bt_ref, pos_ref, G=G:
+                         (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Q, Dv),
+                         lambda b, h, j, bt_ref, pos_ref, G=G:
+                         (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, Dv),
+                               lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Q,), jnp.float32),       # running max m, per query
+            pltpu.VMEM((Q,), jnp.float32),       # running denom l
+            pltpu.VMEM((Q, Dv), jnp.float32),    # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Q, Dv), q.dtype),
+        interpret=interpret,
+    )(bt, pos_arr, qt, kt, vt, knt, vnt)
+    return out.transpose(0, 2, 1, 3)             # (B, Q, Hq, Dv)
+
+
 def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
                          m_ref, l_ref, acc_ref, *, scale: float, window: int,
                          logit_cap: float, page_size: int, n_blocks: int):
@@ -179,24 +446,11 @@ def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     # predicated off — under partial occupancy most of the grid is this case
     @pl.when(jnp.any(valid))
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)                  # (1, D)
-        k = k_ref[0, 0].astype(jnp.float32)                  # (ps, D)
-        v = v_ref[0, 0].astype(jnp.float32)                  # (ps, Dv)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        if logit_cap > 0.0:
-            s = logit_cap * jnp.tanh(s / logit_cap)
-        s = jnp.where(valid, s, NEG_INF)
-
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
-        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        _online_softmax_update(
+            q_ref[0, 0].astype(jnp.float32),                 # (1, D)
+            k_ref[0, 0].astype(jnp.float32),                 # (ps, D)
+            v_ref[0, 0].astype(jnp.float32),                 # (ps, Dv)
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when(ij == n_blocks - 1)
     def _finish():

@@ -17,7 +17,9 @@ Decode attention (the serving hot path) has its own backend axis on
 ``ref`` the whole-cache fp32 oracle, ``pallas`` the split-K TPU kernel.
 The same axis drives both cache layouts — ``decode_attention`` (ring
 buffer) and ``paged_decode_attention`` (block-table page pool, the
-continuous-batching serving engine's layout).
+continuous-batching serving engine's layout) — and their multi-query
+speculative-verify variants (``verify_attention`` /
+``paged_verify_attention``: K+1 queries per cache sweep).
 
 Models call these wrappers; the backend is chosen by ``KernelPolicy``.
 """
@@ -187,6 +189,108 @@ def decode_attention_jnp(
     return o.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
 
 
+def verify_attention_jnp(
+    q: jax.Array,                  # (B, Q, Hq, D)   Q = K+1 fed tokens
+    k_cache: jax.Array,            # (B, C, Hkv, D)  committed through pos-1
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)  in-flight candidate rows
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    k_pos: jax.Array,              # (C,) absolute position per slot (<0 invalid)
+    pos: jax.Array,                # () absolute position of q[:, 0]
+    *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+) -> jax.Array:
+    """Speculative multi-query decode (verify) against a ring-buffer cache.
+
+    Query i (absolute position ``pos + i``) attends to the committed cache
+    plus candidates ``j <= i`` of the in-flight block; candidate k/v never
+    touch the cache so a rejected suffix needs no rollback.  Ring-eviction
+    semantics are preserved (``k_pos > q_pos - C``): entries the sequential
+    loop would already have overwritten are masked.  Storage dtype is kept
+    end to end; einsums accumulate in fp32 (same discipline as
+    ``decode_attention_jnp`` — one cache sweep amortised over K+1 queries
+    is the whole J/token win)."""
+    B, Q, Hq, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qf = q.reshape(B, Q, Hkv, G, D)
+    q_pos = pos + jnp.arange(Q)[:, None]                     # (Q, 1)
+
+    s_c = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_cache,
+                     preferred_element_type=jnp.float32).astype(jnp.float32)
+    s_n = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_new,
+                     preferred_element_type=jnp.float32).astype(jnp.float32)
+    s = jnp.concatenate([s_c, s_n], axis=-1) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    valid_c = (k_pos[None, :] >= 0) & (k_pos[None, :] <= q_pos) \
+        & (k_pos[None, :] > q_pos - C)
+    n_pos = pos + jnp.arange(Q)[None, :]
+    valid_n = n_pos <= q_pos
+    if window > 0:
+        valid_c &= k_pos[None, :] > q_pos - window
+        valid_n &= n_pos > q_pos - window
+    valid = jnp.concatenate([valid_c, valid_n], axis=-1)     # (Q, C+Q)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    vf = jnp.concatenate([v_cache, v_new], axis=1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Q, Hq, Dv).astype(q.dtype)
+
+
+def paged_verify_attention_jnp(
+    q: jax.Array,                  # (B, Q, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)    in-flight candidates
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) absolute position of q[:, 0]
+    *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+) -> jax.Array:
+    """Paged analogue of ``verify_attention_jnp``: the pool is committed
+    through ``pos[b] - 1`` (linear layout, no eviction); ``pos`` is
+    per-request so validity is per-row."""
+    B, Q, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    Dv = v_pages.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
+    vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, Dv)
+    qf = q.reshape(B, Q, Hkv, G, D)
+    q_pos = pos.reshape(B, 1, 1) + jnp.arange(Q)[None, :, None]  # (B, Q, 1)
+
+    s_c = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kg,
+                     preferred_element_type=jnp.float32).astype(jnp.float32)
+    s_n = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_new,
+                     preferred_element_type=jnp.float32).astype(jnp.float32)
+    s = jnp.concatenate([s_c, s_n], axis=-1) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    k_pos = jnp.arange(nb * ps)[None, None, :]
+    valid_c = jnp.broadcast_to(k_pos < pos.reshape(B, 1, 1), (B, Q, nb * ps))
+    n_pos = pos.reshape(B, 1, 1) + jnp.arange(Q)[None, None, :]
+    valid_n = n_pos <= q_pos
+    if window > 0:
+        valid_c = valid_c & (k_pos > q_pos - window)
+        valid_n &= n_pos > q_pos - window
+    valid = jnp.concatenate([valid_c, valid_n], axis=-1)     # (B, Q, K+Q)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    vf = jnp.concatenate([vg, v_new], axis=1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Q, Hq, Dv).astype(q.dtype)
+
+
 def paged_decode_attention_jnp(
     q: jax.Array,                  # (B, 1, Hq, D)
     k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
@@ -311,6 +415,85 @@ def decode_attention(
         return decode_attention_jnp(q, k_cache, v_cache, k_pos, pos,
                                     window=window, logit_cap=logit_cap,
                                     scale=scale)
+    raise ValueError(f"unknown decode backend {backend!r}")
+
+
+def verify_attention(
+    q: jax.Array,                  # (B, Q, Hq, D)   Q = K+1 fed tokens
+    k_cache: jax.Array,            # (B, C, Hkv, D)  ring, committed thru pos-1
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)  in-flight candidate rows
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    pos: jax.Array,                # () absolute position of q[:, 0]
+    *,
+    k_pos: jax.Array | None = None,   # (C,) slot positions; None -> canonical ring
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    policy: KernelPolicy = DEFAULT_POLICY,
+) -> jax.Array:
+    """Backend-dispatching speculative verify attention (ring layout).
+
+    Scores ``Q = K+1`` queries at positions ``pos .. pos+K`` in ONE cache
+    sweep — the decode hot path's bytes-per-token lever: the whole KV cache
+    streams HBM once for K+1 candidate tokens instead of once per token.
+    Shares the ``decode`` backend axis; the candidates' k/v ride along as a
+    separate in-flight block so rejection never needs a cache rollback."""
+    backend = policy.decode
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend in ("pallas", "pallas_interpret") and k_pos is not None:
+        backend = "jnp"            # custom slot layout: ring derivation invalid
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import decode_attention as da
+        return da.verify_attention_pallas(
+            q, k_cache, v_cache, k_new, v_new, pos, window=window,
+            logit_cap=logit_cap, scale=scale, block_k=policy.decode_k_chunk,
+            interpret=backend == "pallas_interpret")
+    if k_pos is None:
+        # committed prefix ends at pos - 1: that is the ring reference
+        k_pos = ring_positions(pos - 1, k_cache.shape[1])
+    if backend == "ref":
+        return _ref.verify_attention_ref(
+            q, k_cache, v_cache, k_new, v_new, k_pos, pos, window=window,
+            logit_cap=logit_cap, scale=scale)
+    if backend == "jnp":
+        return verify_attention_jnp(
+            q, k_cache, v_cache, k_new, v_new, k_pos, pos, window=window,
+            logit_cap=logit_cap, scale=scale)
+    raise ValueError(f"unknown decode backend {backend!r}")
+
+
+def paged_verify_attention(
+    q: jax.Array,                  # (B, Q, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)    in-flight candidates
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) absolute position of q[:, 0]
+    *,
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    policy: KernelPolicy = DEFAULT_POLICY,
+) -> jax.Array:
+    """Backend-dispatching speculative verify attention over the paged KV
+    cache (the continuous-batching engine's layout).  ``pos`` is per-request
+    — every slot verifies its own K+1 candidates at its own depth."""
+    backend = policy.decode
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import decode_attention as da
+        return da.paged_verify_attention_pallas(
+            q, k_pages, v_pages, k_new, v_new, block_tables, pos,
+            window=window, logit_cap=logit_cap, scale=scale,
+            interpret=backend == "pallas_interpret")
+    if backend == "ref":
+        return _ref.paged_verify_attention_ref(
+            q, k_pages, v_pages, k_new, v_new, block_tables, pos,
+            window=window, logit_cap=logit_cap, scale=scale)
+    if backend == "jnp":
+        return paged_verify_attention_jnp(
+            q, k_pages, v_pages, k_new, v_new, block_tables, pos,
+            window=window, logit_cap=logit_cap, scale=scale)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 

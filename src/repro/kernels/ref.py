@@ -92,6 +92,121 @@ def decode_attention_ref(
 
 
 # --------------------------------------------------------------------------
+# verify-attention oracle — K+1 speculative queries vs a ring-buffer cache
+# --------------------------------------------------------------------------
+def verify_attention_ref(
+    q: jax.Array,                  # (B, Q, Hq, D)   Q = K+1 fed tokens
+    k_cache: jax.Array,            # (B, C, Hkv, D)  committed through pos-1
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)  in-flight candidate rows
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    k_pos: jax.Array,              # (C,) absolute position per slot (<0 invalid)
+    pos: jax.Array,                # () absolute position of q[:, 0]
+    *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+) -> jax.Array:
+    """Speculative verify oracle: query i sits at absolute position pos + i
+    and attends to (a) the committed cache and (b) candidates j <= i of the
+    in-flight block — the candidates' k/v never touch the cache, so a
+    rejected suffix needs no rollback.
+
+    Ring-eviction semantics: the sequential decode loop would have
+    *overwritten* slots holding positions <= (pos + i) - C by the time it
+    reached query i, so those entries are masked here (``k_pos > q_pos - C``)
+    even though the verify pass left them physically intact.  This is what
+    makes greedy speculative decode bit-identical to the plain loop across
+    ring wrap-around."""
+    B, Q, Hq, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Q, Hkv, G, D)
+    q_pos = pos + jnp.arange(Q)[:, None]                     # (Q, 1)
+
+    # (a) committed cache: (B, Hkv, G, Q, C)
+    s_c = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                     k_cache.astype(jnp.float32)) * scale
+    valid_c = (k_pos[None, :] >= 0) & (k_pos[None, :] <= q_pos) \
+        & (k_pos[None, :] > q_pos - C)
+    if window > 0:
+        valid_c &= k_pos[None, :] > q_pos - window
+
+    # (b) in-flight candidates: causal within the fed block
+    s_n = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                     k_new.astype(jnp.float32)) * scale
+    n_pos = pos + jnp.arange(Q)[None, :]                     # (1, Q)
+    valid_n = n_pos <= q_pos
+    if window > 0:
+        valid_n &= n_pos > q_pos - window
+
+    s = jnp.concatenate([s_c, s_n], axis=-1)
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    valid = jnp.concatenate([valid_c, valid_n], axis=-1)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    vf = jnp.concatenate([v_cache.astype(jnp.float32),
+                          v_new.astype(jnp.float32)], axis=1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Q, Hq, Dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# paged verify-attention oracle — K+1 speculative queries vs a paged cache
+# --------------------------------------------------------------------------
+def paged_verify_attention_ref(
+    q: jax.Array,                  # (B, Q, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)    in-flight candidates
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) absolute position of q[:, 0]
+    *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+) -> jax.Array:
+    """Paged analogue of :func:`verify_attention_ref`: the pool is committed
+    through ``pos[b] - 1`` (linear layout, no eviction), candidates stay
+    in-flight.  ``pos`` is per-request — the batch is ragged."""
+    B, Q, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    Dv = v_pages.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
+    vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, Dv)
+    qf = q.astype(jnp.float32).reshape(B, Q, Hkv, G, D)
+    q_pos = pos.reshape(B, 1, 1) + jnp.arange(Q)[None, :, None]  # (B, Q, 1)
+
+    s_c = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kg.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(nb * ps)[None, None, :]               # (1, 1, K)
+    valid_c = k_pos < pos.reshape(B, 1, 1)                   # committed only
+    if window > 0:
+        valid_c = valid_c & (k_pos > q_pos - window)
+    valid_c = jnp.broadcast_to(valid_c, (B, Q, nb * ps))
+
+    s_n = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                     k_new.astype(jnp.float32)) * scale
+    n_pos = pos.reshape(B, 1, 1) + jnp.arange(Q)[None, None, :]
+    valid_n = n_pos <= q_pos
+    if window > 0:
+        valid_n &= n_pos > q_pos - window
+
+    s = jnp.concatenate([s_c, s_n], axis=-1)
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    valid = jnp.concatenate([valid_c, valid_n], axis=-1)     # (B, Q, K+Q)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    vf = jnp.concatenate([vg.astype(jnp.float32),
+                          jnp.asarray(v_new, jnp.float32)], axis=1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Q, Hq, Dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
 # paged decode-attention oracle — single token vs a block-table KV cache
 # --------------------------------------------------------------------------
 def paged_decode_attention_ref(

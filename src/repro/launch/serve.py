@@ -20,6 +20,13 @@ split-K decode-attention kernels, AOT-compiled executables):
     slots mid-stream (prefill-on-join into the paged KV cache) and free on
     EOS / token budget.  J/token charges only occupied slots.
 
+``--spec-k K`` turns either mode speculative: each cache sweep verifies K
+self-drafted tokens plus one bonus (``--drafter ngram`` prompt-lookup or
+``repeat``), emitting 1..K+1 tokens per sweep — greedy output is
+bit-identical to the plain loop, J/accepted-token drops with acceptance,
+and admission control prices occupancy at the *effective* tok/s (see
+docs/speculative_decoding.md).
+
 FROST (unless ``--no-frost``, which skips building the sampler/meters and
 publishes nothing): every chunk emits one ``StepDone`` + ``PowerSampled``
 with the *measured* wall time and the useful token count; the
@@ -45,8 +52,10 @@ from repro.core.profiler import RecordingBackend
 from repro.data import DataConfig, TokenBatches
 from repro.launch.mesh import make_host_mesh
 from repro.runtime.sharding import build_rules
+from repro.runtime.speculate import get_drafter
 from repro.runtime.steps import (StepConfig, make_decode_loop,
-                                 make_prefill_step)
+                                 make_prefill_step,
+                                 make_speculative_decode_loop)
 from repro.models import transformer as tfm
 from repro.serving import (EnergyAwareAdmission, EngineConfig, ServeEngine,
                            poisson_trace)
@@ -54,19 +63,28 @@ from repro.telemetry.meters import AnalyticDeviceMeter, CpuProcessMeter, DramMet
 from repro.telemetry.sampler import PowerSampler
 
 
-def decode_workload(cfg, requests: int) -> WorkloadProfile:
-    """Decode-step roofline from first principles: every generated token
-    streams the full parameter set from HBM once (memory-bound — the reason
-    deep caps are near-free while serving), with 2 FLOPs per param per
-    *live* sequence of compute on top.  Under partial occupancy the HBM
-    term is unchanged (weights stream regardless) while compute scales with
-    the requests actually served — utilisation-honest."""
+def decode_workload(cfg, requests: int,
+                    tokens_per_step: float = 1.0) -> WorkloadProfile:
+    """Decode-step roofline from first principles: every decode step streams
+    the full parameter set from HBM once (memory-bound — the reason deep
+    caps are near-free while serving), with 2 FLOPs per param per *live*
+    sequence of compute on top.  Under partial occupancy the HBM term is
+    unchanged (weights stream regardless) while compute scales with the
+    requests actually served — utilisation-honest.
+
+    ``tokens_per_step`` is the speculative multiplier — tokens per sequence
+    per cache sweep.  Energy callers pass the tokens *scored* (K+1,
+    accepted or not: the FLOPs actually burned); admission passes the
+    tokens *emitted* (effective throughput).  Either way compute and
+    samples scale with it while the HBM term does NOT — that asymmetry is
+    the whole J/token argument for speculation on a memory-bound path."""
     p = float(cfg.param_count())
+    tps = max(tokens_per_step, 1.0)
     return WorkloadProfile(
         name=f"{cfg.name}-decode",
-        flops_per_step=2.0 * p * max(requests, 1),
-        hbm_bytes_per_step=2.0 * p,          # bf16 weights once per token
-        samples_per_step=max(requests, 1),
+        flops_per_step=2.0 * p * max(requests, 1) * tps,
+        hbm_bytes_per_step=2.0 * p,          # bf16 weights once per sweep
+        samples_per_step=max(requests, 1) * tps,
     )
 
 
@@ -97,15 +115,20 @@ class FrostPlane:
         self._step = 0
 
     def emit_chunk(self, n_useful: int, n_active: int, n_steps: int,
-                   wall_s: float) -> float:
+                   wall_s: float, tokens_scored: float = 1.0) -> float:
         """One fused chunk's telemetry: measured wall time + useful token
         count feed the profiler; the cap in force shapes the (simulated)
         accelerator's energy.  The workload is rebuilt at the chunk's live
         occupancy (``n_active`` slots) and charged for every step the
         device ran (incl. overrun/parked work) — the caller divides by the
-        tokens it actually *served*.  Returns the chunk's J."""
+        tokens it actually *served*.  ``tokens_scored`` is the speculative
+        compute multiplier (K+1 verified tokens per sweep, accepted or
+        not): energy must charge the FLOPs actually burned, which is how
+        rejected drafts land in J/accepted-token as overhead.  Returns the
+        chunk's J."""
         cap = self.backend.current_cap()     # honour latest cap command
-        wl = decode_workload(self.cfg, n_active)
+        wl = decode_workload(self.cfg, n_active,
+                             tokens_per_step=tokens_scored)
         self.meter.set_cap(cap)
         self.meter.set_workload(wl, busy=True)
         est = self.device.estimate(wl, cap)
@@ -166,30 +189,61 @@ def run_batch(args, cfg, step_cfg, rules, params, frost: FrostPlane | None) -> i
             key0, last_logits / args.temperature, axis=-1).astype(jnp.int32)
     t_prefill = time.time() - t0
 
+    spec = args.spec_k > 0
+    drafter = dstate = None
+    if spec:
+        drafter = get_drafter(args.drafter, args.spec_k)
+        loop_fn = jax.jit(
+            make_speculative_decode_loop(
+                cfg, step_cfg, rules, chunk, drafter=drafter, greedy=greedy,
+                temperature=max(args.temperature, 1e-6)),
+            donate_argnums=(1,))
+        ds = drafter.init_state(args.requests)
+        drafter.seed_batch(ds, np.asarray(prompts), np.asarray(nxt))
+        dstate = {k: jnp.asarray(v) for k, v in ds.items()}
+
     generated = [np.asarray(nxt)[:, None]]   # token sampled from prefill
     tok = nxt[:, None]                       # (B, 1) or (B, 1, n_cb)
     remaining = args.gen - 1
     decode_energy_j = 0.0
     chunk_idx = 0
+    n_spec_steps = n_spec_accepted = 0
     t_decode = 0.0                           # execution only, compile excluded
     while remaining > 0:
-        args_loop = [params, cache, tok]
+        args_loop = [params, cache, tok] + ([dstate] if spec else [])
         if not greedy:
             args_loop.append(jax.random.fold_in(
                 jax.random.PRNGKey(args.sample_seed), chunk_idx))
         if loop is None:
             loop = loop_fn.lower(*args_loop).compile()
         t_c = time.perf_counter()
-        toks, cache = loop(*args_loop)
-        toks = jax.block_until_ready(toks)
+        if spec:
+            toks, counts, cache, dstate = loop(*args_loop)
+            toks = jax.block_until_ready(toks)
+            counts = np.asarray(counts)       # uniform across B (ring lockstep)
+            flat = np.concatenate(
+                [np.asarray(toks)[:, s, :counts[0, s]]
+                 for s in range(counts.shape[1])], axis=1)
+            emitted = flat.shape[1]
+            n_spec_steps += counts.shape[1]
+            n_spec_accepted += int(counts[0].sum()) - counts.shape[1]
+        else:
+            toks, cache = loop(*args_loop)
+            toks = jax.block_until_ready(toks)
+            flat, emitted = np.asarray(toks), chunk
         wall = time.perf_counter() - t_c
         t_decode += wall
-        keep = min(chunk, remaining)
+        keep = min(emitted, remaining)
         if frost is not None:
+            # spec or not, a chunk is `chunk` cache sweeps; speculation
+            # scores K+1 tokens per sweep (charged) and harvests 1..K+1
             decode_energy_j += frost.emit_chunk(
-                keep * args.requests, args.requests, chunk, wall)
-        generated.append(np.asarray(toks)[:, :keep])
-        tok = toks[:, -1:]
+                keep * args.requests, args.requests, chunk, wall,
+                tokens_scored=args.spec_k + 1 if spec else 1.0)
+        generated.append(flat[:, :keep])
+        # spec reassembles on host (ragged counts); the plain carry stays a
+        # device-array slice — no H2D upload on the host-free loop
+        tok = jnp.asarray(flat[:, -1:]) if spec else toks[:, -1:]
         remaining -= keep
         chunk_idx += 1
     toks_out = np.concatenate(generated, axis=1)
@@ -201,10 +255,15 @@ def run_batch(args, cfg, step_cfg, rules, params, frost: FrostPlane | None) -> i
     j_line = ""
     if frost is not None:
         j_line = f"; {decode_energy_j / max(n_decoded, 1):.3g} J/token analytic"
+    spec_line = ""
+    if spec and n_spec_steps:
+        acc = n_spec_accepted / (n_spec_steps * args.spec_k)
+        spec_line = (f", spec K={args.spec_k} acceptance {acc:.0%} "
+                     f"({1 + n_spec_accepted / n_spec_steps:.2f} tok/sweep)")
     print(f"[serve] prefill {args.requests}x{args.prompt_len} in "
           f"{t_prefill*1e3:.0f} ms; decode {n_decoded} tokens in "
           f"{t_decode*1e3:.0f} ms ({tok_per_s:.0f} tok/s measured, "
-          f"fused chunks of {chunk}, one executable{j_line})")
+          f"fused chunks of {chunk}, one executable{spec_line}{j_line})")
     print(f"[serve] sample continuation: {toks_out[0].ravel()[:16].tolist()}")
     return 0
 
@@ -218,16 +277,30 @@ def run_engine(args, cfg, step_cfg, rules, params,
                         max_len=max_len, decode_chunk=max(1, args.decode_chunk),
                         greedy=greedy,
                         temperature=max(args.temperature, 1e-6),
-                        sample_seed=args.sample_seed)
-    on_chunk = None
-    if frost is not None:
-        on_chunk = lambda s: frost.emit_chunk(   # noqa: E731
-            s.tokens_kept, s.n_active, ecfg.decode_chunk, s.wall_s)
+                        sample_seed=args.sample_seed,
+                        spec_k=max(0, args.spec_k), drafter=args.drafter)
+    # effective tokens per slot-step: 1.0 plain; under speculation the
+    # on_chunk hook keeps a running estimate (accepted + bonus per sweep) so
+    # the admission policy prices occupancy at the throughput actually
+    # delivered, not one token per sweep
+    eff = {"tps": 1.0}
+
+    def on_chunk(s):
+        if s.n_active and ecfg.spec_k:
+            tps = s.tokens_kept / max(s.n_active * ecfg.decode_chunk, 1)
+            eff["tps"] = 0.5 * eff["tps"] + 0.5 * max(tps, 1.0)
+        if frost is None:
+            return None
+        return frost.emit_chunk(s.tokens_kept, s.n_active,
+                                ecfg.decode_chunk, s.wall_s,
+                                tokens_scored=ecfg.spec_k + 1)
+
     admission = None
     if args.power_budget > 0:
         device = frost.device if frost is not None else PowerCappedDevice(TPU_V5E)
         admission = EnergyAwareAdmission(
-            device, lambda n: decode_workload(cfg, n), args.power_budget,
+            device, lambda n: decode_workload(cfg, n, tokens_per_step=eff["tps"]),
+            args.power_budget,
             backend=frost.backend if frost is not None else None)
 
     p_lo = min(max(4, args.prompt_len // 2), args.prompt_len)
@@ -247,11 +320,17 @@ def run_engine(args, cfg, step_cfg, rules, params,
     print(f"[serve] engine: {len(rep.results)} requests over {rep.n_chunks} "
           f"chunks of {ecfg.decode_chunk} ({args.n_slots} slots, "
           f"page_size {args.page_size}, occupancy {rep.occupancy:.0%})")
-    j_line = f", {rep.j_per_token:.3g} J/token (occupied slots only)" \
-        if frost is not None else ""
+    j_name = "J/accepted-token" if ecfg.spec_k else \
+        "J/token (occupied slots only)"
+    j_line = f", {rep.j_per_token:.3g} {j_name}" if frost is not None else ""
     print(f"[serve] decode {rep.tokens_kept} useful / {rep.tokens_computed} "
           f"computed tokens in {rep.decode_wall_s*1e3:.0f} ms "
           f"({rep.tok_per_s:.0f} tok/s measured{j_line})")
+    if ecfg.spec_k:
+        print(f"[serve] speculative K={ecfg.spec_k} ({ecfg.drafter}): "
+              f"acceptance {rep.acceptance_rate:.0%}, "
+              f"{rep.tokens_per_step:.2f} tokens/slot-sweep "
+              f"(admission sees {eff['tps']:.2f}x effective tok/s)")
     print(f"[serve] latency p50 {lat[50]:.0f} / p95 {lat[95]:.0f} steps; "
           f"queue wait mean {np.mean(waits):.1f} steps"
           if waits else "[serve] nothing admitted")
@@ -282,6 +361,11 @@ def main():
                     help="decode slots (engine batch dimension)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV-cache page size (tokens per block)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help=">0: speculative decoding — verify K drafts + 1 "
+                         "bonus token per cache sweep (both traffic modes)")
+    ap.add_argument("--drafter", choices=("ngram", "repeat"), default="ngram",
+                    help="self-drafter for --spec-k (ngram = prompt-lookup)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples with this temperature")
     ap.add_argument("--sample-seed", type=int, default=0)

@@ -197,6 +197,60 @@ def gqa_decode_paged(params, x, pos, cache_kv, block_tables, cfg: ModelConfig,
     return out, (k_pages, v_pages)
 
 
+def gqa_verify(params, x, pos, cache_kv, cfg: ModelConfig, *, window: int = 0,
+               policy: ops.KernelPolicy = ops.DEFAULT_POLICY, constrain=None):
+    """Speculative verify: score ``Q = K+1`` fed tokens in one cache sweep.
+
+    x: (B, Q, d) — the fed block [t_last, d_1..d_K] at positions
+    ``pos .. pos+Q-1``; cache_kv = (k, v) ring buffers committed through
+    ``pos - 1``.  Unlike ``gqa_decode``, NOTHING is written to the cache:
+    the block's own k/v are returned as *pending* rows for the runtime to
+    commit once the accepted prefix is known — rejection needs no rollback,
+    and a wrapped ring's history stays intact for re-drafting."""
+    adt = x.dtype
+    k_cache, v_cache = cache_kv
+    Q = x.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(adt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(adt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(adt))
+    posq = jnp.asarray(pos)[None] + jnp.arange(Q)[None, :]   # (1, Q)
+    q = common.apply_rope_partial(q, posq, cfg.rope_theta, cfg.rope_fraction)
+    k = common.apply_rope_partial(k, posq, cfg.rope_theta, cfg.rope_fraction)
+    scale = cfg.query_scale or cfg.resolved_head_dim ** -0.5
+    o = ops.verify_attention(q, k_cache, v_cache, k, v, pos, window=window,
+                             logit_cap=cfg.attn_logit_softcap, scale=scale,
+                             policy=policy)
+    o = _mask_padded_heads(o, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
+    return out, (k, v)
+
+
+def gqa_verify_paged(params, x, pos, cache_kv, block_tables, cfg: ModelConfig,
+                     *, window: int = 0,
+                     policy: ops.KernelPolicy = ops.DEFAULT_POLICY,
+                     constrain=None):
+    """Paged analogue of ``gqa_verify``: per-request ``pos`` (B,), shared
+    page pools committed through ``pos[b] - 1``.  The pending rows are
+    returned for a masked per-slot commit — pools stay untouched here."""
+    adt = x.dtype
+    k_pages, v_pages = cache_kv
+    Q = x.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(adt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(adt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(adt))
+    posq = jnp.asarray(pos)[:, None] + jnp.arange(Q)[None, :]  # (B, Q)
+    q = common.apply_rope_partial(q, posq, cfg.rope_theta, cfg.rope_fraction)
+    k = common.apply_rope_partial(k, posq, cfg.rope_theta, cfg.rope_fraction)
+    scale = cfg.query_scale or cfg.resolved_head_dim ** -0.5
+    o = ops.paged_verify_attention(q, k_pages, v_pages, k, v, block_tables,
+                                   pos, window=window,
+                                   logit_cap=cfg.attn_logit_softcap,
+                                   scale=scale, policy=policy)
+    o = _mask_padded_heads(o, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
+    return out, (k, v)
+
+
 # ==========================================================================
 # MLA (DeepSeek-V2)
 # ==========================================================================

@@ -595,6 +595,143 @@ def _paged_decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx,
     return logits, new_cache
 
 
+def supports_speculative(cfg: ModelConfig) -> bool:
+    """Speculative verify covers the GQA attention families (dense / MoE /
+    local-global / sliding-window).  SSM recurrence would need per-step
+    state snapshots to roll back, MLA decode runs an absorbed custom path,
+    multi-codebook drafts would have to match on every codebook, and the
+    hybrid shared block carries its own cache — all follow-ons, rejected
+    loudly for now."""
+    return (not cfg.uses_ssm and not cfg.use_mla and not cfg.n_codebooks
+            and not cfg.first_dense_layers
+            and not (cfg.family == "hybrid" and cfg.hybrid_attn_every))
+
+
+def _block_verify(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *,
+                  window: int, block_tables: jax.Array | None = None):
+    """_block_decode's speculative sibling: scores the whole fed block in
+    one cache sweep and returns this layer's *pending* k/v rows instead of
+    writing the cache."""
+    h = _norm(x, blk["norm1"], cfg)
+    if block_tables is not None:
+        a, kv_new = attn.gqa_verify_paged(blk["attn"], h, pos,
+                                          (c["k"], c["v"]), block_tables,
+                                          cfg, window=window,
+                                          policy=ctx.kernel_policy,
+                                          constrain=ctx.constrain)
+    else:
+        a, kv_new = attn.gqa_verify(blk["attn"], h, pos, (c["k"], c["v"]),
+                                    cfg, window=window,
+                                    policy=ctx.kernel_policy,
+                                    constrain=ctx.constrain)
+    if cfg.post_norms:
+        a = _norm(a, blk["post_attn_norm"], cfg)
+    x = x + a
+    h = _norm(x, blk["norm2"], cfg)
+    if "router" in blk["ffn"]:
+        f, _ = moe_forward(blk["ffn"], h, cfg, ctx.parallel,
+                           constrain=ctx.constrain)
+    else:
+        f = mlp_forward(blk["ffn"], h, cfg, constrain=ctx.constrain)
+    if cfg.post_norms:
+        f = _norm(f, blk["post_ffn_norm"], cfg)
+    return x + f, {"k": kv_new[0], "v": kv_new[1]}
+
+
+def verify_step(params, cache, tokens, cfg: ModelConfig,
+                ctx: RunCtx = RunCtx()):
+    """Score ``Q = K+1`` speculative tokens in ONE cache sweep.
+
+    tokens: (B, Q) — the fed block [t_last, d_1..d_K] at positions
+    ``pos .. pos+Q-1``.  Returns (logits (B, Q, V), pending) where
+    ``pending`` mirrors ``cache['units']`` with per-layer candidate k/v
+    rows of shape (n_units, B, Q, Hkv, hd) — NOTHING is committed past the
+    accepted prefix until :func:`commit_spec` / :func:`commit_spec_paged`
+    scatters rows ``0..n_accept`` and advances ``pos``.  Both cache
+    layouts share this seam, discriminated by pytree structure exactly
+    like ``decode_step``."""
+    if not supports_speculative(cfg):
+        raise ValueError(f"{cfg.name}: speculative decode supports dense "
+                         "GQA families only (no ssm/mla/codebooks/hybrid)")
+    paged = "block_tables" in cache
+    pos = cache["pos"]                  # () ring | (B,) paged
+    bt = cache.get("block_tables")
+    x = embed_tokens(params, tokens, cfg, ctx)
+
+    def body(x, xs):
+        unit, c_unit = xs
+        pend = {}
+        for i in range(unit_size(cfg)):
+            sub, c = unit[f"sub{i}"], c_unit[f"sub{i}"]
+            window = 0 if paged else cfg.window_for_layer(i)
+            x, p = _block_verify(sub, x, pos, c, cfg, ctx, window=window,
+                                 block_tables=bt)
+            pend[f"sub{i}"] = p
+        return x, pend
+
+    x, pending = jax.lax.scan(body, x, (params["layers"], cache["units"]))
+    x = _norm(x, params["final_norm"], cfg)
+    logits = lm_logits(params, x, cfg, ctx)
+    return logits, pending
+
+
+def commit_spec(cache, pending, n_accept, cfg: ModelConfig):
+    """Commit the accepted prefix of a verify step into the ring cache.
+
+    ``pending`` holds rows for the fed block [t_last, d_1..d_K]; rows
+    ``0..n_accept`` (t_last plus the accepted drafts) scatter into slots
+    ``(pos + i) % C`` and ``pos`` advances by ``n_accept + 1``.  Rejected
+    rows route to an out-of-bounds slot and are dropped — the ring's
+    history is never touched past the accepted prefix, so there is nothing
+    to roll back.  ``n_accept`` is a traced scalar: ONE executable serves
+    every acceptance pattern inside the fused scan."""
+    pos = cache["pos"]
+    new_units = {}
+    for name, c in cache["units"].items():
+        pend = pending[name]
+        Q = pend["k"].shape[2]
+        C = c["k"].shape[2]
+        i = jnp.arange(Q)
+        slots = jnp.where(i <= n_accept, (pos + i) % C, C)   # C is OOB
+        new_units[name] = {
+            key: c[key].at[:, :, slots].set(
+                pend[key].astype(c[key].dtype), mode="drop")
+            for key in ("k", "v")}
+    return {"pos": pos + n_accept + 1, "units": new_units}
+
+
+def commit_spec_paged(cache, pending, n_accept, active, cfg: ModelConfig):
+    """Paged commit: per-slot accepted counts (B,) — every engine slot
+    keeps its own prefix.  Accepted rows scatter through the block table
+    into the shared pools; rejected or inactive rows route out of bounds
+    and drop.  Parked slots neither write nor advance."""
+    pos = cache["pos"]                                       # (B,)
+    bt = cache["block_tables"]
+    new_units = {}
+    for name, c in cache["units"].items():
+        pend = pending[name]
+        nu, B, Q = pend["k"].shape[0], pend["k"].shape[1], pend["k"].shape[2]
+        P, ps = c["k"].shape[1], c["k"].shape[2]
+        i = jnp.arange(Q)[None, :]                           # (1, Q)
+        posq = pos[:, None] + i                              # (B, Q)
+        page = jnp.take_along_axis(bt, jnp.minimum(posq // ps,
+                                                   bt.shape[1] - 1), axis=1)
+        row = page * ps + posq % ps
+        ok = (i <= n_accept[:, None]) & (active[:, None] > 0)
+        rows = jnp.where(ok, row, P * ps).reshape(-1)        # OOB dropped
+        new = {}
+        for key in ("k", "v"):
+            pool = c[key]                                    # (nu, P, ps, h, d)
+            flat = pool.reshape(nu, P * ps, *pool.shape[3:])
+            flat = flat.at[:, rows].set(
+                pend[key].astype(flat.dtype).reshape(
+                    nu, B * Q, *pend[key].shape[3:]), mode="drop")
+            new[key] = flat.reshape(pool.shape)
+        new_units[name] = new
+    adv = jnp.where(active > 0, n_accept + 1, 0)
+    return {"pos": pos + adv, "block_tables": bt, "units": new_units}
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(),
                 *, active: jax.Array | None = None):
     """One decode step: tokens (B, 1) [or (B, 1, n_cb)] + cache -> logits,

@@ -1,11 +1,19 @@
-"""Distributed runtime: sharding rules, step builders, fault tolerance,
-gradient compression."""
+"""Distributed runtime: sharding rules, step builders, speculative
+decoding drafters, fault tolerance, gradient compression."""
 from repro.runtime.sharding import (ShardingRules, batch_sharding,
                                     build_rules, cache_sharding)
+from repro.runtime.speculate import (Drafter, NgramDrafter, RepeatDrafter,
+                                     ReplayDrafter, get_drafter)
 from repro.runtime.steps import (StepConfig, init_train_state,
                                  make_decode_loop, make_prefill_step,
-                                 make_serve_step, make_train_step)
+                                 make_serve_step,
+                                 make_speculative_decode_loop,
+                                 make_paged_speculative_decode_loop,
+                                 make_train_step)
 
 __all__ = ["ShardingRules", "build_rules", "batch_sharding", "cache_sharding",
            "StepConfig", "init_train_state", "make_train_step",
-           "make_prefill_step", "make_serve_step", "make_decode_loop"]
+           "make_prefill_step", "make_serve_step", "make_decode_loop",
+           "make_speculative_decode_loop", "make_paged_speculative_decode_loop",
+           "Drafter", "NgramDrafter", "RepeatDrafter", "ReplayDrafter",
+           "get_drafter"]

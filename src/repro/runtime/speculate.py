@@ -1,0 +1,210 @@
+"""Drafters for speculative decoding on the fused serving loop.
+
+A drafter proposes ``K`` candidate tokens per verify step; the target model
+scores all ``K+1`` (carried token + drafts) in ONE KV-cache sweep
+(``transformer.verify_step``) and keeps the longest matching prefix.  Decode
+is memory-bound — J/token is dominated by bytes moved, not FLOPs — so every
+accepted draft amortises a whole cache+weight sweep that the plain loop
+would have paid again (PAPER.md Sec IV: the "do more per Watt" lever).
+
+Drafters are *deterministic and host-free*: ``propose``/``observe`` are jax
+functions whose state pytree lives in the fused loop's ``lax.scan`` carry,
+so speculation adds zero host round-trips.  The interface doubles as the
+draft-model hook — a learned drafter plugs in by implementing ``propose``
+against its own state (e.g. a distilled model's cache) without touching the
+loop.
+
+Built-ins:
+
+  * ``NgramDrafter``  — prompt-lookup / n-gram self-drafting (no second
+    model): find the most recent earlier occurrence of the last committed
+    token in the request's history and propose the tokens that followed it.
+    Strong on the repetitive streams LLM serving actually sees (code, RAG
+    quotes, chat boilerplate) and exactly free otherwise.
+  * ``RepeatDrafter`` — proposes the last token K times; the degenerate
+    baseline (and a rejection-path stress test).
+  * ``ReplayDrafter`` — replays a recorded stream; acceptance is 1.0 by
+    construction iff verify/commit are exact, which makes it both the CI
+    canary and the ideal-acceptance upper bound for K sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Drafter:
+    """Deterministic drafter driving the speculative decode loop.
+
+    State is a pytree of arrays with a leading batch dim: it rides in the
+    jitted loop's carry (device side) and the serving engine mirrors it
+    host-side per slot (``init_state`` / ``seed_row``), exactly like the
+    paged cache's ``pos``/``block_tables``.
+    """
+
+    spec_k: int
+
+    # -- host side ----------------------------------------------------------
+    def init_state(self, batch: int) -> dict[str, np.ndarray]:
+        """Fresh per-batch state (numpy: the engine mutates rows on join)."""
+        raise NotImplementedError
+
+    def seed_row(self, state: dict[str, np.ndarray], row: int,
+                 tokens) -> None:
+        """Fold a token stream (prompt + first sampled token) into one
+        row of a host-side state — called by the engine at prefill-on-join
+        and to reset a slot on finish."""
+        raise NotImplementedError
+
+    def seed_request(self, state: dict[str, np.ndarray], row: int,
+                     prompt, first) -> None:
+        """Canonical per-request seeding: the request's prompt followed by
+        the prefill-sampled first token — what every caller (engine join,
+        launcher, benchmarks, tests) must feed ``seed_row`` so the first
+        verify step can already look up prompt n-grams."""
+        self.seed_row(state, row, np.concatenate(
+            [np.asarray(prompt).reshape(-1), np.asarray(first).reshape(-1)]))
+
+    def seed_batch(self, state: dict[str, np.ndarray], prompts,
+                   firsts) -> None:
+        """``seed_request`` over every row of a fixed batch."""
+        for b in range(len(prompts)):
+            self.seed_request(state, b, prompts[b], firsts[b])
+
+    # -- device side (jax-traceable) ----------------------------------------
+    def propose(self, state, last: jax.Array) -> jax.Array:
+        """(B,) last committed token -> (B, K) draft tokens."""
+        raise NotImplementedError
+
+    def observe(self, state, block: jax.Array, count: jax.Array):
+        """Fold the emitted tokens back into the state.  ``block`` is the
+        (B, K+1) emitted block, ``count`` (broadcastable to (B,)) how many
+        leading entries are real; returns the updated state."""
+        raise NotImplementedError
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup self-drafting over a per-request token history ring.
+
+    ``propose`` finds the most recent *earlier* occurrence of the last
+    committed token in the history (prompt + everything emitted) and
+    proposes the ``K`` tokens that followed it; with no match it degrades
+    to repeating the last token.  O(hist_len) compares per step — noise
+    next to one transformer sweep."""
+
+    def __init__(self, spec_k: int, hist_len: int = 128):
+        if hist_len < spec_k + 2:
+            raise ValueError(f"hist_len {hist_len} too small for K={spec_k}")
+        self.spec_k = int(spec_k)
+        self.hist_len = int(hist_len)
+
+    def init_state(self, batch: int) -> dict[str, np.ndarray]:
+        return {"hist": np.full((batch, self.hist_len), -1, np.int32),
+                "cnt": np.zeros((batch,), np.int32)}
+
+    def seed_row(self, state, row: int, tokens) -> None:
+        H = self.hist_len
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        state["hist"][row] = -1
+        # token with stream index i lives at slot i % H (ring)
+        for i, t in enumerate(toks[-H:] if len(toks) > H else toks):
+            base = max(len(toks) - H, 0)
+            state["hist"][row, (base + i) % H] = t
+        state["cnt"][row] = len(toks)
+
+    def propose(self, state, last: jax.Array) -> jax.Array:
+        hist, cnt = state["hist"], state["cnt"]
+        H, K = self.hist_len, self.spec_k
+        c0 = jnp.remainder(cnt - 1, H)                       # newest slot
+        idx = jnp.arange(H)[None, :]
+        age = jnp.remainder(c0[:, None] - idx, H)            # 0 = newest
+        n_valid = jnp.minimum(cnt, H)[:, None]
+        match = (age >= 1) & (age < n_valid) & (hist == last[:, None])
+        best = jnp.min(jnp.where(match, age, H + 1), axis=1)  # (B,)
+        found = best <= H
+        f_age = best[:, None] - 1 - jnp.arange(K)[None, :]   # followers
+        f_slot = jnp.remainder(c0[:, None] - f_age, H)
+        cand = jnp.take_along_axis(hist, f_slot, axis=1)
+        return jnp.where(found[:, None] & (f_age >= 0), cand,
+                         last[:, None]).astype(jnp.int32)
+
+    def observe(self, state, block: jax.Array, count: jax.Array):
+        hist, cnt = state["hist"], state["cnt"]
+        H = self.hist_len
+        count = jnp.broadcast_to(jnp.asarray(count, jnp.int32), cnt.shape)
+        rows = jnp.arange(hist.shape[0])
+        for i in range(block.shape[1]):                      # K+1 is tiny
+            slot = jnp.remainder(cnt + i, H)
+            cur = hist[rows, slot]
+            hist = hist.at[rows, slot].set(
+                jnp.where(i < count, block[:, i], cur))
+        return {"hist": hist, "cnt": cnt + count}
+
+
+class RepeatDrafter(Drafter):
+    """Proposes the last committed token K times — the degenerate
+    self-drafter.  Perfect on constant streams, rejected otherwise; its
+    real job is stressing the rejection/rollback path."""
+
+    def __init__(self, spec_k: int):
+        self.spec_k = int(spec_k)
+
+    def init_state(self, batch: int) -> dict[str, np.ndarray]:
+        return {"_": np.zeros((batch,), np.int32)}           # pytree placeholder
+
+    def seed_row(self, state, row: int, tokens) -> None:
+        pass
+
+    def propose(self, state, last: jax.Array) -> jax.Array:
+        return jnp.tile(last[:, None], (1, self.spec_k)).astype(jnp.int32)
+
+    def observe(self, state, block, count):
+        return state
+
+
+class ReplayDrafter(Drafter):
+    """Replays a pre-recorded token stream as drafts.
+
+    If the stream is the target model's own greedy output, every draft
+    matches and acceptance is exactly 1.0 — *provided* verify/commit are
+    bit-exact.  Any masking, commit, or rollback bug shows up as acceptance
+    < 1.0, which is what the CI benchmark smoke asserts on."""
+
+    def __init__(self, spec_k: int, stream: np.ndarray):
+        self.spec_k = int(spec_k)
+        self.stream = np.asarray(stream, np.int32)           # (B, L)
+
+    def init_state(self, batch: int) -> dict[str, np.ndarray]:
+        if batch != self.stream.shape[0]:
+            raise ValueError("replay stream batch mismatch")
+        return {"stream": self.stream.copy(),
+                "ptr": np.zeros((batch,), np.int32)}
+
+    def seed_row(self, state, row: int, tokens) -> None:
+        pass
+
+    def propose(self, state, last: jax.Array) -> jax.Array:
+        stream, ptr = state["stream"], state["ptr"]
+        L = stream.shape[1]
+        idx = ptr[:, None] + jnp.arange(self.spec_k)[None, :]
+        cand = jnp.take_along_axis(stream, jnp.minimum(idx, L - 1), axis=1)
+        return jnp.where(idx < L, cand, last[:, None]).astype(jnp.int32)
+
+    def observe(self, state, block, count):
+        count = jnp.broadcast_to(jnp.asarray(count, jnp.int32),
+                                 state["ptr"].shape)
+        # the emitted block's first `count` tokens ARE the replayed stream
+        # when acceptance is perfect; on divergence the pointer still moves
+        # with the committed position so drafts stay aligned to depth
+        return {"stream": state["stream"], "ptr": state["ptr"] + count}
+
+
+def get_drafter(name: str, spec_k: int, *, hist_len: int = 128) -> Drafter:
+    """CLI / engine factory for the built-in self-drafters."""
+    if name == "ngram":
+        return NgramDrafter(spec_k, hist_len=hist_len)
+    if name == "repeat":
+        return RepeatDrafter(spec_k)
+    raise ValueError(f"unknown drafter {name!r} (replay is test-only: "
+                     "construct ReplayDrafter with a recorded stream)")

@@ -1,7 +1,8 @@
 """Step builders: train_step (grad-accum microbatching + AdamW), prefill_step,
 serve_step (one decode token), decode_loop (a whole multi-token block in one
-lax.scan).  These are the functions the launcher jits with in/out shardings
-and the dry-run lowers.
+lax.scan), and the speculative loops (K+1-token verify sweeps with in-scan
+draft -> accept -> commit).  These are the functions the launcher jits with
+in/out shardings and the dry-run lowers.
 
 Overlap strategy: gradients are accumulated over ``n_micro`` microbatches
 inside a lax.scan; the cross-replica psum XLA inserts for the DP axes then
@@ -205,6 +206,169 @@ def make_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
                                  temperature=temperature)
 
     return decode_loop
+
+
+def _spec_accept_greedy(logits, drafts):
+    """Greedy exact-match acceptance: per-row accepted-draft counts.
+
+    logits: (B, Q, V) for the fed block [t_last, d_1..d_K]; row i scores
+    the token AFTER position pos+i.  Draft d_{i+1} is accepted iff it
+    equals argmax(row i) AND every earlier draft was accepted — the
+    emitted block is then argmax rows 0..a (accepted drafts + the free
+    "bonus" token), which is exactly the plain greedy stream."""
+    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # (B, Q)
+    match = (drafts == g[:, :-1]).astype(jnp.int32)          # (B, K)
+    acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)        # (B,)
+    return g, acc
+
+
+def _spec_accept_sample(logits, drafts, acc_flags, a_vec, key, temperature):
+    """Temperature rejection-sampling acceptance for point-mass (deterministic)
+    drafters, per Leviathan et al.: accept d_{i+1} with probability
+    p(d_{i+1}); at the first rejection resample from the residual
+    max(0, p - q) (= p with the rejected draft's mass removed); when all K
+    drafts survive, sample the bonus token from the last row.  Returns the
+    emitted block with the correction/bonus token spliced in at ``a_vec``.
+
+    The target distribution is preserved exactly — rejected drafts cost
+    compute (charged as overhead in J/accepted-token) but never bias the
+    stream."""
+    B, Q, V = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+    p_base = jnp.take_along_axis(
+        probs, a_vec[:, None, None], axis=1)[:, 0]           # (B, V) row a
+    d_pad = jnp.concatenate([drafts, drafts[:, -1:]], axis=1)  # (B, Q)
+    d_at = jnp.take_along_axis(d_pad, a_vec[:, None], axis=1)[:, 0]
+    is_bonus = a_vec == Q - 1
+    # was row a_vec's draft itself accepted?  (ring lockstep can truncate a
+    # row below its own acceptance count — the accepted draft IS a valid
+    # sample from p and must be emitted, not resampled)
+    f_pad = jnp.concatenate(
+        [acc_flags, jnp.zeros((B, 1), acc_flags.dtype)], axis=1)
+    accepted_here = jnp.take_along_axis(
+        f_pad, a_vec[:, None], axis=1)[:, 0] > 0
+    onehot = jax.nn.one_hot(d_at, V, dtype=probs.dtype)
+    dist = jnp.where(is_bonus[:, None], p_base, p_base * (1.0 - onehot))
+    samp = jax.random.categorical(key, jnp.log(dist + 1e-30), axis=-1)
+    last_tok = jnp.where(is_bonus | ~accepted_here, samp,
+                         d_at).astype(jnp.int32)
+    emit = jnp.where(jnp.arange(Q)[None, :] == a_vec[:, None],
+                     last_tok[:, None], d_pad)
+    return emit
+
+
+def _spec_loop_impl(params, cache, tokens, active, dstate, key, *, cfg, ctx,
+                    drafter, n_steps, greedy, temperature, per_slot):
+    """Shared speculative-loop body: ``n_steps`` x (draft -> verify ->
+    accept -> commit) entirely inside ONE ``lax.scan``.  ``per_slot`` keeps
+    per-row accepted counts (paged layout: every slot sits at its own
+    depth); the ring layout's scalar ``pos`` forces the batch to advance in
+    lockstep, so acceptance truncates to the batch minimum — still exact,
+    just conservative (B=1 serving pays nothing)."""
+    K = drafter.spec_k
+    Q = K + 1
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, n_steps)    # cheap; unused rows DCE'd when greedy
+
+    def body(carry, key_t):
+        cache, tok, dstate = carry
+        drafts = drafter.propose(dstate, tok[:, 0])          # (B, K)
+        block = jnp.concatenate([tok, drafts], axis=1)       # (B, Q)
+        logits, pending = tfm.verify_step(params, cache, block, cfg, ctx)
+        if greedy:
+            g, acc = _spec_accept_greedy(logits, drafts)
+        else:
+            probs = jax.nn.softmax(
+                logits.astype(jnp.float32) / temperature, axis=-1)
+            p_draft = jnp.take_along_axis(
+                probs[:, :-1], drafts[..., None], axis=-1)[..., 0]  # (B, K)
+            k_acc, k_emit = jax.random.split(key_t)
+            u = jax.random.uniform(k_acc, p_draft.shape)
+            ok = (u < p_draft).astype(jnp.int32)
+            acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)   # (B,)
+        if per_slot:
+            a_vec = acc
+        else:
+            a_vec = jnp.broadcast_to(jnp.min(acc), acc.shape)
+        if greedy:
+            emit = g
+        else:
+            emit = _spec_accept_sample(logits, drafts, ok, a_vec, k_emit,
+                                       temperature)
+        counts = a_vec + 1
+        if per_slot:
+            counts = jnp.where(active > 0, counts, 0)
+            cache = tfm.commit_spec_paged(cache, pending, a_vec, active, cfg)
+        else:
+            cache = tfm.commit_spec(cache, pending, a_vec[0], cfg)
+        dstate = drafter.observe(dstate, emit, counts)
+        tok_next = jnp.take_along_axis(emit, a_vec[:, None], axis=1)
+        return (cache, tok_next, dstate), (emit, counts)
+
+    (cache, _, dstate), (toks, counts) = jax.lax.scan(
+        body, (cache, tokens, dstate), keys, length=n_steps)
+    # (n_steps, B, Q) -> (B, n_steps, Q); counts (n_steps, B) -> (B, n_steps)
+    return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(counts, 0, 1), cache, dstate
+
+
+def make_speculative_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
+                                 rules: ShardingRules | None = None,
+                                 n_steps: int = 8, *, drafter,
+                                 greedy: bool = True,
+                                 temperature: float = 1.0) -> Callable:
+    """spec_loop(params, cache, tokens, drafter_state, key=None)
+    -> (token_blocks (B, n_steps, K+1), counts (B, n_steps), cache, state).
+
+    The fused decode loop's speculative sibling over the ring cache:
+    ``n_steps`` verify steps, each scoring K+1 tokens in ONE cache sweep
+    (draft -> verify -> accept -> commit, all in-scan, zero host traffic).
+    ``counts[:, s]`` is step s's emitted-token count (accepted drafts + 1);
+    only the first ``counts`` entries of each block are real — greedy
+    emission is bit-identical to ``make_decode_loop``'s stream, just
+    delivered up to K+1 tokens per sweep.  The ring's scalar ``pos``
+    advances the batch in lockstep (acceptance truncates to the batch
+    minimum); the paged variant keeps per-slot counts.  Jit with
+    ``donate_argnums`` on the cache, as with the plain loop."""
+    ctx = make_run_ctx(cfg, rules, step_cfg)
+    if not tfm.supports_speculative(cfg):
+        raise ValueError(f"{cfg.name}: speculative decode supports dense "
+                         "GQA families only (no ssm/mla/codebooks/hybrid)")
+
+    def spec_loop(params, cache, tokens, drafter_state, key=None):
+        return _spec_loop_impl(params, cache, tokens, None, drafter_state,
+                               key, cfg=cfg, ctx=ctx, drafter=drafter,
+                               n_steps=n_steps, greedy=greedy,
+                               temperature=temperature, per_slot=False)
+
+    return spec_loop
+
+
+def make_paged_speculative_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
+                                       rules: ShardingRules | None = None,
+                                       n_steps: int = 8, *, drafter,
+                                       greedy: bool = True,
+                                       temperature: float = 1.0) -> Callable:
+    """spec_loop(params, cache, tokens, active, drafter_state, key=None)
+    -> (token_blocks (B, n_steps, K+1), counts (B, n_steps), cache, state)
+    over the *paged* cache layout — the serving engine's speculative inner
+    loop.  ``pos`` is per-slot, so every slot keeps its own accepted
+    prefix: the engine's harvest consumes a variable number of tokens per
+    slot per step.  Parked slots verify scratch garbage (fixed grid, one
+    executable) but neither commit nor advance, and their counts are 0."""
+    ctx = make_run_ctx(cfg, rules, step_cfg)
+    if not tfm.supports_speculative(cfg):
+        raise ValueError(f"{cfg.name}: speculative decode supports dense "
+                         "GQA families only (no ssm/mla/codebooks/hybrid)")
+
+    def spec_loop(params, cache, tokens, active, drafter_state, key=None):
+        return _spec_loop_impl(params, cache, tokens,
+                               jnp.asarray(active, jnp.int32), drafter_state,
+                               key, cfg=cfg, ctx=ctx, drafter=drafter,
+                               n_steps=n_steps, greedy=greedy,
+                               temperature=temperature, per_slot=True)
+
+    return spec_loop
 
 
 def make_paged_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,

@@ -19,6 +19,14 @@ passes an ``on_chunk`` hook that receives per-chunk :class:`ChunkStats`
 chunk's energy in joules (or ``None``).  Energy is attributed to requests
 in proportion to their *kept* tokens, so J/token charges only occupied
 slots — utilisation-honest under partial occupancy.
+
+Speculative mode (``EngineConfig.spec_k > 0``): each chunk iteration
+becomes a K+1-token verify step (draft -> verify -> accept -> commit,
+in-scan, per-slot accepted counts — see docs/speculative_decoding.md), the
+harvest consumes a *variable* number of tokens per slot per step, and the
+report adds acceptance rate and J per *accepted* token, with rejected
+drafts' compute charged as overhead.  The per-slot drafter history is one
+more host mirror, seeded at prefill-on-join.
 """
 from __future__ import annotations
 
@@ -31,7 +39,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tfm
+from repro.runtime.speculate import get_drafter
 from repro.runtime.steps import (StepConfig, make_paged_decode_loop,
+                                 make_paged_speculative_decode_loop,
                                  make_run_ctx)
 from repro.serving.paged_kv import PagedKVCache
 from repro.serving.request import Request, RequestResult
@@ -51,6 +61,11 @@ class EngineConfig:
     sample_seed: int = 0
     cache_dtype: str = "bfloat16"
     min_prefill_bucket: int = 8   # prompts pad up to pow2 buckets >= this
+    # speculative decoding: >0 turns each chunk iteration into a K+1-token
+    # verify step (draft -> verify -> accept in-scan, per-slot counts)
+    spec_k: int = 0
+    drafter: str = "ngram"        # ngram | repeat (self-drafters)
+    drafter_hist: int = 128       # ngram lookup history per slot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,12 +76,18 @@ class ChunkStats:
     n_slots: int
     n_active: int                 # slots holding a live request
     tokens_kept: int              # useful tokens harvested this chunk
-    tokens_computed: int          # n_active * chunk (incl. overrun)
+    tokens_computed: int          # n_active * chunk * (K+1) (incl. overrun)
+    drafts_proposed: int = 0      # speculative mode only
+    drafts_accepted: int = 0
 
 
 @dataclasses.dataclass
 class EngineReport:
-    """Run summary + per-request results."""
+    """Run summary + per-request results.
+
+    Ratio properties are guarded against empty runs (zero requests, zero
+    kept tokens, zero wall) — they return 0.0 rather than leaking NaN /
+    inf into benchmark CSVs."""
     results: list[RequestResult]
     n_chunks: int = 0
     decode_wall_s: float = 0.0
@@ -75,21 +96,55 @@ class EngineReport:
     tokens_computed: int = 0
     energy_j: float = 0.0
     occupancy: float = 0.0        # mean active/slots over chunks
+    spec_k: int = 0               # 0 = plain decode
+    drafts_proposed: int = 0
+    drafts_accepted: int = 0
 
     @property
     def tok_per_s(self) -> float:
-        return self.tokens_kept / max(self.decode_wall_s, 1e-9)
+        if self.tokens_kept <= 0 or self.decode_wall_s <= 0.0:
+            return 0.0
+        return self.tokens_kept / self.decode_wall_s
 
     @property
     def j_per_token(self) -> float:
         """Charges only tokens actually served — under partial occupancy
-        this is the honest (higher) figure."""
-        return self.energy_j / max(self.tokens_kept, 1)
+        this is the honest (higher) figure.  In speculative mode the kept
+        tokens are the *accepted* ones, so rejected drafts' compute lands
+        here as overhead (see ``j_per_accepted_token``)."""
+        if self.tokens_kept <= 0:
+            return 0.0
+        return self.energy_j / self.tokens_kept
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted / proposed drafts (0.0 when not speculating)."""
+        if self.drafts_proposed <= 0:
+            return 0.0
+        return self.drafts_accepted / self.drafts_proposed
+
+    @property
+    def j_per_accepted_token(self) -> float:
+        """The speculative serving figure of merit: every kept token is an
+        accepted draft or the verify step's bonus token, and the chunk's
+        full energy — including the sweeps spent scoring rejected drafts —
+        is in the numerator.  Identical to ``j_per_token`` by construction;
+        named so reports say what is being charged."""
+        return self.j_per_token
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Mean useful tokens per slot-step — the effective-throughput
+        multiplier admission control should see under speculation."""
+        if self.n_chunks <= 0 or self.tokens_computed <= 0:
+            return 0.0
+        steps = self.tokens_computed / max(self.spec_k + 1, 1)
+        return self.tokens_kept / max(steps, 1e-9)
 
     def latency_percentiles(self, qs=(50, 95)) -> dict[int, float]:
         lats = [r.latency_steps for r in self.results if r.finish_step >= 0]
         if not lats:
-            return {q: float("nan") for q in qs}
+            return {q: 0.0 for q in qs}    # no finished requests: keep CSVs finite
         return {q: float(np.percentile(lats, q)) for q in qs}
 
 
@@ -141,14 +196,33 @@ class ServeEngine:
         self._injects: dict[int, object] = {}    # bucket -> compiled inject
         self._pos = np.zeros((engine_cfg.n_slots,), np.int32)
         self._sample_key = jax.random.PRNGKey(engine_cfg.sample_seed)
+        self._drafter = None
+        self._dstate = None
+        if engine_cfg.spec_k > 0:
+            if not tfm.supports_speculative(cfg):
+                raise ValueError(f"{cfg.name}: speculative serving needs a "
+                                 "dense GQA family")
+            self._drafter = get_drafter(engine_cfg.drafter, engine_cfg.spec_k,
+                                        hist_len=engine_cfg.drafter_hist)
+            # host mirror of the per-slot drafter state, synced like
+            # pos/block_tables: seeded at prefill-on-join, carried through
+            # the fused loop, read back at harvest
+            self._dstate = self._drafter.init_state(engine_cfg.n_slots)
 
     # -- compiled pieces (AOT so compile time never lands in measured walls) -
     def _chunk_loop(self, *args):
         if self._loop is None:
-            fn = jax.jit(make_paged_decode_loop(
-                self.cfg, self.step_cfg, self.rules, self.ecfg.decode_chunk,
-                greedy=self.ecfg.greedy, temperature=self.ecfg.temperature),
-                donate_argnums=(1,))
+            if self._drafter is not None:
+                fn = jax.jit(make_paged_speculative_decode_loop(
+                    self.cfg, self.step_cfg, self.rules,
+                    self.ecfg.decode_chunk, drafter=self._drafter,
+                    greedy=self.ecfg.greedy,
+                    temperature=self.ecfg.temperature), donate_argnums=(1,))
+            else:
+                fn = jax.jit(make_paged_decode_loop(
+                    self.cfg, self.step_cfg, self.rules,
+                    self.ecfg.decode_chunk, greedy=self.ecfg.greedy,
+                    temperature=self.ecfg.temperature), donate_argnums=(1,))
             self._loop = fn.lower(*args).compile()
         return self._loop
 
@@ -217,6 +291,8 @@ class ServeEngine:
         rows = jnp.asarray(self.kv.inject_rows(slot, bucket, L))
         self.cache = self._inject(bucket)(self.cache, pcache["units"], rows)
         self._pos[slot] = L
+        if self._drafter is not None:
+            self._drafter.seed_request(self._dstate, slot, req.prompt, first)
         state = self.scheduler.slots[slot]
         state.next_token = first
         res = self._results[req.rid]
@@ -237,27 +313,45 @@ class ServeEngine:
 
     # -- harvest -------------------------------------------------------------
     def _harvest(self, toks: np.ndarray, t0: float) -> dict[int, int]:
+        """Plain harvest — exactly the speculative harvest where every step
+        yielded one token.  toks: (n_slots, chunk[, n_cb])."""
+        counts = np.ones(toks.shape[:2], np.int32)
+        return self._harvest_spec(toks[:, :, None], counts, t0)
+
+    def _harvest_spec(self, toks: np.ndarray, counts: np.ndarray,
+                      t0: float) -> dict[int, int]:
         """Append each active slot's kept tokens, finish on EOS / budget.
-        Returns kept (useful) token counts per request id for this chunk —
-        the energy-attribution weights."""
+
+        Each step yields ``counts[slot, s]`` tokens (1 on the plain path;
+        accepted drafts + the bonus token, 1..K+1, when speculating) —
+        consumed in order at chunk granularity.  Returns kept (useful)
+        token counts per request id for this chunk — the
+        energy-attribution weights.  toks: (n_slots, steps, K+1[, n_cb])."""
         kept_by_rid: dict[int, int] = {}
         for slot in self.scheduler.active_slots():
             state = self.scheduler.slots[slot]
             req = state.request
             res = self._results[req.rid]
             kept = 0
-            for i in range(min(state.remaining, toks.shape[1])):
-                t = toks[slot, i]
-                res.tokens.append(t.tolist() if t.ndim else int(t))
-                kept += 1
-                if req.eos_id is not None and t.ndim == 0 \
-                        and int(t) == req.eos_id:
-                    res.finish_reason = "eos"
+            budget = state.remaining
+            for s in range(toks.shape[1]):
+                if res.finish_reason == "eos" or kept >= budget:
                     break
+                for i in range(int(counts[slot, s])):
+                    t = toks[slot, s, i]
+                    res.tokens.append(t.tolist() if t.ndim else int(t))
+                    kept += 1
+                    if req.eos_id is not None and t.ndim == 0 \
+                            and int(t) == req.eos_id:
+                        res.finish_reason = "eos"
+                        break
+                    if kept >= budget:
+                        break
             kept_by_rid[req.rid] = kept
             state.remaining = 0 if res.finish_reason == "eos" \
                 else state.remaining - kept
-            state.next_token = toks[slot, -1]     # feeds the next chunk
+            # the loop's carried token: last emitted token of the last step
+            state.next_token = toks[slot, -1, max(int(counts[slot, -1]) - 1, 0)]
             if state.remaining == 0:
                 res.finish_reason = res.finish_reason or "max_new_tokens"
                 res.finish_step = self._now + self.ecfg.decode_chunk
@@ -274,7 +368,7 @@ class ServeEngine:
             rid=r.rid, prompt_len=r.prompt_len, arrival_step=r.arrival_step,
             max_new_tokens=r.max_new_tokens) for r in requests}
         self._now = 0
-        report = EngineReport(results=[])
+        report = EngineReport(results=[], spec_k=ecfg.spec_k)
         occ_sum = 0.0
         t0 = time.perf_counter()
         n_cb = self.cfg.n_codebooks
@@ -312,34 +406,59 @@ class ServeEngine:
             self.cache = {**self.cache,
                           "pos": jnp.asarray(self._pos),
                           "block_tables": jnp.asarray(self.kv.tables)}
+            spec = self._drafter is not None
             args = [self.params, self.cache, jnp.asarray(tok_in),
                     jnp.asarray(active)]
+            if spec:
+                args.append({k: jnp.asarray(v)
+                             for k, v in self._dstate.items()})
             if not ecfg.greedy:
                 # even namespace: first-token keys live at (rid << 1) | 1
                 args.append(jax.random.fold_in(self._sample_key,
                                                chunk_idx << 1))
             loop = self._chunk_loop(*args)
             t_c = time.perf_counter()
-            toks, self.cache = loop(*args)
-            toks = np.asarray(jax.block_until_ready(toks))
+            if spec:
+                toks, counts, self.cache, dstate = loop(*args)
+                toks = np.asarray(jax.block_until_ready(toks))
+                counts = np.asarray(counts)
+                # np.array (not asarray): seed_row mutates this mirror on join
+                self._dstate = {k: np.array(v) for k, v in dstate.items()}
+            else:
+                toks, self.cache = loop(*args)
+                toks = np.asarray(jax.block_until_ready(toks))
             wall = time.perf_counter() - t_c
 
             n_active = int(active.sum())
-            self._pos[active.astype(bool)] += ecfg.decode_chunk
-            kept_by_rid = self._harvest(toks, t0)
-            kept = sum(kept_by_rid.values())
+            if spec:
+                # device pos advanced by this chunk's per-slot emitted counts
+                self._pos += counts.sum(axis=1).astype(np.int32)
+                kept_by_rid = self._harvest_spec(toks, counts, t0)
+                kept = sum(kept_by_rid.values())
+                computed = n_active * ecfg.decode_chunk * (ecfg.spec_k + 1)
+                proposed = n_active * ecfg.decode_chunk * ecfg.spec_k
+                accepted = int(counts.sum()) - n_active * ecfg.decode_chunk
+            else:
+                self._pos[active.astype(bool)] += ecfg.decode_chunk
+                kept_by_rid = self._harvest(toks, t0)
+                kept = sum(kept_by_rid.values())
+                computed = n_active * ecfg.decode_chunk
+                proposed = accepted = 0
             self._now += ecfg.decode_chunk
             chunk_idx += 1
 
             stats = ChunkStats(step=chunk_idx, wall_s=wall,
                                n_slots=ecfg.n_slots, n_active=n_active,
-                               tokens_kept=kept,
-                               tokens_computed=n_active * ecfg.decode_chunk)
+                               tokens_kept=kept, tokens_computed=computed,
+                               drafts_proposed=proposed,
+                               drafts_accepted=accepted)
             energy = self.on_chunk(stats) if self.on_chunk is not None else None
             report.n_chunks += 1
             report.decode_wall_s += wall
             report.tokens_kept += kept
             report.tokens_computed += stats.tokens_computed
+            report.drafts_proposed += proposed
+            report.drafts_accepted += accepted
             occ_sum += n_active / ecfg.n_slots
             if energy:
                 report.energy_j += energy

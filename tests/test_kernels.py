@@ -6,7 +6,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            paged_verify_attention_pallas,
+                                            verify_attention_pallas)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_pallas
@@ -255,6 +257,124 @@ def test_paged_decode_vs_ring(shape, dtype):
             np.testing.assert_allclose(
                 np.asarray(o, np.float32), np.asarray(o_ring, np.float32),
                 atol=tol, rtol=tol, err_msg=f"{backend} {case}")
+
+
+VERIFY_CASES = [
+    # pos, Q, window, logit_cap — pos < C leaves invalid slots; pos >= C
+    # exercises ring wrap (incl. the eviction-semantics mask unique to the
+    # verify path: entries the sequential loop would have overwritten)
+    dict(pos=20, Q=4, window=0, logit_cap=0.0),     # partial fill
+    dict(pos=100, Q=5, window=0, logit_cap=0.0),    # wrapped
+    dict(pos=150, Q=3, window=24, logit_cap=0.0),   # wrapped + window
+    dict(pos=90, Q=4, window=0, logit_cap=30.0),    # wrapped + softcap
+    dict(pos=1, Q=3, window=0, logit_cap=0.0),      # near-empty cache
+]
+
+
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_verify_pallas_vs_full_attention(shape, dtype):
+    """Speculative verify == full attention over the same history, for every
+    backend: Q = K+1 queries at positions pos..pos+Q-1 against a ring
+    committed through pos-1 plus the fed block's in-flight k/v.  The ground
+    truth is ``attention_ref`` with an effective window of the cache
+    capacity — exactly what the sequential decode loop's eviction gives."""
+    B, C, Hq, Hkv, D, Dv = shape
+    dt = jnp.dtype(dtype)
+    tol = 2e-5 if dtype == "float32" else 2e-2
+    for case in VERIFY_CASES:
+        pos, Q = case["pos"], case["Q"]
+        window, logit_cap = case["window"], case["logit_cap"]
+        S = pos + Q
+        ks = jax.random.split(jax.random.PRNGKey(pos + Q), 3)
+        q_full = jax.random.normal(ks[0], (B, S, Hq, D), dt)
+        k_full = jax.random.normal(ks[1], (B, S, Hkv, D), dt)
+        v_full = jax.random.normal(ks[2], (B, S, Hkv, Dv), dt)
+        k_cache = jnp.zeros((B, C, Hkv, D), dt)
+        v_cache = jnp.zeros((B, C, Hkv, Dv), dt)
+        for p in range(pos):                        # committed prefix only
+            k_cache = k_cache.at[:, p % C].set(k_full[:, p])
+            v_cache = v_cache.at[:, p % C].set(v_full[:, p])
+        q = q_full[:, pos:]
+        k_new, v_new = k_full[:, pos:], v_full[:, pos:]
+        weff = C if window == 0 else min(window, C)
+        o_true = ref.attention_ref(q, k_full, v_full, causal=True,
+                                   window=weff, logit_cap=logit_cap,
+                                   q_offset=pos)
+        k_pos = ops.ring_positions(jnp.asarray(pos - 1), C)
+        outs = {
+            "ref": ref.verify_attention_ref(
+                q, k_cache, v_cache, k_new, v_new, k_pos, jnp.asarray(pos),
+                window=window, logit_cap=logit_cap),
+            "jnp": ops.verify_attention_jnp(
+                q, k_cache, v_cache, k_new, v_new, k_pos, jnp.asarray(pos),
+                window=window, logit_cap=logit_cap),
+            "pallas": verify_attention_pallas(
+                q, k_cache, v_cache, k_new, v_new, jnp.asarray(pos),
+                window=window, logit_cap=logit_cap, block_k=16,
+                interpret=True),
+        }
+        for name, o in outs.items():
+            np.testing.assert_allclose(
+                np.asarray(o, np.float32), np.asarray(o_true, np.float32),
+                atol=tol, rtol=tol, err_msg=f"{name} {case}")
+
+
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_paged_verify_pallas_vs_full_attention(shape, dtype):
+    """Paged speculative verify == full attention per request: shuffled page
+    layout, ragged per-request depths, in-flight candidates, window and
+    softcap flavours — for every backend behind ops.paged_verify_attention."""
+    B, C, Hq, Hkv, D, Dv = shape
+    ps, nb = 8, C // 8
+    P = B * nb + B + 3
+    dt = jnp.dtype(dtype)
+    tol = 2e-5 if dtype == "float32" else 2e-2
+    Q = 4
+    pos = np.asarray([(ps * (2 + b) + 3 * b + 1) % (nb * ps - Q)
+                      for b in range(B)])
+    rng = np.random.default_rng(int(pos.sum()))
+    tables = rng.permutation(P)[:B * nb].reshape(B, nb).astype(np.int32)
+    for case in [dict(window=0, logit_cap=0.0),
+                 dict(window=ps * 2, logit_cap=0.0),
+                 dict(window=0, logit_cap=30.0)]:
+        k_pages = np.zeros((P, ps, Hkv, D), dtype)
+        v_pages = np.zeros((P, ps, Hkv, Dv), dtype)
+        fulls = []
+        for b in range(B):
+            S = int(pos[b]) + Q
+            ks = jax.random.split(jax.random.fold_in(
+                jax.random.PRNGKey(17), b), 3)
+            qf = jax.random.normal(ks[0], (S, Hq, D), dt)
+            kf = jax.random.normal(ks[1], (S, Hkv, D), dt)
+            vf = jax.random.normal(ks[2], (S, Hkv, Dv), dt)
+            for p in range(int(pos[b])):            # committed rows only
+                k_pages[tables[b, p // ps], p % ps] = kf[p]
+                v_pages[tables[b, p // ps], p % ps] = vf[p]
+            fulls.append((qf, kf, vf))
+        q = jnp.stack([f[0][int(pos[b]):] for b, f in enumerate(fulls)])
+        k_new = jnp.stack([f[1][int(pos[b]):] for b, f in enumerate(fulls)])
+        v_new = jnp.stack([f[2][int(pos[b]):] for b, f in enumerate(fulls)])
+        o_true = jnp.stack([
+            ref.attention_ref(f[0][None, int(pos[b]):], f[1][None],
+                              f[2][None], causal=True, q_offset=int(pos[b]),
+                              **case)[0]
+            for b, f in enumerate(fulls)])
+        kp, vp = jnp.asarray(k_pages), jnp.asarray(v_pages)
+        bt, pa = jnp.asarray(tables), jnp.asarray(pos, dtype=jnp.int32)
+        outs = {
+            "ref": ref.paged_verify_attention_ref(
+                q, kp, vp, k_new, v_new, bt, pa, **case),
+            "jnp": ops.paged_verify_attention_jnp(
+                q, kp, vp, k_new, v_new, bt, pa, **case),
+            "pallas": paged_verify_attention_pallas(
+                q, kp, vp, k_new, v_new, bt, pa, interpret=True, **case),
+        }
+        for name, o in outs.items():
+            np.testing.assert_allclose(
+                np.asarray(o, np.float32), np.asarray(o_true, np.float32),
+                atol=tol, rtol=tol, err_msg=f"{name} {case}")
 
 
 def test_flash_pallas_ragged_fallback():

@@ -84,6 +84,76 @@ def test_engine_report_accounting(smollm):
     assert sum(r.n_tokens - 1 for r in rep.results) == rep.tokens_kept
 
 
+@pytest.mark.parametrize("drafter,spec_k", [("ngram", 2), ("ngram", 4),
+                                            ("repeat", 2)])
+def test_engine_speculative_token_parity(smollm, drafter, spec_k):
+    """Speculative engine mode emits EXACTLY the plain engine's per-request
+    token streams (greedy): per-slot accept counts, masked paged commits,
+    drafter-state mirrors, and variable-token harvest change only how fast
+    tokens arrive, never which tokens."""
+    cfg, params = smollm
+    reqs = poisson_trace(5, rate_per_step=0.3, seed=7,
+                         vocab_size=cfg.vocab_size, prompt_len=(3, 13),
+                         max_new_tokens=(4, 10))
+    plain = ServeEngine(cfg, ECFG, params).run(reqs)
+    ecfg = dataclasses.replace(ECFG, spec_k=spec_k, drafter=drafter)
+    rep = ServeEngine(cfg, ecfg, params).run(reqs)
+    for r, rp in zip(rep.results, plain.results):
+        np.testing.assert_array_equal(np.asarray(r.tokens),
+                                      np.asarray(rp.tokens),
+                                      err_msg=f"rid {r.rid}")
+    # fewer sweeps for the same tokens is the whole point
+    assert rep.n_chunks <= plain.n_chunks
+    assert rep.spec_k == spec_k
+    assert rep.drafts_proposed > 0
+    assert 0.0 <= rep.acceptance_rate <= 1.0
+    # kept/slot-sweep: can dip below 1.0 when the device overruns finished
+    # requests, never above K+1
+    assert 0.0 < rep.tokens_per_step <= spec_k + 1
+    assert rep.j_per_accepted_token == rep.j_per_token
+
+
+def test_engine_speculative_eos_and_energy(smollm):
+    """EOS truncation and occupied-slots-only energy attribution survive
+    variable tokens-per-slot-per-step harvesting."""
+    cfg, params = smollm
+    base = batch_trace(3, seed=5, vocab_size=cfg.vocab_size, prompt_len=6,
+                       max_new_tokens=12)
+    probe = ServeEngine(cfg, ECFG, params).run([base[0]])
+    tokens = probe.results[0].tokens
+    k = next(i for i in range(1, len(tokens)) if tokens[i] not in tokens[:i])
+    eos = tokens[k]
+    reqs = [dataclasses.replace(base[0], eos_id=eos)] + base[1:]
+    ecfg = dataclasses.replace(ECFG, spec_k=2)
+    rep = ServeEngine(cfg, ecfg, params,
+                      on_chunk=lambda s: 2.5).run(reqs)
+    r0 = rep.results[0]
+    assert r0.finish_reason == "eos"
+    assert r0.n_tokens == k + 1 and r0.tokens[-1] == eos
+    assert all(r.n_tokens == r.max_new_tokens for r in rep.results[1:])
+    assert rep.energy_j == pytest.approx(2.5 * rep.n_chunks)
+    assert sum(r.energy_j for r in rep.results) == pytest.approx(rep.energy_j)
+
+
+def test_engine_report_zero_guards(smollm):
+    """Empty runs (no requests / no kept tokens) keep every report figure
+    finite — 0.0, not NaN/inf leaking into benchmark CSVs."""
+    from repro.serving import EngineReport
+    cfg, params = smollm
+    rep = ServeEngine(cfg, ECFG, params).run([])
+    assert rep.tok_per_s == 0.0
+    assert rep.j_per_token == 0.0
+    assert rep.acceptance_rate == 0.0
+    assert rep.tokens_per_step == 0.0
+    assert rep.latency_percentiles((50, 95)) == {50: 0.0, 95: 0.0}
+    assert rep.occupancy == 0.0
+    blank = EngineReport(results=[])
+    for v in (blank.tok_per_s, blank.j_per_token, blank.j_per_accepted_token,
+              blank.acceptance_rate, blank.tokens_per_step,
+              *blank.latency_percentiles().values()):
+        assert v == 0.0 and np.isfinite(v)
+
+
 def test_paged_kv_manager_invariants(smollm):
     cfg, _ = smollm
     kv = PagedKVCache(cfg, n_slots=2, page_size=4, max_len=32, n_pages=8)

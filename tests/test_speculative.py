@@ -1,0 +1,215 @@
+"""Speculative-decoding validation: greedy speculative decode must emit
+token-for-token the plain fused loop's stream for every drafter and every
+K — including across ring wrap-around and on the paged layout — plus
+drafter unit behaviour, partial-commit correctness, and sampling-mode
+determinism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import transformer as tfm
+from repro.runtime.speculate import (NgramDrafter, RepeatDrafter,
+                                     ReplayDrafter, get_drafter)
+from repro.runtime.steps import (StepConfig, make_decode_loop,
+                                 make_prefill_step,
+                                 make_speculative_decode_loop)
+
+STEP_CFG = StepConfig(remat="none")
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_arch("smollm-135m").smoke
+    params, _ = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prefilled(cfg, params, max_len):
+    """Repetitive prompt (ngram-friendly) -> (cache, first token, prompts)."""
+    prefill = jax.jit(make_prefill_step(cfg, STEP_CFG, max_len=max_len))
+    pat = jax.random.randint(jax.random.PRNGKey(5), (2, 4), 0, cfg.vocab_size)
+    prompts = jnp.tile(pat, (1, 2))
+    last_logits, cache = prefill(params, {"inputs": prompts})
+    tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
+    return cache, tok0, prompts
+
+
+def _flatten(toks, counts):
+    """Concatenate each row's kept tokens ((B, steps, Q), (B, steps))."""
+    out = []
+    for b in range(toks.shape[0]):
+        row = []
+        for s in range(toks.shape[1]):
+            row.extend(toks[b, s, :counts[b, s]].tolist())
+        out.append(row)
+    return out
+
+
+def _seeded_state(drafter, prompts, tok0):
+    ds = drafter.init_state(prompts.shape[0])
+    drafter.seed_batch(ds, np.asarray(prompts), np.asarray(tok0))
+    return {k: jnp.asarray(v) for k, v in ds.items()}
+
+
+# exactness matrix: every drafter x K x {deep ring (no wrap), tiny ring
+# (wraps mid-run)}; n_steps * (K+1) bounds the tokens one run can emit
+EXACT_KS = (1, 2, 4)
+N_STEPS = 8
+
+
+@pytest.mark.parametrize("max_len", [64, 16])   # 16 wraps the ring mid-run
+@pytest.mark.parametrize("k", EXACT_KS)
+@pytest.mark.parametrize("drafter_name", ["ngram", "repeat", "replay"])
+def test_greedy_speculative_exact(smollm, max_len, k, drafter_name):
+    """Greedy speculative == plain fused loop, token for token, for every
+    emitted token — whatever the drafter proposes and however much of it
+    is rejected."""
+    cfg, params = smollm
+    cache, tok0, prompts = _prefilled(cfg, params, max_len)
+    gen_ref = N_STEPS * (k + 1)
+    plain = jax.jit(make_decode_loop(cfg, STEP_CFG, n_tokens=gen_ref))
+    ref_toks = np.asarray(plain(params, cache, tok0)[0])
+
+    if drafter_name == "replay":
+        drafter = ReplayDrafter(k, ref_toks)
+    elif drafter_name == "ngram":
+        drafter = NgramDrafter(k, hist_len=32)
+    else:
+        drafter = RepeatDrafter(k)
+    loop = jax.jit(make_speculative_decode_loop(
+        cfg, STEP_CFG, n_steps=N_STEPS, drafter=drafter))
+    ds = _seeded_state(drafter, prompts, tok0)
+    toks, counts, cache2, _ = loop(params, cache, tok0, ds)
+    toks, counts = np.asarray(toks), np.asarray(counts)
+
+    # the ring loop advances the batch in lockstep: counts agree across B
+    assert (counts == counts[0]).all()
+    assert (counts >= 1).all() and (counts <= k + 1).all()
+    flat = _flatten(toks, counts)
+    n = len(flat[0])
+    np.testing.assert_array_equal(
+        np.asarray(flat), ref_toks[:, :n],
+        err_msg=f"max_len={max_len} K={k} {drafter_name}")
+    # the cache advanced exactly one position per emitted token
+    assert int(cache2["pos"]) == int(cache["pos"]) + n
+    if drafter_name == "replay":
+        # perfect drafts: every step must emit K+1 tokens (the CI canary
+        # invariant — any verify/commit bug breaks this before anything else)
+        assert (counts == k + 1).all()
+
+
+def test_ngram_drafter_lookup():
+    """The prompt-lookup rule itself: followers of the most recent earlier
+    occurrence, fallback to repeat when absent."""
+    d = NgramDrafter(3, hist_len=16)
+    ds = d.init_state(2)
+    d.seed_row(ds, 0, [7, 1, 2, 3, 9, 4])   # last=4; no earlier 4 -> repeat
+    d.seed_row(ds, 1, [5, 1, 2, 3, 5])      # last=5; earlier 5 -> 1, 2, 3
+    state = {k: jnp.asarray(v) for k, v in ds.items()}
+    drafts = np.asarray(d.propose(state, jnp.asarray([4, 5])))
+    np.testing.assert_array_equal(drafts[0], [4, 4, 4])
+    np.testing.assert_array_equal(drafts[1], [1, 2, 3])
+    # observe folds emitted tokens: history ... 5 1 2 -> last=2 follows with 3
+    state = d.observe(state, jnp.asarray([[9, 9, 9, 9], [1, 2, 0, 0]]),
+                      jnp.asarray([0, 2]))
+    drafts = np.asarray(d.propose(state, jnp.asarray([4, 2])))
+    np.testing.assert_array_equal(drafts[1], [3, 5, 1])
+    # row 0 saw count=0: unchanged, still no earlier 4
+    np.testing.assert_array_equal(drafts[0], [4, 4, 4])
+
+
+def test_ngram_drafter_long_history_wraps():
+    """Seeding more tokens than hist_len keeps the most recent ones."""
+    d = NgramDrafter(2, hist_len=8)
+    ds = d.init_state(1)
+    # 9 tokens, hist 8: the leading 1 falls out, the earlier 111 survives
+    d.seed_row(ds, 0, [1, 2, 3, 111, 112, 113, 9, 8, 111])
+    state = {k: jnp.asarray(v) for k, v in ds.items()}
+    drafts = np.asarray(d.propose(state, jnp.asarray([111])))
+    np.testing.assert_array_equal(drafts[0], [112, 113])
+
+
+def test_replay_drafter_exhaustion_falls_back():
+    """Past the recorded stream the replay drafter degrades to repeat
+    instead of reading junk."""
+    d = ReplayDrafter(3, np.asarray([[10, 11]]))
+    state = {k: jnp.asarray(v) for k, v in d.init_state(1).items()}
+    drafts = np.asarray(d.propose(state, jnp.asarray([9])))
+    np.testing.assert_array_equal(drafts[0], [10, 11, 9])
+    state = d.observe(state, jnp.asarray([[10, 11, 0, 0]]), jnp.asarray([2]))
+    drafts = np.asarray(d.propose(state, jnp.asarray([11])))
+    np.testing.assert_array_equal(drafts[0], [11, 11, 11])
+
+
+def test_get_drafter_factory():
+    assert isinstance(get_drafter("ngram", 2), NgramDrafter)
+    assert isinstance(get_drafter("repeat", 3), RepeatDrafter)
+    with pytest.raises(ValueError):
+        get_drafter("replay", 2)            # test-only: needs a stream
+    with pytest.raises(ValueError):
+        get_drafter("nope", 2)
+
+
+def test_speculative_gate_rejects_unsupported():
+    """Families whose caches cannot re-verify (ssm) are rejected loudly."""
+    cfg = get_arch("mamba2-370m").smoke
+    with pytest.raises(ValueError):
+        make_speculative_decode_loop(cfg, STEP_CFG, n_steps=2,
+                                     drafter=RepeatDrafter(2))
+    assert not tfm.supports_speculative(cfg)
+    assert tfm.supports_speculative(get_arch("smollm-135m").smoke)
+
+
+def test_sampling_speculative_deterministic(smollm):
+    """Temperature rejection-sampling: same key -> same stream; different
+    key -> different stream (the in-scan PRNG discipline)."""
+    cfg, params = smollm
+    cache, tok0, prompts = _prefilled(cfg, params, 64)
+    drafter = NgramDrafter(2, hist_len=32)
+    loop = jax.jit(make_speculative_decode_loop(
+        cfg, STEP_CFG, n_steps=6, drafter=drafter, greedy=False,
+        temperature=0.8))
+    ds = _seeded_state(drafter, prompts, tok0)
+    a, ca, _, _ = loop(params, cache, tok0, ds, jax.random.PRNGKey(7))
+    b, cb, _, _ = loop(params, cache, tok0, ds, jax.random.PRNGKey(7))
+    c, cc, _, _ = loop(params, cache, tok0, ds, jax.random.PRNGKey(8))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ca), np.asarray(cb))
+    assert np.any(np.asarray(a) != np.asarray(c))
+    # emitted counts stay in [1, K+1] whatever the acceptance draw
+    assert (np.asarray(ca) >= 1).all() and (np.asarray(ca) <= 3).all()
+
+
+def test_verify_commit_partial_prefix(smollm):
+    """Committing only part of a verified block then re-verifying from the
+    accepted prefix reproduces the sequential stream — the no-rollback
+    invariant behind in-scan accept/reject."""
+    from repro.runtime.steps import make_run_ctx
+    cfg, params = smollm
+    ctx = make_run_ctx(cfg, None, STEP_CFG)
+    cache, tok0, _ = _prefilled(cfg, params, 16)     # tiny ring: wraps
+    # sequential ground truth
+    seq_logits = []
+    c, t = cache, tok0
+    stream = [np.asarray(tok0[:, 0])]
+    for _ in range(8):
+        lg, c = tfm.decode_step(params, c, t, cfg, ctx)
+        seq_logits.append(np.asarray(lg[:, -1]))
+        t = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        stream.append(np.asarray(t[:, 0]))
+    fed = jnp.stack(stream[:4], axis=1)              # (B, 4)
+    lg, pend = tfm.verify_step(params, cache, fed, cfg, ctx)
+    for j in range(4):
+        np.testing.assert_allclose(np.asarray(lg[:, j]), seq_logits[j],
+                                   atol=2e-4, rtol=2e-4)
+    c2 = tfm.commit_spec(cache, pend, jnp.asarray(1), cfg)  # rows 0..1 only
+    assert int(c2["pos"]) == int(cache["pos"]) + 2
+    fed2 = jnp.stack(stream[2:6], axis=1)
+    lg2, _ = tfm.verify_step(params, c2, fed2, cfg, ctx)
+    for j in range(4):
+        np.testing.assert_allclose(np.asarray(lg2[:, j]), seq_logits[2 + j],
+                                   atol=2e-4, rtol=2e-4)
