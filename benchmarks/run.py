@@ -13,6 +13,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import subprocess
 import time
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -41,7 +42,43 @@ TRAJECTORY = {
         "j_per_accepted_token": r["j_per_token"],
         "j_per_token_plain": r["j_per_token_plain"],
     },
+    "prefix": lambda r: {
+        "tok_per_s": r["tok_per_s"],
+        "prefix_hit_rate": r["prefix_hit_rate"],
+        "prefill_tokens_saved": r["prefill_tokens_saved"],
+        "n_preemptions": r["n_preemptions"],
+        "j_per_token_ratio_vs_plain": r["j_per_token_ratio"],
+        "p50_latency_ratio_vs_plain": r["p50_latency_ratio"],
+    },
 }
+
+# one human-readable headline CSV line per trajectory job (printed for CI
+# logs next to the machine-readable artifact)
+HEADLINE = {
+    "decode": lambda r: (f"decode.tok_per_s,{r['tok_per_s']:.1f},"
+                         f"fused loop, {r['speedup']:.2f}x over per-token "
+                         "host loop (largest cache)"),
+    "serve": lambda r: (f"serve.tok_per_s,{r['tok_per_s']:.1f},"
+                        f"engine vs static: {r['j_per_token_ratio']:.2f}x "
+                        f"J/token, {r['p50_latency_ratio']:.2f}x p50 latency"),
+    "spec": lambda r: (f"spec.tok_per_s,{r['tok_per_s']:.1f},"
+                       f"{r['speedup']:.2f}x over plain fused loop at "
+                       f"K={r['best_k']} (replay acceptance "
+                       f"{r['acceptance']:.2f})"),
+    "prefix": lambda r: (f"prefix.hit_rate,{r['prefix_hit_rate']:.2f},"
+                         f"{r['prefill_tokens_saved']} prefill tokens "
+                         f"saved; {r['j_per_token_ratio']:.2f}x J/token, "
+                         f"{r['p50_latency_ratio']:.2f}x p50 vs no-sharing"),
+}
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], cwd=ROOT,
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
 
 
 def _write_trajectory(name: str, res: dict, quick: bool) -> None:
@@ -52,7 +89,8 @@ def _write_trajectory(name: str, res: dict, quick: bool) -> None:
               f"BENCH_{name}.json")
         return
     path = ROOT / f"BENCH_{name}.json"
-    payload = {"bench": name, **TRAJECTORY[name](res)}
+    payload = {"bench": name, "git_sha": _git_sha(),
+               **TRAJECTORY[name](res)}
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"{name}.trajectory,{path.name},machine-readable perf artifact")
 
@@ -68,8 +106,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (ctrl_overhead, decode_throughput, fig2_energy,
                             fig3_overhead, fig4_capping, fig5_edxp,
-                            fig6_tradeoff, roofline, serve_engine,
-                            spec_decode)
+                            fig6_tradeoff, prefix_cache, roofline,
+                            serve_engine, spec_decode)
     ART.mkdir(parents=True, exist_ok=True)
     jobs = {
         "fig2": lambda: fig2_energy.main(quick=args.quick),
@@ -81,6 +119,7 @@ def main(argv=None) -> int:
         "decode": lambda: decode_throughput.main(quick=args.quick),
         "serve": lambda: serve_engine.main(quick=args.quick),
         "spec": lambda: spec_decode.main(quick=args.quick),
+        "prefix": lambda: prefix_cache.main(quick=args.quick),
         "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],
     }
     failures = 0
@@ -95,19 +134,8 @@ def main(argv=None) -> int:
             if name in TRAJECTORY:
                 _write_trajectory(name, res, args.quick)
             print(f"{name}.seconds,{time.time()-t0:.1f},ok")
-            if name == "decode":       # headline perf-trajectory line for CI
-                print(f"decode.tok_per_s,{res['tok_per_s']:.1f},"
-                      f"fused loop, {res['speedup']:.2f}x over per-token "
-                      f"host loop (largest cache)")
-            if name == "serve":        # continuous-batching trajectory
-                print(f"serve.tok_per_s,{res['tok_per_s']:.1f},"
-                      f"engine vs static: {res['j_per_token_ratio']:.2f}x "
-                      f"J/token, {res['p50_latency_ratio']:.2f}x p50 latency")
-            if name == "spec":         # speculative-decoding trajectory
-                print(f"spec.tok_per_s,{res['tok_per_s']:.1f},"
-                      f"{res['speedup']:.2f}x over plain fused loop at "
-                      f"K={res['best_k']} (replay acceptance "
-                      f"{res['acceptance']:.2f})")
+            if name in HEADLINE:       # headline perf-trajectory line for CI
+                print(HEADLINE[name](res))
         except Exception as e:                         # keep the harness alive
             failures += 1
             print(f"{name}.seconds,{time.time()-t0:.1f},"

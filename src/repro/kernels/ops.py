@@ -18,8 +18,13 @@ Decode attention (the serving hot path) has its own backend axis on
 The same axis drives both cache layouts — ``decode_attention`` (ring
 buffer) and ``paged_decode_attention`` (block-table page pool, the
 continuous-batching serving engine's layout) — and their multi-query
-speculative-verify variants (``verify_attention`` /
-``paged_verify_attention``: K+1 queries per cache sweep).
+variants (``verify_attention`` / ``paged_verify_attention``: Q queries
+share one cache sweep).  The multi-query paged sweep serves TWO callers
+through one dispatch entry: speculative verify (Q = K+1 drafts + bonus)
+and the prefix-sharing engine's *chunked paged prefill* (Q = suffix
+chunk, scoring uncached prompt tokens against shared prefix pages — see
+``transformer.prefill_suffix``); no separate prefill kernel exists or is
+needed.
 
 Models call these wrappers; the backend is chosen by ``KernelPolicy``.
 """
@@ -474,9 +479,12 @@ def paged_verify_attention(
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     policy: KernelPolicy = DEFAULT_POLICY,
 ) -> jax.Array:
-    """Backend-dispatching speculative verify attention over the paged KV
-    cache (the continuous-batching engine's layout).  ``pos`` is per-request
-    — every slot verifies its own K+1 candidates at its own depth."""
+    """Backend-dispatching multi-query attention over the paged KV cache
+    (the continuous-batching engine's layout).  ``pos`` is per-request —
+    every slot scores its own Q in-flight tokens at its own depth.  Two
+    callers share this entry: speculative verify (Q = K+1 candidates) and
+    chunked paged prefill (Q = prompt-suffix chunk against a shared cached
+    prefix; the commit side differs, the sweep is identical)."""
     backend = policy.decode
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"

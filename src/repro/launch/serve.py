@@ -18,7 +18,16 @@ split-K decode-attention kernels, AOT-compiled executables):
     ONE decode executable.
   * ``poisson`` — ``repro.serving.ServeEngine``: requests join fixed decode
     slots mid-stream (prefill-on-join into the paged KV cache) and free on
-    EOS / token budget.  J/token charges only occupied slots.
+    EOS / token budget.  J/token charges only occupied slots.  The engine
+    shares cached prompt prefixes across requests (``--no-prefix-cache``
+    disables) and preempts/re-queues on page pressure (``--no-preempt``
+    restores the old reserve-everything admission).
+
+``--shared-prefix-len N`` makes the traffic realistic for prefix sharing
+in BOTH modes: every prompt becomes one of ``--prompt-pools`` fixed shared
+heads (system prompt / few-shot header stand-ins) plus a unique suffix —
+the engine then prefills only the uncached suffix and reports the prompt
+tokens (and modelled prefill joules) it never had to compute.
 
 ``--spec-k K`` turns either mode speculative: each cache sweep verifies K
 self-drafted tokens plus one bonus (``--drafter ngram`` prompt-lookup or
@@ -58,7 +67,7 @@ from repro.runtime.steps import (StepConfig, make_decode_loop,
                                  make_speculative_decode_loop)
 from repro.models import transformer as tfm
 from repro.serving import (EnergyAwareAdmission, EngineConfig, ServeEngine,
-                           poisson_trace)
+                           batch_trace, poisson_trace)
 from repro.telemetry.meters import AnalyticDeviceMeter, CpuProcessMeter, DramMeter
 from repro.telemetry.sampler import PowerSampler
 
@@ -160,7 +169,8 @@ class FrostPlane:
 def run_batch(args, cfg, step_cfg, rules, params, frost: FrostPlane | None) -> int:
     """Static-batch baseline: batched prefill + fused ring decode chunks."""
     greedy = args.temperature <= 0.0
-    max_len = args.prompt_len + args.gen
+    plen = args.shared_prefix_len + args.prompt_len
+    max_len = plen + args.gen
     prefill = jax.jit(make_prefill_step(cfg, step_cfg, rules, max_len=max_len))
     chunk = max(1, args.decode_chunk)
     # ONE decode executable per run: the final ragged chunk is padded to
@@ -173,11 +183,24 @@ def run_batch(args, cfg, step_cfg, rules, params, frost: FrostPlane | None) -> i
         donate_argnums=(1,))
     loop = None
 
-    data = TokenBatches(DataConfig(seed=args.seed, vocab_size=cfg.vocab_size,
-                                   seq_len=args.prompt_len,
-                                   global_batch=args.requests,
-                                   n_codebooks=cfg.n_codebooks))
-    prompts = data.batch(0)["inputs"]
+    if args.shared_prefix_len > 0:
+        # shared-system-prompt scenario: pooled heads + unique suffixes
+        # (uniform total length, so the batch stacks)
+        trace = batch_trace(args.requests, seed=args.seed,
+                            vocab_size=cfg.vocab_size,
+                            prompt_len=args.prompt_len,
+                            max_new_tokens=args.gen,
+                            n_codebooks=cfg.n_codebooks,
+                            shared_prefix_len=args.shared_prefix_len,
+                            prompt_pools=args.prompt_pools)
+        prompts = np.stack([r.prompt for r in trace])
+    else:
+        data = TokenBatches(DataConfig(seed=args.seed,
+                                       vocab_size=cfg.vocab_size,
+                                       seq_len=args.prompt_len,
+                                       global_batch=args.requests,
+                                       n_codebooks=cfg.n_codebooks))
+        prompts = data.batch(0)["inputs"]
 
     t0 = time.time()
     last_logits, cache = prefill(params, {"inputs": jnp.asarray(prompts)})
@@ -260,7 +283,7 @@ def run_batch(args, cfg, step_cfg, rules, params, frost: FrostPlane | None) -> i
         acc = n_spec_accepted / (n_spec_steps * args.spec_k)
         spec_line = (f", spec K={args.spec_k} acceptance {acc:.0%} "
                      f"({1 + n_spec_accepted / n_spec_steps:.2f} tok/sweep)")
-    print(f"[serve] prefill {args.requests}x{args.prompt_len} in "
+    print(f"[serve] prefill {args.requests}x{plen} in "
           f"{t_prefill*1e3:.0f} ms; decode {n_decoded} tokens in "
           f"{t_decode*1e3:.0f} ms ({tok_per_s:.0f} tok/s measured, "
           f"fused chunks of {chunk}, one executable{spec_line}{j_line})")
@@ -272,13 +295,17 @@ def run_engine(args, cfg, step_cfg, rules, params,
                frost: FrostPlane | None) -> int:
     """Continuous batching: Poisson arrivals into the paged-KV engine."""
     greedy = args.temperature <= 0.0
-    max_len = args.prompt_len + args.gen
+    max_len = args.shared_prefix_len + args.prompt_len + args.gen
     ecfg = EngineConfig(n_slots=args.n_slots, page_size=args.page_size,
                         max_len=max_len, decode_chunk=max(1, args.decode_chunk),
-                        greedy=greedy,
+                        n_pages=args.n_pages, greedy=greedy,
                         temperature=max(args.temperature, 1e-6),
                         sample_seed=args.sample_seed,
-                        spec_k=max(0, args.spec_k), drafter=args.drafter)
+                        spec_k=max(0, args.spec_k), drafter=args.drafter,
+                        prefix_cache=not args.no_prefix_cache,
+                        prefill_chunk=max(1, args.prefill_chunk),
+                        preempt=not args.no_preempt,
+                        max_skip=max(0, args.max_skip))
     # effective tokens per slot-step: 1.0 plain; under speculation the
     # on_chunk hook keeps a running estimate (accepted + bonus per sweep) so
     # the admission policy prices occupancy at the throughput actually
@@ -295,6 +322,19 @@ def run_engine(args, cfg, step_cfg, rules, params,
                                 ecfg.decode_chunk, s.wall_s,
                                 tokens_scored=ecfg.spec_k + 1)
 
+    pref = {"avoided_j": 0.0}
+
+    def on_prefill(n_computed, n_saved):
+        # prefill compute feeds the same J/token ledger as decode chunks;
+        # tokens the prefix cache restored are joules never drawn — priced
+        # at the analytic one-sequence sweep cost under the cap in force
+        if frost is None:
+            return None
+        cap = frost.backend.current_cap()
+        e_tok = frost.device.estimate(decode_workload(cfg, 1), cap).energy_j
+        pref["avoided_j"] += e_tok * n_saved
+        return e_tok * n_computed
+
     admission = None
     if args.power_budget > 0:
         device = frost.device if frost is not None else PowerCappedDevice(TPU_V5E)
@@ -310,9 +350,12 @@ def run_engine(args, cfg, step_cfg, rules, params,
         vocab_size=cfg.vocab_size,
         prompt_len=(p_lo, args.prompt_len),
         max_new_tokens=(g_lo, args.gen),
-        n_codebooks=cfg.n_codebooks, eos_id=args.eos_id)
+        n_codebooks=cfg.n_codebooks, eos_id=args.eos_id,
+        shared_prefix_len=args.shared_prefix_len,
+        prompt_pools=args.prompt_pools)
     engine = ServeEngine(cfg, ecfg, params, step_cfg=step_cfg, rules=rules,
-                         on_chunk=on_chunk, admission=admission)
+                         on_chunk=on_chunk, on_prefill=on_prefill,
+                         admission=admission)
     rep = engine.run(trace)
 
     lat = rep.latency_percentiles((50, 95))
@@ -331,6 +374,15 @@ def run_engine(args, cfg, step_cfg, rules, params,
               f"acceptance {rep.acceptance_rate:.0%}, "
               f"{rep.tokens_per_step:.2f} tokens/slot-sweep "
               f"(admission sees {eff['tps']:.2f}x effective tok/s)")
+    if ecfg.prefix_cache:
+        j_avoid = ""
+        if frost is not None and pref["avoided_j"] > 0:
+            j_avoid = (f", ~{pref['avoided_j']:.3g} J prefill avoided "
+                       "(modelled, in the J/token ledger)")
+        print(f"[serve] prefix cache: {rep.prefix_hit_rate:.0%} of "
+              f"{rep.prompt_tokens} prompt tokens restored "
+              f"({rep.prefill_tokens_saved} saved), "
+              f"{rep.n_preemptions} preemptions{j_avoid}")
     print(f"[serve] latency p50 {lat[50]:.0f} / p95 {lat[95]:.0f} steps; "
           f"queue wait mean {np.mean(waits):.1f} steps"
           if waits else "[serve] nothing admitted")
@@ -361,6 +413,24 @@ def main():
                     help="decode slots (engine batch dimension)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV-cache page size (tokens per block)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="KV page pool size (default: fully provisioned; "
+                         "smaller pools exercise preemption/requeue)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help=">0: every prompt = pooled shared head of this "
+                         "length + unique suffix (both traffic modes)")
+    ap.add_argument("--prompt-pools", type=int, default=1,
+                    help="number of distinct shared prefixes to draw from")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prompt-prefix page sharing in the engine")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="suffix tokens per chunked-prefill verify sweep")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="reserve the whole context at admission instead "
+                         "of lazy pages + preemption/requeue")
+    ap.add_argument("--max-skip", type=int, default=2,
+                    help="head-of-line skip-ahead window when the queue "
+                         "head cannot get pages (0 = strict FIFO)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help=">0: speculative decoding — verify K drafts + 1 "
                          "bonus token per cache sweep (both traffic modes)")

@@ -231,7 +231,13 @@ def gqa_verify_paged(params, x, pos, cache_kv, block_tables, cfg: ModelConfig,
                      constrain=None):
     """Paged analogue of ``gqa_verify``: per-request ``pos`` (B,), shared
     page pools committed through ``pos[b] - 1``.  The pending rows are
-    returned for a masked per-slot commit — pools stay untouched here."""
+    returned for a masked per-slot commit — pools stay untouched here.
+
+    Besides speculative verify, this is the sweep behind **chunked paged
+    prefill** (``transformer.prefill_suffix``): a prompt-suffix chunk at
+    positions ``pos .. pos+Q-1`` attending to a prefix the cache already
+    holds (possibly on pages shared read-only with other slots) is the
+    same computation with every row "accepted" at commit time."""
     adt = x.dtype
     k_pages, v_pages = cache_kv
     Q = x.shape[1]

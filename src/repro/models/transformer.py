@@ -700,6 +700,33 @@ def commit_spec(cache, pending, n_accept, cfg: ModelConfig):
     return {"pos": pos + n_accept + 1, "units": new_units}
 
 
+def prefill_suffix(params, cache, tokens, n_commit, cfg: ModelConfig,
+                   ctx: RunCtx = RunCtx()):
+    """Chunked paged prefill: score a block of *prompt suffix* tokens
+    against a slot's already-cached prefix and commit their k/v.
+
+    This is the prefix-sharing engine's join path: when
+    ``PagedKVCache.admit_with_prefix`` maps a cached prefix of length
+    ``m``, only ``tokens[m:]`` need compute — and scoring a suffix chunk
+    at positions ``pos .. pos+Q-1`` against pages committed through
+    ``pos-1`` is *exactly* the speculative verify sweep with
+    ``q_len = chunk`` (``ops.paged_verify_attention`` — no new kernel).
+    The commit is the speculative commit with every real row accepted:
+    ``n_commit`` (B,) counts each slot's real (non-pad) rows this chunk;
+    rows ``0..n_commit-1`` scatter through the block table, ``pos``
+    advances by ``n_commit``, and slots with ``n_commit == 0`` neither
+    write nor advance — so one fixed-shape executable serves every join
+    against the live engine cache without touching the other slots.
+
+    Returns ``(logits, cache)``: row ``n_commit[b] - 1`` of slot b's
+    logits scores the token after its last real suffix token (the
+    engine's first-token sample on a full-suffix join)."""
+    logits, pending = verify_step(params, cache, tokens, cfg, ctx)
+    active = (n_commit > 0).astype(jnp.int32)
+    new_cache = commit_spec_paged(cache, pending, n_commit - 1, active, cfg)
+    return logits, new_cache
+
+
 def commit_spec_paged(cache, pending, n_accept, active, cfg: ModelConfig):
     """Paged commit: per-slot accepted counts (B,) — every engine slot
     keeps its own prefix.  Accepted rows scatter through the block table

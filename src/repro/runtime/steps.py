@@ -208,6 +208,29 @@ def make_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
     return decode_loop
 
 
+def make_prefill_suffix_step(cfg: ModelConfig, step_cfg: StepConfig,
+                             rules: ShardingRules | None = None) -> Callable:
+    """suffix_step(params, cache, tokens, n_commit) -> (logits, cache).
+
+    One chunked-paged-prefill sweep (see ``transformer.prefill_suffix``):
+    ``tokens`` is (n_slots, chunk) with the joining slot's row holding the
+    next ``n_commit[slot]`` uncached prompt-suffix tokens (other rows are
+    pad, ``n_commit == 0``).  The chunk size is whatever width the caller
+    traces with — a fixed shape means ONE AOT executable covers every
+    suffix length (the engine loops it and pads the tail).  Jit with
+    ``donate_argnums=(1,)`` so the page pools update in place."""
+    ctx = make_run_ctx(cfg, rules, step_cfg)
+    if not tfm.supports_speculative(cfg):
+        raise ValueError(f"{cfg.name}: chunked paged prefill rides the "
+                         "speculative verify seam (dense GQA families only)")
+
+    def suffix_step(params, cache, tokens, n_commit):
+        return tfm.prefill_suffix(params, cache, tokens,
+                                  jnp.asarray(n_commit, jnp.int32), cfg, ctx)
+
+    return suffix_step
+
+
 def _spec_accept_greedy(logits, drafts):
     """Greedy exact-match acceptance: per-row accepted-draft counts.
 

@@ -2,24 +2,30 @@
 
 Layering::
 
-    traffic      arrival processes (Poisson / batch) -> Request lists
+    traffic      arrival processes (Poisson / batch, shared-prefix pools)
+                 -> Request lists
     request      Request / RequestResult accounting
-    paged_kv     PagedKVCache — block tables + free list over page pools
+    paged_kv     PagedKVCache — ref-counted page pool + prefix trie +
+                 copy-on-write sharing + free list
     scheduler    RequestQueue + Scheduler — ragged requests -> fixed slots
-    engine       ServeEngine — prefill-on-join, fused masked decode chunks,
-                 free-on-finish, per-request latency + J/token accounting
+                 (bounded head-of-line skip-ahead, lazy/reserve admission)
+    engine       ServeEngine — prefill-on-join (suffix-only on prefix
+                 hits), fused masked decode chunks, preemption/requeue on
+                 page pressure, free-on-finish, per-request latency +
+                 J/token accounting
 
-See docs/serving_engine.md.
+See docs/serving_engine.md and docs/prefix_cache.md.
 """
 from repro.serving.engine import (ChunkStats, EnergyAwareAdmission,
                                   EngineConfig, EngineReport, ServeEngine)
-from repro.serving.paged_kv import PagedKVCache
+from repro.serving.paged_kv import CopySpec, PagedKVCache
 from repro.serving.request import Request, RequestResult
 from repro.serving.scheduler import RequestQueue, Scheduler
 from repro.serving.traffic import batch_trace, poisson_trace
 
 __all__ = [
-    "ChunkStats", "EnergyAwareAdmission", "EngineConfig", "EngineReport",
-    "PagedKVCache", "Request", "RequestQueue", "RequestResult",
-    "Scheduler", "ServeEngine", "batch_trace", "poisson_trace",
+    "ChunkStats", "CopySpec", "EnergyAwareAdmission", "EngineConfig",
+    "EngineReport", "PagedKVCache", "Request", "RequestQueue",
+    "RequestResult", "Scheduler", "ServeEngine", "batch_trace",
+    "poisson_trace",
 ]

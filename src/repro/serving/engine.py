@@ -8,10 +8,18 @@ and slots free on EOS / token budget at harvest, at chunk granularity.
 
 Anatomy of one engine cycle::
 
-    poll ──> prefill-on-join ──> sync tables/pos ──> fused chunk ──> harvest
-     ^   (bucketed prompt,        (host mirrors       (paged loop,     │
-     │    pages injected)          -> device)          donated cache)  │
-     └──────────────────── free slots / pages on finish ───────────────┘
+    poll ──> prefill-on-join ──> grow/preempt ──> fused chunk ──> harvest
+     ^   (cached prefix shared,   (lazy pages;     (paged loop,      │
+     │    only the suffix runs)    requeue on       donated cache)   │
+     │                             pressure)                         │
+     └──────────────────── free slots / pages on finish ─────────────┘
+
+Joins with a prefix-cache hit map shared read-only pages and prefill only
+the uncached suffix (chunked, through the paged verify sweep — see
+docs/prefix_cache.md); cold prompts keep the classic bucketed prefill +
+page inject.  In lazy mode (``EngineConfig.preempt``) pages grow
+chunk-by-chunk and page pressure evicts the lowest-priority slot back to
+the queue instead of stalling admission.
 
 Telemetry: the engine itself is control-plane-agnostic — the launcher
 passes an ``on_chunk`` hook that receives per-chunk :class:`ChunkStats`
@@ -42,7 +50,7 @@ from repro.models import transformer as tfm
 from repro.runtime.speculate import get_drafter
 from repro.runtime.steps import (StepConfig, make_paged_decode_loop,
                                  make_paged_speculative_decode_loop,
-                                 make_run_ctx)
+                                 make_prefill_suffix_step, make_run_ctx)
 from repro.serving.paged_kv import PagedKVCache
 from repro.serving.request import Request, RequestResult
 from repro.serving.scheduler import RequestQueue, Scheduler
@@ -66,6 +74,22 @@ class EngineConfig:
     spec_k: int = 0
     drafter: str = "ngram"        # ngram | repeat (self-drafters)
     drafter_hist: int = 128       # ngram lookup history per slot
+    # prefix sharing: admit_with_prefix maps cached prompt prefixes onto
+    # shared read-only pages and only the uncached suffix is prefilled
+    # (chunked, through the paged verify sweep).  Dense-GQA families only;
+    # silently disabled elsewhere (multi-codebook keeps the legacy path).
+    prefix_cache: bool = True
+    prefill_chunk: int = 16       # suffix tokens per chunked-prefill sweep
+    # preemption: admit on prompt pages only, grow per chunk, and when the
+    # pool runs dry evict the lowest-priority slot and re-queue it with
+    # its generated tokens folded into the prompt (the prefix cache then
+    # mostly restores the requeue for free).  False = reserve the whole
+    # context at admission (the old hard-stall behaviour).
+    preempt: bool = True
+    # head-of-line fix: when the queue head cannot get pages, try up to
+    # this many ready requests behind it (admitted order stays FIFO
+    # otherwise)
+    max_skip: int = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +123,9 @@ class EngineReport:
     spec_k: int = 0               # 0 = plain decode
     drafts_proposed: int = 0
     drafts_accepted: int = 0
+    prompt_tokens: int = 0        # prompt tokens across every join (requeues too)
+    prefill_tokens_saved: int = 0  # restored from the prefix cache, not computed
+    n_preemptions: int = 0        # slots evicted + re-queued on page pressure
 
     @property
     def tok_per_s(self) -> float:
@@ -141,6 +168,14 @@ class EngineReport:
         steps = self.tokens_computed / max(self.spec_k + 1, 1)
         return self.tokens_kept / max(steps, 1e-9)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens restored from the prefix cache
+        instead of being prefilled (0.0 on empty runs)."""
+        if self.prompt_tokens <= 0:
+            return 0.0
+        return self.prefill_tokens_saved / self.prompt_tokens
+
     def latency_percentiles(self, qs=(50, 95)) -> dict[int, float]:
         lats = [r.latency_steps for r in self.results if r.finish_step >= 0]
         if not lats:
@@ -175,6 +210,7 @@ class ServeEngine:
     def __init__(self, cfg, engine_cfg: EngineConfig, params, *,
                  step_cfg: StepConfig | None = None, rules=None,
                  on_chunk: Callable[[ChunkStats], float | None] | None = None,
+                 on_prefill: Callable[[int, int], float | None] | None = None,
                  admission=None):
         self.cfg = cfg
         self.ecfg = engine_cfg
@@ -182,18 +218,32 @@ class ServeEngine:
         self.step_cfg = step_cfg or StepConfig(remat="none")
         self.rules = rules
         self.on_chunk = on_chunk
+        # on_prefill(n_computed, n_saved) -> J for one join's prefill (or
+        # None): lets the launcher charge prefill compute into the same
+        # J/token ledger — and see the joules the prefix cache avoided
+        self.on_prefill = on_prefill
         self.kv = PagedKVCache(cfg, n_slots=engine_cfg.n_slots,
                                page_size=engine_cfg.page_size,
                                max_len=engine_cfg.max_len,
                                n_pages=engine_cfg.n_pages,
                                dtype=engine_cfg.cache_dtype)
+        # prefix sharing rides the speculative verify seam (suffix chunks
+        # are scored by paged_verify_attention), so it covers the same
+        # dense-GQA families; multi-codebook et al. keep the legacy path
+        self._use_prefix = (engine_cfg.prefix_cache
+                            and tfm.supports_speculative(cfg))
         self.scheduler = Scheduler(engine_cfg.n_slots, self.kv,
-                                   admission=admission)
+                                   admission=admission,
+                                   max_skip=engine_cfg.max_skip,
+                                   lazy=engine_cfg.preempt,
+                                   prefix=self._use_prefix)
         self.cache = self.kv.make_cache()
         self._ctx = make_run_ctx(cfg, rules, self.step_cfg)
         self._loop = None                    # AOT-compiled paged chunk loop
         self._prefills: dict[int, object] = {}   # bucket -> compiled prefill
         self._injects: dict[int, object] = {}    # bucket -> compiled inject
+        self._suffix = None                  # AOT chunked-suffix prefill
+        self._copy = None                    # AOT page-rows copy (CoW)
         self._pos = np.zeros((engine_cfg.n_slots,), np.int32)
         self._sample_key = jax.random.PRNGKey(engine_cfg.sample_seed)
         self._drafter = None
@@ -264,6 +314,65 @@ class ServeEngine:
             b *= 2
         return b
 
+    def _page_copy(self):
+        """Copy-on-write: rows ``0..n_rows-1`` of ``src_page`` duplicated
+        into ``dst_page`` across every unit pool (one fused donated
+        update; src/dst/n_rows are traced scalars, ONE executable)."""
+        if self._copy is None:
+            ps = self.ecfg.page_size
+
+            def copy(cache, src, dst, n_rows):
+                i = jnp.arange(ps)
+                units = {}
+                for name, c in cache["units"].items():
+                    new = {}
+                    for key in ("k", "v"):
+                        pool = c[key]                # (nu, P, ps, hkv, hd)
+                        nu, P = pool.shape[0], pool.shape[1]
+                        flat = pool.reshape(nu, P * ps, *pool.shape[3:])
+                        vals = flat[:, src * ps + i]
+                        rows = jnp.where(i < n_rows, dst * ps + i, P * ps)
+                        flat = flat.at[:, rows].set(vals, mode="drop")
+                        new[key] = flat.reshape(pool.shape)
+                    units[name] = new
+                return {**cache, "units": units}
+
+            self._copy = jax.jit(copy, donate_argnums=(0,))
+        return self._copy
+
+    def _suffix_step(self, args):
+        if self._suffix is None:
+            fn = jax.jit(make_prefill_suffix_step(
+                self.cfg, self.step_cfg, self.rules), donate_argnums=(1,))
+            self._suffix = fn.lower(*args).compile()
+        return self._suffix
+
+    def _prefill_suffix(self, slot: int, req: Request, m: int):
+        """Chunked paged prefill of the uncached suffix ``prompt[m:]``:
+        fixed-shape verify sweeps against the slot's (partly shared)
+        pages, committed rows advancing ``pos`` in place.  Returns the
+        logits row scoring the token after the prompt's last token."""
+        ecfg = self.ecfg
+        L = req.prompt_len
+        suffix = np.asarray(req.prompt[m:])
+        qc = ecfg.prefill_chunk
+        tok_shape = (ecfg.n_slots, qc) + suffix.shape[1:]
+        logits, r = None, 0
+        for c0 in range(0, L - m, qc):
+            r = min(qc, L - m - c0)
+            tok = np.zeros(tok_shape, np.int32)
+            tok[slot, :r] = suffix[c0:c0 + r]
+            ncommit = np.zeros((ecfg.n_slots,), np.int32)
+            ncommit[slot] = r
+            pos = self._pos.copy()
+            pos[slot] = m + c0
+            self.cache = {**self.cache, "pos": jnp.asarray(pos),
+                          "block_tables": jnp.asarray(self.kv.tables)}
+            args = (self.params, self.cache, jnp.asarray(tok),
+                    jnp.asarray(ncommit))
+            logits, self.cache = self._suffix_step(args)(*args)
+        return logits[slot, r - 1]
+
     # -- join ----------------------------------------------------------------
     def _sample_first(self, logits_row, rid: int):
         """Sample the prefill's token (greedy or temperature) — position
@@ -275,30 +384,60 @@ class ServeEngine:
             key, logits_row / self.ecfg.temperature, axis=-1)
         return np.asarray(nxt, np.int32)
 
-    def _join(self, slot: int, req: Request, t0: float) -> None:
+    def _join(self, slot: int, req: Request, m: int, copy, t0: float) -> None:
         L = req.prompt_len
         if L + req.max_new_tokens > self.ecfg.max_len:
             raise ValueError(f"request {req.rid}: prompt {L} + "
                              f"{req.max_new_tokens} new > max_len "
                              f"{self.ecfg.max_len}")
-        bucket = self._bucket(L)
-        pad_shape = (1, bucket - L) + req.prompt.shape[1:]
-        inputs = np.concatenate(
-            [req.prompt[None], np.zeros(pad_shape, np.int32)], axis=1)
-        logits, pcache = self._prefill(bucket)(self.params,
-                                               jnp.asarray(inputs))
-        first = self._sample_first(logits[0, L - 1], req.rid)
-        rows = jnp.asarray(self.kv.inject_rows(slot, bucket, L))
-        self.cache = self._inject(bucket)(self.cache, pcache["units"], rows)
+        if copy is not None:
+            # CoW: the match ended inside a shared page — duplicate the
+            # matched rows into the slot's private page before the suffix
+            # prefill writes right behind them
+            self.cache = self._page_copy()(
+                self.cache, jnp.asarray(copy.src_page, jnp.int32),
+                jnp.asarray(copy.dst_page, jnp.int32),
+                jnp.asarray(copy.n_rows, jnp.int32))
+            self.kv.copy_done(copy.src_page)
+        if m > 0:
+            # prefill ONLY the uncached suffix, through the paged verify
+            # sweep (chunked, fixed-shape, in-place commit)
+            logits_row = self._prefill_suffix(slot, req, m)
+        else:
+            # cold prompt: classic bucketed prefill + page inject
+            bucket = self._bucket(L)
+            pad_shape = (1, bucket - L) + req.prompt.shape[1:]
+            inputs = np.concatenate(
+                [req.prompt[None], np.zeros(pad_shape, np.int32)], axis=1)
+            logits, pcache = self._prefill(bucket)(self.params,
+                                                   jnp.asarray(inputs))
+            logits_row = logits[0, L - 1]
+            rows = jnp.asarray(self.kv.inject_rows(slot, bucket, L))
+            self.cache = self._inject(bucket)(self.cache, pcache["units"],
+                                              rows)
+        first = self._sample_first(logits_row, req.rid)
         self._pos[slot] = L
+        if self._use_prefix:
+            # index the prompt's (now fully written) pages for future joins
+            self.kv.register_prefix(slot, np.asarray(req.prompt))
         if self._drafter is not None:
             self._drafter.seed_request(self._dstate, slot, req.prompt, first)
         state = self.scheduler.slots[slot]
         state.next_token = first
+        state.tok_start = len(self._results[req.rid].tokens)
         res = self._results[req.rid]
         res.slot = slot
-        res.admit_step = self._now
-        res.admit_t = time.perf_counter() - t0
+        if res.admit_step < 0:        # requeued joins keep first-admit stats
+            res.admit_step = self._now
+            res.admit_t = time.perf_counter() - t0
+        res.prefill_tokens_saved += m
+        self._report.prompt_tokens += L
+        self._report.prefill_tokens_saved += m
+        if self.on_prefill is not None:
+            energy = self.on_prefill(L - m, m)
+            if energy:
+                self._report.energy_j += energy
+                res.energy_j += energy
         res.tokens.append(first.tolist() if first.ndim else int(first))
         if req.eos_id is not None and first.ndim == 0 \
                 and int(first) == req.eos_id:
@@ -310,6 +449,64 @@ class ServeEngine:
             res.finish_t = time.perf_counter() - t0
             self.scheduler.finish(slot)
             self._pos[slot] = 0
+
+    # -- preemption ----------------------------------------------------------
+    def _preempt(self, slot: int, t0: float) -> None:
+        """Evict ``slot`` on page pressure: re-queue its request with the
+        tokens generated so far folded into the prompt (arrival = now),
+        index its pages in the prefix cache (so the requeue mostly
+        restores instead of recomputing), then free the slot."""
+        state = self.scheduler.slots[slot]
+        req = state.request
+        res = self._results[req.rid]
+        gen = np.asarray(res.tokens[state.tok_start:], np.int32)
+        prompt = np.asarray(req.prompt, np.int32)
+        if gen.size:
+            prompt = np.concatenate([prompt, gen.reshape((-1,) +
+                                                         prompt.shape[1:])])
+        written = int(self._pos[slot])    # KV committed through written - 1
+        if self._use_prefix:
+            self.kv.register_prefix(slot, prompt[:written])
+        new_req = dataclasses.replace(req, prompt=prompt,
+                                      max_new_tokens=state.remaining,
+                                      arrival_step=self._now)
+        self.scheduler.finish(slot)
+        self._pos[slot] = 0
+        self._queue.push(new_req)
+        res.n_preemptions += 1
+        self._report.n_preemptions += 1
+
+    def _grow_pages(self, t0: float) -> None:
+        """Lazy-allocation mode: before a chunk, grow every active slot's
+        pages to cover the chunk's writes, preempting the lowest-priority
+        slot when the pool runs dry (``Scheduler.victim``: lowest
+        priority, then most recently admitted)."""
+        ecfg = self.ecfg
+        need = ecfg.decode_chunk * (ecfg.spec_k + 1)
+        slots = self.scheduler.slots
+        order = sorted(self.scheduler.active_slots(),
+                       key=lambda s: (-slots[s].request.priority,
+                                      slots[s].seq))
+        for slot in order:
+            if slots[slot] is None:
+                continue                   # preempted earlier this pass
+            # clamp the ask to the request's own context end: within-chunk
+            # overrun past the budget writes scratch (contained), so pages
+            # past ctx — or past the table width — are never needed
+            req = slots[slot].request
+            ctx = req.prompt_len + req.max_new_tokens - 1
+            target = min(int(self._pos[slot]) + need, ctx, self.kv.max_len)
+            while not self.kv.ensure(slot, target):
+                victim = self.scheduler.victim()
+                if victim == slot:
+                    if self.scheduler.n_active <= 1:
+                        raise RuntimeError(
+                            f"request {slots[slot].request.rid}: page pool "
+                            f"({self.kv.n_pages} pages) too small even at "
+                            "zero concurrency; raise n_pages")
+                    self._preempt(slot, t0)
+                    break
+                self._preempt(victim, t0)
 
     # -- harvest -------------------------------------------------------------
     def _harvest(self, toks: np.ndarray, t0: float) -> dict[int, int]:
@@ -369,6 +566,8 @@ class ServeEngine:
             max_new_tokens=r.max_new_tokens) for r in requests}
         self._now = 0
         report = EngineReport(results=[], spec_k=ecfg.spec_k)
+        self._queue = queue
+        self._report = report
         occ_sum = 0.0
         t0 = time.perf_counter()
         n_cb = self.cfg.n_codebooks
@@ -378,8 +577,12 @@ class ServeEngine:
 
         while len(queue) or self.scheduler.n_active:
             t_p = time.perf_counter()
-            for slot, req in self.scheduler.poll(queue, self._now):
-                self._join(slot, req, t0)
+            for slot, req, m, copy in self.scheduler.poll(queue, self._now):
+                self._join(slot, req, m, copy, t0)
+            if ecfg.preempt:
+                # grows/preempts but always leaves >= 1 slot active (the
+                # last survivor raises rather than self-preempting)
+                self._grow_pages(t0)
             report.prefill_wall_s += time.perf_counter() - t_p
 
             if self.scheduler.n_active == 0:

@@ -1,4 +1,4 @@
-"""Paged KV-cache manager: block tables + free list over shared page pools.
+"""Paged KV-cache manager: ref-counted pages + prefix sharing + free list.
 
 Replaces per-request ring buffers with a pool of fixed-size pages shared by
 every decode slot (vLLM's PagedAttention layout, collapsed to the needs of
@@ -6,7 +6,33 @@ this engine).  The device side — per-unit pools of shape ``(n_units,
 n_pages, page_size, Hkv, hd)`` plus per-slot ``block_tables``/``pos`` —
 comes from :func:`repro.models.transformer.init_paged_cache`; this class
 owns the *host* side: which physical page backs which logical block of
-which slot, and which pages are free.
+which slot, which pages are free, and — new in this layer — which pages
+hold a **cached prompt prefix** that future requests can map read-only
+instead of recomputing.
+
+Prefix sharing
+--------------
+Pages are immutable once full, and a page's KV rows depend only on the
+token ids of the whole prefix up to and including that page (RoPE is
+applied at absolute positions, and the layout is linear: block ``j`` holds
+positions ``[j*ps, (j+1)*ps)``).  So a trie keyed on page-sized token
+chunks indexes every cached prefix: ``admit_with_prefix`` walks it and maps
+the longest cached prefix onto shared read-only pages (refcount + 1 each),
+allocating private pages only for the uncached suffix.  When the match
+ends inside a page (the common system prompt is rarely page-aligned), the
+shared page cannot be mapped directly — the suffix prefill would write
+into it — so the manager emits a **copy-on-write** spec: the engine copies
+the matched rows into the slot's private page device-side and only then
+writes the suffix behind them.
+
+The trie itself holds one reference per indexed page, so a released
+request's prefix pages *survive* until evicted — this is what makes
+preemption cheap: a preempted request re-queued with its generated tokens
+folded into the prompt finds nearly all of its pages still cached and
+prefills only the tail.  When free pages run short, least-recently-used
+trie leaves are evicted (leaf-first keeps the index prefix-closed); a page
+is returned to the free list exactly when its last holder — slot or trie —
+lets go.
 
 Invariants the decode path relies on:
 
@@ -16,17 +42,48 @@ Invariants the decode path relies on:
     any validity branch in the jitted loop;
   * a live slot's table rows beyond its allocation also point at scratch,
     so within-chunk overrun past a request's budget stays contained;
-  * distinct slots never share a non-scratch page — the per-layer scatter
-    in ``gqa_decode_paged`` therefore never sees duplicate rows across the
-    batch.
+  * distinct slots never WRITE the same non-scratch page: shared pages are
+    mapped strictly below each holder's write frontier (the suffix starts
+    at or past the shared prefix), so the per-layer scatter in
+    ``gqa_decode_paged`` / ``commit_spec_paged`` never collides across the
+    batch;
+  * ``refcount[p]`` equals the number of holders (slots mapping p + one if
+    the trie indexes p); the free list is exactly the zero-refcount pages.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 
 import numpy as np
 
 from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class CopySpec:
+    """Copy-on-write order emitted by ``admit_with_prefix`` for a partial
+    page match: the engine must copy rows ``0..n_rows-1`` of ``src_page``
+    into ``dst_page`` device-side, then call ``copy_done(src_page)`` to
+    drop the read hold protecting the source from eviction-reuse."""
+    src_page: int
+    dst_page: int
+    n_rows: int
+
+
+class _TrieNode:
+    """One full page of cached prefix: ``tokens`` (page_size ids), the
+    physical page holding their KV, and children keyed on the next page's
+    token bytes."""
+    __slots__ = ("key", "tokens", "page", "parent", "children", "last_used")
+
+    def __init__(self, key, tokens, page, parent):
+        self.key = key
+        self.tokens = tokens
+        self.page = page
+        self.parent = parent
+        self.children: dict[bytes, _TrieNode] = {}
+        self.last_used = 0
 
 
 class PagedKVCache:
@@ -51,7 +108,11 @@ class PagedKVCache:
         self.tables = np.arange(self.n_slots, dtype=np.int32)[:, None].repeat(
             self.max_blocks, axis=1)
         self.free: deque[int] = deque(range(self.n_slots, self.n_pages))
-        self.allocated: dict[int, list[int]] = {}   # slot -> pages
+        self.allocated: dict[int, list[int]] = {}   # slot -> mapped pages
+        self.refcount = np.zeros((self.n_pages,), np.int64)
+        self._root = _TrieNode(None, None, -1, None)
+        self._clock = 0
+        self._copy_holds: dict[int, int] = {}       # page -> pending holds
 
     # -- device side --------------------------------------------------------
     def make_cache(self):
@@ -60,35 +121,262 @@ class PagedKVCache:
                                     self.page_size, self.max_blocks,
                                     dtype=self.dtype)
 
+    # -- refcount plumbing --------------------------------------------------
+    def _hold(self, page: int) -> None:
+        self.refcount[page] += 1
+
+    def _unhold(self, page: int) -> None:
+        self.refcount[page] -= 1
+        if self.refcount[page] < 0:
+            raise AssertionError(f"page {page}: refcount underflow")
+        if self.refcount[page] == 0:
+            self.free.append(page)
+
+    def _take_free(self) -> int:
+        page = self.free.popleft()
+        self._hold(page)
+        return page
+
+    # -- trie ---------------------------------------------------------------
+    def _chunks(self, tokens: np.ndarray):
+        """tokens split into full page_size chunks (bytes key + array)."""
+        ps = self.page_size
+        t = np.ascontiguousarray(np.asarray(tokens))
+        for j in range(len(t) // ps):
+            chunk = t[j * ps:(j + 1) * ps]
+            yield chunk.tobytes(), chunk
+
+    def _match(self, tokens: np.ndarray):
+        """Longest cached prefix of ``tokens``, capped at ``len - 1`` (at
+        least one token is always left to prefill so its logits exist).
+        Returns (full_nodes, partial) where partial is (node, n_rows) for a
+        match ending inside a page, or None."""
+        t = np.asarray(tokens)
+        max_share = len(t) - 1
+        node, full = self._root, []
+        for key, chunk in self._chunks(t):
+            if (len(full) + 1) * self.page_size > max_share:
+                break
+            child = node.children.get(key)
+            if child is None:
+                break
+            full.append(child)
+            node = child
+        off = len(full) * self.page_size
+        rem = min(self.page_size, max_share - off)
+        partial = None
+        if rem > 0:
+            want = np.asarray(t[off:off + rem]).reshape(rem, -1)
+            best, best_n = None, 0
+            for child in node.children.values():
+                have = np.asarray(child.tokens).reshape(self.page_size, -1)
+                eq = np.all(have[:rem] == want, axis=1)
+                n = int(eq.argmin()) if not eq.all() else rem
+                if n > best_n:
+                    best, best_n = child, n
+            if best is not None:
+                partial = (best, best_n)
+        return full, partial
+
+    def _leaves(self):
+        out, stack = [], [self._root]
+        while stack:
+            node = stack.pop()
+            if node is not self._root and not node.children:
+                out.append(node)
+            stack.extend(node.children.values())
+        return out
+
+    def _evict_one(self) -> bool:
+        """Drop a trie leaf (leaf-first keeps the index prefix-closed):
+        prefer leaves whose page the trie alone holds (evicting those
+        actually frees a page), least-recently-used among them.  Frees the
+        page iff the trie was the last holder."""
+        leaves = self._leaves()
+        if not leaves:
+            return False
+        victim = min(leaves,
+                     key=lambda n: (self.refcount[n.page] > 1, n.last_used))
+        del victim.parent.children[victim.key]
+        self._unhold(victim.page)
+        return True
+
+    def _reclaim(self, n_pages: int) -> bool:
+        """Evict trie entries until at least ``n_pages`` are free."""
+        while len(self.free) < n_pages:
+            if not self._evict_one():
+                return False
+        return True
+
+    def n_evictable(self) -> int:
+        """Pages the trie could surrender (trie is their only holder)."""
+        count, stack = 0, [self._root]
+        while stack:
+            node = stack.pop()
+            if node is not self._root and self.refcount[node.page] == 1:
+                count += 1
+            stack.extend(node.children.values())
+        return count
+
     # -- allocation ---------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(int(n_tokens), 1) // self.page_size)
 
     def can_admit(self, n_tokens: int) -> bool:
-        return self.pages_for(n_tokens) <= len(self.free)
+        return self.pages_for(n_tokens) <= len(self.free) + self.n_evictable()
+
+    def can_admit_with_prefix(self, tokens: np.ndarray,
+                              n_tokens: int) -> bool:
+        """Like ``can_admit`` but crediting pages the prefix cache already
+        holds for ``tokens`` — sharing raises admissible concurrency.
+        Matched pages are about to be *held*, not freed, so they must not
+        double-count as evictable headroom."""
+        full, partial = self._match(tokens)
+        n_blocks = self.pages_for(n_tokens)
+        full = full[:n_blocks]
+        need = n_blocks - len(full)
+        reserved = sum(1 for node in full if self.refcount[node.page] == 1)
+        if partial is not None and len(full) < n_blocks \
+                and self.refcount[partial[0].page] == 1:
+            reserved += 1
+        return need <= len(self.free) + self.n_evictable() - reserved
 
     def admit(self, slot: int, n_tokens: int) -> list[int]:
-        """Allocate pages covering ``n_tokens`` context positions for
-        ``slot`` and point its table's leading blocks at them."""
+        """Allocate private pages covering ``n_tokens`` context positions
+        for ``slot`` and point its table's leading blocks at them (no
+        prefix sharing — the legacy entry point)."""
+        pages = self._admit_pages(slot, self.pages_for(n_tokens), [])
+        return pages
+
+    def admit_with_prefix(self, slot: int, tokens: np.ndarray,
+                          n_tokens: int) -> tuple[int, CopySpec | None]:
+        """Map the longest cached prefix of ``tokens`` onto shared
+        read-only pages and allocate private pages for the rest (covering
+        ``n_tokens`` context positions total).
+
+        Returns ``(matched_len, copy)``: the engine prefills only
+        ``tokens[matched_len:]``.  ``copy`` (when the match ends inside a
+        page) orders a device-side copy of the matched rows into the
+        slot's first private page — copy-on-write, since the suffix
+        prefill is about to write right behind them."""
+        full, partial = self._match(tokens)
+        n_blocks = self.pages_for(n_tokens)
+        if len(full) > n_blocks:       # prompt cached deeper than the alloc
+            full = full[:n_blocks]
+            partial = None
+        if partial is not None and len(full) >= n_blocks:
+            partial = None
+        shared = []
+        for node in full:
+            self._hold(node.page)
+            node.last_used = self._clock
+            self._clock += 1
+            shared.append(node.page)
+        copy_src = None
+        if partial is not None:
+            node, rows = partial
+            node.last_used = self._clock
+            self._clock += 1
+            # protect the source page from evict-and-reuse (the reclaim
+            # inside _admit_pages included) until the engine has executed
+            # the copy
+            self._hold(node.page)
+            self._copy_holds[node.page] = \
+                self._copy_holds.get(node.page, 0) + 1
+            copy_src = (node.page, rows)
+        try:
+            self._admit_pages(slot, n_blocks, shared)
+        except ValueError:
+            for p in shared:
+                self._unhold(p)
+            if copy_src is not None:
+                self.copy_done(copy_src[0])
+            raise
+        matched = len(full) * self.page_size
+        copy = None
+        if copy_src is not None:
+            copy = CopySpec(src_page=copy_src[0],
+                            dst_page=int(self.tables[slot, len(full)]),
+                            n_rows=copy_src[1])
+            matched += copy_src[1]
+        return matched, copy
+
+    def _admit_pages(self, slot: int, n_blocks: int,
+                     shared: list[int]) -> list[int]:
         if slot in self.allocated:
             raise ValueError(f"slot {slot} already holds an allocation")
-        need = self.pages_for(n_tokens)
-        if need > len(self.free):
+        if n_blocks > self.max_blocks:
+            raise ValueError(f"request needs {n_blocks} blocks > table "
+                             f"width {self.max_blocks} "
+                             f"(max_len {self.max_len})")
+        need = n_blocks - len(shared)
+        if not self._reclaim(need):
             raise ValueError(f"slot {slot}: {need} pages needed, "
                              f"{len(self.free)} free")
-        if need > self.max_blocks:
-            raise ValueError(f"request needs {need} blocks > table width "
-                             f"{self.max_blocks} (max_len {self.max_len})")
-        pages = [self.free.popleft() for _ in range(need)]
+        pages = list(shared) + [self._take_free() for _ in range(need)]
         self.tables[slot, :] = slot                 # park the tail on scratch
-        self.tables[slot, :need] = pages
+        self.tables[slot, :n_blocks] = pages
         self.allocated[slot] = pages
         return pages
 
+    def copy_done(self, src_page: int) -> None:
+        """Release the read hold taken for a pending ``CopySpec``."""
+        holds = self._copy_holds.get(src_page, 0)
+        if holds <= 0:
+            raise ValueError(f"page {src_page}: no pending copy hold")
+        if holds == 1:
+            del self._copy_holds[src_page]
+        else:
+            self._copy_holds[src_page] = holds - 1
+        self._unhold(src_page)
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s allocation to cover ``n_tokens`` context
+        positions, evicting cached prefixes if needed.  Returns False when
+        the pool cannot provide (the scheduler preempts someone)."""
+        if slot not in self.allocated:
+            raise ValueError(f"slot {slot} is not allocated")
+        need = self.pages_for(n_tokens)
+        if need > self.max_blocks:
+            raise ValueError(f"slot {slot}: {need} blocks > table width "
+                             f"{self.max_blocks} (max_len {self.max_len})")
+        cur = len(self.allocated[slot])
+        if need <= cur:
+            return True
+        if not self._reclaim(need - cur):
+            return False
+        for j in range(cur, need):
+            page = self._take_free()
+            self.tables[slot, j] = page
+            self.allocated[slot].append(page)
+        return True
+
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> None:
+        """Index ``slot``'s now-written pages in the prefix trie: every
+        full page of ``tokens`` (KV must already be committed for all of
+        them).  Pages already indexed for the same token prefix are left
+        alone — the slot's duplicate stays private and dies with it."""
+        n_blocks = len(self.allocated.get(slot, ()))
+        node = self._root
+        for j, (key, chunk) in enumerate(self._chunks(tokens)):
+            if j >= n_blocks:
+                break
+            child = node.children.get(key)
+            if child is None:
+                page = int(self.tables[slot, j])
+                child = _TrieNode(key, chunk.copy(), page, node)
+                node.children[key] = child
+                self._hold(page)
+            child.last_used = self._clock
+            self._clock += 1
+            node = child
+
     def release(self, slot: int) -> None:
-        """Return ``slot``'s pages to the free list and park it."""
-        pages = self.allocated.pop(slot, [])
-        self.free.extend(pages)
+        """Drop ``slot``'s holds and park it.  Pages the trie still
+        indexes survive as cached prefixes; the rest return to the free
+        list."""
+        for page in self.allocated.pop(slot, []):
+            self._unhold(page)
         self.tables[slot, :] = slot
 
     # -- injection helper ---------------------------------------------------

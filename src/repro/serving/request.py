@@ -21,6 +21,7 @@ class Request:
     max_new_tokens: int
     arrival_step: int = 0         # engine decode-step clock
     eos_id: int | None = None     # None: run to max_new_tokens
+    priority: int = 0             # higher = preempted later (ties: FIFO)
 
     @property
     def prompt_len(self) -> int:
@@ -43,6 +44,8 @@ class RequestResult:
     energy_j: float = 0.0         # share of chunk energy, occupied-slots only
     admit_t: float = 0.0          # wall clock, engine-relative seconds
     finish_t: float = 0.0
+    n_preemptions: int = 0        # times this request was evicted + requeued
+    prefill_tokens_saved: int = 0  # prompt tokens restored from the prefix cache
 
     @property
     def n_tokens(self) -> int:

@@ -141,3 +141,98 @@ def test_f_curve_finite_everywhere(a, b, c):
     x = np.linspace(0.0, 1.0, 50)
     y = f_curve(x, (a, b, c, a, b, c, 1.0))
     assert np.all(np.isfinite(y))
+
+
+# --------------------------------------------------------------------------
+# prefix-sharing paged KV cache invariants
+# --------------------------------------------------------------------------
+def _kv_check(kv):
+    """Structural invariants of the ref-counted prefix-sharing page pool:
+    no leak, no double-free, refcounts == holders exactly, scratch parking
+    preserved."""
+    holders = np.zeros_like(kv.refcount)
+    for slot, pages in kv.allocated.items():
+        for p in pages:
+            assert p >= kv.n_slots, "scratch page mapped as allocation"
+            holders[p] += 1
+        # tail rows beyond the allocation are parked on the slot's scratch
+        assert (kv.tables[slot, len(pages):] == slot).all()
+        assert (kv.tables[slot, :len(pages)] == pages).all()
+    stack = [kv._root]
+    while stack:
+        node = stack.pop()
+        if node is not kv._root:
+            assert node.page >= kv.n_slots, "scratch page in the trie"
+            holders[node.page] += 1
+        stack.extend(node.children.values())
+    for page, n in kv._copy_holds.items():
+        assert n > 0
+        holders[page] += n
+    assert (kv.refcount == holders).all(), "refcount != actual holders"
+    free = list(kv.free)
+    assert len(free) == len(set(free)), "double-free: duplicate free page"
+    assert all(p >= kv.n_slots for p in free), "scratch page freed"
+    # a page is free exactly when its last holder released it
+    zero = {int(p) for p in np.nonzero(kv.refcount == 0)[0]
+            if p >= kv.n_slots}
+    assert set(free) == zero, "leak: zero-refcount page not in free list"
+    for slot in range(kv.n_slots):
+        assert kv.refcount[slot] == 0
+        bound = [s for s, pages in kv.allocated.items()
+                 if slot in pages]
+        assert not bound, "scratch page cross-mapped"
+
+
+@_settings
+@given(st.integers(0, 10_000))
+def test_paged_kv_invariants_under_random_ops(seed):
+    """Random admit/share/ensure/register/release/preempt sequences keep
+    the pool sound: pages are never leaked or double-freed, refcounts hit
+    zero exactly when the last holder (slot, trie, or pending copy) lets
+    go, and scratch parking survives everything.  A tiny vocabulary makes
+    prefix collisions (and therefore sharing + CoW) frequent."""
+    from repro.configs import get_arch
+    from repro.serving import PagedKVCache
+    cfg = get_arch("smollm-135m").smoke
+    rng = np.random.default_rng(seed)
+    kv = PagedKVCache(cfg, n_slots=3, page_size=4, max_len=32,
+                      n_pages=3 + rng.integers(6, 14))
+    prompts: dict[int, np.ndarray] = {}
+    for _ in range(40):
+        op = rng.integers(0, 5)
+        free_slots = [s for s in range(kv.n_slots) if s not in kv.allocated]
+        live = list(kv.allocated)
+        if op == 0 and free_slots:                       # admit (maybe share)
+            slot = int(rng.choice(free_slots))
+            tokens = rng.integers(0, 3, size=int(rng.integers(1, 21)))
+            tokens = tokens.astype(np.int32)
+            n_alloc = min(len(tokens) + int(rng.integers(0, 8)), kv.max_len)
+            if kv.can_admit_with_prefix(tokens, n_alloc):
+                m, copy = kv.admit_with_prefix(slot, tokens, n_alloc)
+                assert 0 <= m <= len(tokens) - 1
+                prompts[slot] = tokens
+                if copy is not None:
+                    _kv_check(kv)                        # holds visible
+                    kv.copy_done(copy.src_page)
+        elif op == 1 and live:                           # ensure (grow)
+            slot = int(rng.choice(live))
+            kv.ensure(slot, int(rng.integers(1, kv.max_len + 1)))
+        elif op == 2 and live:                           # register prefix
+            slot = int(rng.choice(live))
+            t = prompts[slot]
+            kv.register_prefix(slot, t[:int(rng.integers(0, len(t) + 1))])
+        elif op == 3 and live:                           # release
+            slot = int(rng.choice(live))
+            kv.release(slot)
+            prompts.pop(slot, None)
+        elif op == 4 and live:                           # preempt = reg + rel
+            slot = int(rng.choice(live))
+            kv.register_prefix(slot, prompts[slot])
+            kv.release(slot)
+            prompts.pop(slot, None)
+        _kv_check(kv)
+    for slot in list(kv.allocated):
+        kv.release(slot)
+        _kv_check(kv)
+    # with every slot gone, only the trie holds pages — all evictable
+    assert int((kv.refcount > 0).sum()) == kv.n_evictable()

@@ -154,6 +154,146 @@ def test_engine_report_zero_guards(smollm):
         assert v == 0.0 and np.isfinite(v)
 
 
+def test_prefix_sharing_token_parity(smollm):
+    """Prefix sharing is invisible in the output: on a shared-prefix trace
+    the sharing engine emits EXACTLY the no-sharing engine's per-request
+    greedy streams while prefilling far fewer prompt tokens.  The 11-token
+    shared head over page_size 4 ends mid-page, so the copy-on-write path
+    (partial shared page duplicated into a private page) is exercised."""
+    cfg, params = smollm
+    reqs = poisson_trace(6, rate_per_step=0.3, seed=7,
+                         vocab_size=cfg.vocab_size, prompt_len=(3, 9),
+                         max_new_tokens=(4, 10), shared_prefix_len=11,
+                         prompt_pools=2)
+    ecfg = dataclasses.replace(ECFG, max_len=64)
+    share = ServeEngine(cfg, dataclasses.replace(ecfg, prefix_cache=True),
+                        params).run(reqs)
+    plain = ServeEngine(cfg, dataclasses.replace(ecfg, prefix_cache=False,
+                                                 preempt=False),
+                        params).run(reqs)
+    for a, b in zip(share.results, plain.results):
+        np.testing.assert_array_equal(np.asarray(a.tokens),
+                                      np.asarray(b.tokens),
+                                      err_msg=f"rid {a.rid}")
+    assert share.prefill_tokens_saved > 0
+    assert 0.0 < share.prefix_hit_rate <= 1.0
+    assert share.prompt_tokens == plain.prompt_tokens
+    assert plain.prefill_tokens_saved == 0 and plain.prefix_hit_rate == 0.0
+    # at least one join saved tokens on a request-level counter too
+    assert sum(r.prefill_tokens_saved for r in share.results) \
+        == share.prefill_tokens_saved
+
+
+def test_preemption_requeue_parity(smollm):
+    """A page pool too small for every admitted context forces mid-decode
+    preemption: the victim's generated tokens fold into its prompt, it
+    re-queues, and its final stream is STILL bit-identical to the
+    ample-pool engine — with the prefix cache restoring the requeue, and
+    without it (full recompute)."""
+    cfg, params = smollm
+    reqs = batch_trace(3, seed=5, vocab_size=cfg.vocab_size, prompt_len=6,
+                       max_new_tokens=14)
+    ample = ServeEngine(cfg, dataclasses.replace(ECFG, prefix_cache=False,
+                                                 preempt=False),
+                        params).run(reqs)
+    # 2 scratch + 6 usable pages; each context needs ceil((6+14)/4) = 5
+    tight = dataclasses.replace(ECFG, n_pages=2 + 6, preempt=True)
+    for prefix in (True, False):
+        rep = ServeEngine(cfg, dataclasses.replace(tight,
+                                                   prefix_cache=prefix),
+                          params).run(reqs)
+        assert rep.n_preemptions > 0
+        for a, b in zip(rep.results, ample.results):
+            np.testing.assert_array_equal(
+                np.asarray(a.tokens), np.asarray(b.tokens),
+                err_msg=f"rid {a.rid} prefix={prefix}")
+        assert sum(r.n_preemptions for r in rep.results) == rep.n_preemptions
+        if prefix:
+            # the requeue found its own pages in the cache
+            assert rep.prefill_tokens_saved > 0
+
+
+def test_scheduler_skip_ahead(smollm):
+    """Head-of-line fix: when the queue head cannot get pages, a bounded
+    skip-ahead admits smaller requests behind it; with max_skip=0 the old
+    strict-FIFO stall is preserved, and admitted order stays FIFO among
+    the requests that fit."""
+    from repro.serving import RequestQueue, Scheduler
+    cfg, _ = smollm
+
+    def mk_reqs():
+        return [
+            Request(rid=0, prompt=np.zeros(13, np.int32), max_new_tokens=8),
+            Request(rid=1, prompt=np.zeros(5, np.int32), max_new_tokens=4),
+            Request(rid=2, prompt=np.zeros(5, np.int32), max_new_tokens=4),
+        ]
+
+    def mk_kv():
+        # 4 usable pages; rid 0 needs 5 (13 + 8 - 1 -> 20 tokens), rids
+        # 1/2 need 2 each
+        return PagedKVCache(cfg, n_slots=2, page_size=4, max_len=32,
+                            n_pages=2 + 4)
+
+    sched = Scheduler(2, mk_kv(), max_skip=1)
+    joins = sched.poll(RequestQueue(mk_reqs()), 0)
+    assert [j[1].rid for j in joins] == [1, 2]      # FIFO among admissible
+
+    strict = Scheduler(2, mk_kv(), max_skip=0)
+    assert strict.poll(RequestQueue(mk_reqs()), 0) == []
+
+    # when the head fits, ordering is plain FIFO regardless of max_skip
+    fifo = Scheduler(2, mk_kv(), max_skip=3)
+    queue = RequestQueue(mk_reqs()[1:])
+    assert [j[1].rid for j in fifo.poll(queue, 0)] == [1, 2]
+
+
+def test_paged_kv_prefix_sharing_unit(smollm):
+    """admit_with_prefix maps cached full pages read-only (refcounted),
+    emits a copy-on-write spec at partial-page boundaries, and trie-held
+    pages survive release until evicted."""
+    cfg, _ = smollm
+    kv = PagedKVCache(cfg, n_slots=2, page_size=4, max_len=32, n_pages=12)
+    tokens = np.arange(12, dtype=np.int32)          # 3 full pages
+    m, copy = kv.admit_with_prefix(0, tokens, 12)
+    assert m == 0 and copy is None                  # cold cache
+    kv.register_prefix(0, tokens)                   # index pages 0/1/2
+    p0, p1, p2 = (int(kv.tables[0, j]) for j in range(3))
+    assert kv.refcount[p0] == 2 and kv.refcount[p2] == 2   # slot + trie
+    kv.release(0)
+    assert kv.refcount[p0] == 1 and kv.refcount[p2] == 1   # trie keeps them
+
+    # 11-token prompt sharing the head: 2 full pages restored read-only,
+    # then rows 8/9 of the cached third page via copy-on-write (the match
+    # is capped at L-1 = 10, so at most 2 of page 2's rows can match)
+    m, copy = kv.admit_with_prefix(1, tokens[:11], 11)
+    assert m == 10                                  # 8 full + 2 CoW rows
+    assert copy is not None and copy.n_rows == 2
+    assert copy.src_page == p2
+    assert copy.dst_page == kv.tables[1, 2]
+    assert kv.tables[1, 0] == p0 and kv.tables[1, 1] == p1
+    assert kv.refcount[p0] == 2                     # shared read-only again
+    assert kv.refcount[p2] == 2                     # trie + pending copy
+    kv.copy_done(copy.src_page)
+    assert kv.refcount[p2] == 1
+    kv.release(1)
+
+    # diverging prompt: only the common full pages match, no CoW
+    other = np.concatenate([tokens[:8], np.full(6, 77, np.int32)])
+    assert kv.can_admit_with_prefix(other, 14)
+    m2, copy2 = kv.admit_with_prefix(1, other, 14)
+    assert m2 == 8 and copy2 is None
+    kv.release(1)
+
+    # eviction reclaims trie-only pages when the pool runs dry
+    kv2 = PagedKVCache(cfg, n_slots=1, page_size=4, max_len=16, n_pages=5)
+    kv2.admit_with_prefix(0, np.arange(8, dtype=np.int32), 8)
+    kv2.register_prefix(0, np.arange(8, dtype=np.int32))
+    kv2.release(0)
+    assert kv2.n_free == 2 and kv2.n_evictable() == 2
+    kv2.admit(0, 16)                                # needs all 4 -> evicts
+    assert kv2.n_free == 0 and kv2.n_evictable() == 0
+
+
 def test_paged_kv_manager_invariants(smollm):
     cfg, _ = smollm
     kv = PagedKVCache(cfg, n_slots=2, page_size=4, max_len=32, n_pages=8)
