@@ -50,6 +50,15 @@ TRAJECTORY = {
         "j_per_token_ratio_vs_plain": r["j_per_token_ratio"],
         "p50_latency_ratio_vs_plain": r["p50_latency_ratio"],
     },
+    "chaos": lambda r: {
+        "tok_per_s": r["tok_per_s"],
+        "tokens_lost": r["tokens_lost"],
+        "n_restores": r["n_restores"],
+        "requests_requeued": r["requests_requeued"],
+        "recovery_latency_s": r["recovery_latency_s"],
+        "degraded_steps": r["degraded_steps"],
+        "j_per_token_overhead_vs_faultfree": r["j_per_token_overhead"],
+    },
 }
 
 # one human-readable headline CSV line per trajectory job (printed for CI
@@ -69,6 +78,12 @@ HEADLINE = {
                          f"{r['prefill_tokens_saved']} prefill tokens "
                          f"saved; {r['j_per_token_ratio']:.2f}x J/token, "
                          f"{r['p50_latency_ratio']:.2f}x p50 vs no-sharing"),
+    "chaos": lambda r: (f"chaos.tokens_lost,{r['tokens_lost']},"
+                        f"{r['n_restores']} crash-restores, "
+                        f"{r['requests_requeued']} requeued, "
+                        f"{r['degraded_steps']} capped steps; "
+                        f"{r['j_per_token_overhead']:.2f}x J/token "
+                        "vs fault-free"),
 }
 
 
@@ -104,10 +119,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (ctrl_overhead, decode_throughput, fig2_energy,
-                            fig3_overhead, fig4_capping, fig5_edxp,
-                            fig6_tradeoff, prefix_cache, roofline,
-                            serve_engine, spec_decode)
+    from benchmarks import (chaos_serve, ctrl_overhead, decode_throughput,
+                            fig2_energy, fig3_overhead, fig4_capping,
+                            fig5_edxp, fig6_tradeoff, prefix_cache,
+                            roofline, serve_engine, spec_decode)
     ART.mkdir(parents=True, exist_ok=True)
     jobs = {
         "fig2": lambda: fig2_energy.main(quick=args.quick),
@@ -120,6 +135,7 @@ def main(argv=None) -> int:
         "serve": lambda: serve_engine.main(quick=args.quick),
         "spec": lambda: spec_decode.main(quick=args.quick),
         "prefix": lambda: prefix_cache.main(quick=args.quick),
+        "chaos": lambda: chaos_serve.main(quick=args.quick),
         "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],
     }
     failures = 0

@@ -101,8 +101,14 @@ def restore_pytree(like: Any, directory: str | os.PathLike,
     for (path, leaf), sh in zip(paths, sh_leaves):
         key = _SEP.join(_path_str(p) for p in path)
         arr = data[key]
-        if hasattr(leaf, "dtype"):
-            arr = arr.astype(leaf.dtype)
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            if arr.dtype.kind == "V" and \
+                    np.dtype(leaf.dtype).itemsize == arr.dtype.itemsize:
+                # extended dtypes (bfloat16 / fp8) survive np.savez only as
+                # raw void bytes — bit-reinterpret, never value-cast
+                arr = arr.view(leaf.dtype)
+            else:
+                arr = arr.astype(leaf.dtype)
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:

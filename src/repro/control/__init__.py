@@ -15,15 +15,16 @@ controllers:
 ``online``/``coordinator`` are exported lazily (PEP 562) because they pull
 in ``repro.core``, which itself publishes events from this package.
 """
-from repro.control.bus import EventBus, pipe
-from repro.control.events import (CapApplied, DriftDetected, Event,
-                                  FitUpdated, PolicyUpdated, PowerSampled,
-                                  StepDone, as_dict)
+from repro.control.bus import DeadLetter, EventBus, pipe
+from repro.control.events import (CapApplied, DriftDetected, EmergencyPower,
+                                  Event, FitUpdated, NodeDerated,
+                                  PolicyUpdated, PowerSampled, StepDone,
+                                  as_dict)
 
 __all__ = [
-    "EventBus", "pipe",
+    "EventBus", "DeadLetter", "pipe",
     "Event", "StepDone", "PowerSampled", "CapApplied", "DriftDetected",
-    "PolicyUpdated", "FitUpdated", "as_dict",
+    "PolicyUpdated", "FitUpdated", "NodeDerated", "EmergencyPower", "as_dict",
     "OnlineCapProfiler", "ClusterCoordinator",
 ]
 

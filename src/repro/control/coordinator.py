@@ -22,7 +22,8 @@ import dataclasses
 from typing import Callable
 
 from repro.control.bus import EventBus
-from repro.control.events import CapApplied, PowerSampled, StepDone
+from repro.control.events import (CapApplied, NodeDerated, PowerSampled,
+                                  StepDone)
 from repro.core.powermodel import PowerCappedDevice, WorkloadProfile
 from repro.core.powershift import ClusterNode, ShiftPlan, allocate_power
 from repro.core.profiler import CapBackend, RecordingBackend
@@ -65,6 +66,7 @@ class ClusterCoordinator:
         self._unsubs = [
             bus.subscribe(StepDone, self._on_step),
             bus.subscribe(PowerSampled, self._on_power),
+            bus.subscribe(NodeDerated, self._on_derated),
         ]
 
     def close(self) -> None:
@@ -108,6 +110,16 @@ class ClusterCoordinator:
         self._steps_since_rebalance += 1
         if self._steps_since_rebalance >= self.rebalance_every:
             self.rebalance()
+
+    def _on_derated(self, ev: NodeDerated) -> None:
+        """A supervisor inferred a derate out-of-band (heartbeat latencies,
+        not step telemetry).  Adopt it directly — it is fresher than the
+        rebalance-window estimate and the next `_update_derate` will refine
+        it once step telemetry under the new caps accumulates."""
+        st = self._nodes.get(ev.node_id)
+        if st is None:
+            return
+        st.derate_est = float(min(1.0, max(self.min_derate, ev.derate)))
 
     def _update_derate(self, st: _NodeState) -> None:
         """Observed/predicted step time at the node's current cap -> an

@@ -95,6 +95,26 @@ class FitUpdated(Event):
     n_probes: int
 
 
+@dataclasses.dataclass(frozen=True)
+class NodeDerated(Event):
+    """A supervisor inferred a thermal/silicon derate from heartbeat
+    latencies (1.0 = healthy).  The cluster coordinator folds this into
+    its next power rebalance — the serving half of the FROST
+    straggler-mitigation loop (see docs/fault_tolerance.md)."""
+    derate: float
+    source: str = ""             # who inferred it (supervisor / coordinator)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmergencyPower(Event):
+    """A power emergency (site cap slash / thermal trip) started or
+    cleared.  Serving reacts by *degrading* — pause admission, shrink the
+    decode chunk, drop speculative K — instead of violating the cap."""
+    cap: float                   # cap fraction in force for the window
+    active: bool                 # True = window opened, False = cleared
+    reason: str = "emergency"
+
+
 def as_dict(event: Event) -> Mapping[str, Any]:
     """Loggable view (FitResult/QoSPolicy collapsed to identifiers)."""
     out: dict[str, Any] = dataclasses.asdict(event)

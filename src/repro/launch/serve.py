@@ -42,10 +42,21 @@ with the *measured* wall time and the useful token count; the
 ``OnlineCapProfiler`` amortises probes over the live stream and cap
 commands are honoured between chunks.  ``--power-budget`` additionally
 gates admission on the predicted board draw under the cap in force.
+
+``--chaos "kind@step[:duration[:arg]],..."`` arms a seeded fault injector
+on the engine's decode-step clock (poisson mode only) — slot/engine
+crashes, KV-page corruption, telemetry drops, stalls, and power
+emergencies.  An ``engine_crash`` is recovered here: the launcher restores
+from the last committed snapshot (``--snapshot-dir`` / ``--snapshot-every``)
+and ``resume()``s, requeueing the dead engine's in-flight requests with
+zero token loss.  A :class:`ServingSupervisor` rides along: engine chunks
+are its heartbeats, wall-time inflation becomes a published ``NodeDerated``
+derate estimate.  See docs/fault_tolerance.md.
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import jax
@@ -60,14 +71,16 @@ from repro.core import (BALANCED, PowerCappedDevice, QoSPolicy, TPU_V5E,
 from repro.core.profiler import RecordingBackend
 from repro.data import DataConfig, TokenBatches
 from repro.launch.mesh import make_host_mesh
+from repro.runtime.chaos import ChaosBus, FaultInjector
+from repro.runtime.fault import ServingSupervisor
 from repro.runtime.sharding import build_rules
 from repro.runtime.speculate import get_drafter
 from repro.runtime.steps import (StepConfig, make_decode_loop,
                                  make_prefill_step,
                                  make_speculative_decode_loop)
 from repro.models import transformer as tfm
-from repro.serving import (EnergyAwareAdmission, EngineConfig, ServeEngine,
-                           batch_trace, poisson_trace)
+from repro.serving import (EnergyAwareAdmission, EngineConfig, EngineCrash,
+                           ServeEngine, batch_trace, poisson_trace)
 from repro.telemetry.meters import AnalyticDeviceMeter, CpuProcessMeter, DramMeter
 from repro.telemetry.sampler import PowerSampler
 
@@ -353,10 +366,58 @@ def run_engine(args, cfg, step_cfg, rules, params,
         n_codebooks=cfg.n_codebooks, eos_id=args.eos_id,
         shared_prefix_len=args.shared_prefix_len,
         prompt_pools=args.prompt_pools)
-    engine = ServeEngine(cfg, ecfg, params, step_cfg=step_cfg, rules=rules,
-                         on_chunk=on_chunk, on_prefill=on_prefill,
-                         admission=admission)
-    rep = engine.run(trace)
+    # -- chaos / fault-tolerance wiring (docs/fault_tolerance.md) ---------
+    injector = None
+    if args.chaos:
+        injector = FaultInjector.from_spec(args.chaos, seed=args.chaos_seed)
+    snapshot_dir = args.snapshot_dir
+    if snapshot_dir is None and injector is not None and \
+            any(ev.kind == "engine_crash" for ev in injector.events):
+        # a crash without a snapshot dir would lose work — default to a
+        # throwaway dir so the drill recovers instead of dying
+        snapshot_dir = tempfile.mkdtemp(prefix="serve_snap_")
+        print(f"[chaos] engine_crash armed; snapshots -> {snapshot_dir}")
+    snapshot_every = args.snapshot_every if snapshot_dir is not None else 0
+
+    supervisor = ServingSupervisor(bus=frost.bus if frost is not None
+                                   else None, node_id="serve-0")
+    cbus = ChaosBus(frost.bus) if frost is not None else None
+    if cbus is not None:
+        frost.bus = cbus       # emit_chunk publishes through the chaos shim
+
+    def on_fault(ev):
+        # bus_drop / bus_delay disturb the telemetry transport, not the
+        # engine: swallow or hold the next N publishes on the control bus
+        if cbus is None:
+            return
+        if ev.kind == "bus_drop":
+            cbus.drop_next(max(1, ev.duration))
+        elif ev.kind == "bus_delay":
+            cbus.delay_next(max(1, ev.duration))
+
+    eng_kwargs = dict(step_cfg=step_cfg, rules=rules, on_chunk=on_chunk,
+                      on_prefill=on_prefill, admission=admission,
+                      injector=injector,
+                      on_heartbeat=supervisor.on_heartbeat, on_fault=on_fault,
+                      snapshot_every=snapshot_every)
+    engine = ServeEngine(cfg, ecfg, params, snapshot_dir=snapshot_dir,
+                         **eng_kwargs)
+    restarts = 0
+    while True:
+        try:
+            rep = engine.resume() if restarts else engine.run(trace)
+            break
+        except EngineCrash as crash:
+            restarts += 1
+            if snapshot_dir is None or restarts > args.max_restarts:
+                raise
+            print(f"[chaos] engine crashed at step {crash.step}; "
+                  f"restoring from {snapshot_dir} "
+                  f"(restart {restarts}/{args.max_restarts})")
+            engine = ServeEngine.restore(cfg, ecfg, params, snapshot_dir,
+                                         **eng_kwargs)
+    if cbus is not None:
+        cbus.flush()           # deliver anything a bus_delay still holds
 
     lat = rep.latency_percentiles((50, 95))
     waits = [r.wait_steps for r in rep.results if r.admit_step >= 0]
@@ -386,6 +447,19 @@ def run_engine(args, cfg, step_cfg, rules, params,
     print(f"[serve] latency p50 {lat[50]:.0f} / p95 {lat[95]:.0f} steps; "
           f"queue wait mean {np.mean(waits):.1f} steps"
           if waits else "[serve] nothing admitted")
+    if injector is not None:
+        kinds = ", ".join(f"{ev.kind}@{ev.step}" for ev in injector.log)
+        print(f"[chaos] {rep.n_faults_injected} faults injected ({kinds}); "
+              f"{rep.n_restores} restores, {rep.requeued_requests} requests "
+              f"requeued, {rep.degraded_steps} degraded steps, "
+              f"{rep.n_pages_quarantined} pages quarantined")
+        if cbus is not None and (cbus.n_dropped or cbus.n_delayed):
+            print(f"[chaos] telemetry: {cbus.n_dropped} publishes dropped, "
+                  f"{cbus.n_delayed} delayed (flushed at exit)")
+    derate = supervisor.workers[supervisor.node_id].derate
+    if supervisor.n_derates_published:
+        print(f"[supervisor] derate estimate {derate:.0%} "
+              f"({supervisor.n_derates_published} NodeDerated published)")
     for r in rep.results[:4]:
         print(f"[serve]   rid={r.rid} L={r.prompt_len} "
               f"gen={r.n_tokens}/{r.max_new_tokens} wait={r.wait_steps} "
@@ -443,6 +517,22 @@ def main():
                     help="free a slot early when this token is sampled")
     ap.add_argument("--power-budget", type=float, default=0.0,
                     help="W; >0 gates admission on predicted board draw")
+    ap.add_argument("--chaos", type=str, default="",
+                    help="fault schedule 'kind@step[:duration[:arg]],...' "
+                         "on the engine clock (poisson mode), e.g. "
+                         "'slot_crash@20,engine_crash@40,"
+                         "emergency_cap@60:16:0.5'")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the fault injector's RNG (corruption "
+                         "site choice)")
+    ap.add_argument("--snapshot-dir", type=str, default=None,
+                    help="engine snapshot directory (crash recovery); "
+                         "auto tempdir when --chaos arms an engine_crash")
+    ap.add_argument("--snapshot-every", type=int, default=4,
+                    help="snapshot every N decode chunks (needs "
+                         "--snapshot-dir or an armed engine_crash)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="crash-restore attempts before giving up")
     ap.add_argument("--no-frost", action="store_true",
                     help="disable the FROST control plane (no sampler, "
                          "meters, or bus are even built)")

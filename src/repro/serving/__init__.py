@@ -12,12 +12,16 @@ Layering::
     engine       ServeEngine — prefill-on-join (suffix-only on prefix
                  hits), fused masked decode chunks, preemption/requeue on
                  page pressure, free-on-finish, per-request latency +
-                 J/token accounting
+                 J/token accounting; chaos injection, snapshot/restore
+                 (EngineCrash recovery), graceful degradation under
+                 emergency caps
 
-See docs/serving_engine.md and docs/prefix_cache.md.
+See docs/serving_engine.md, docs/prefix_cache.md and
+docs/fault_tolerance.md.
 """
 from repro.serving.engine import (ChunkStats, EnergyAwareAdmission,
-                                  EngineConfig, EngineReport, ServeEngine)
+                                  EngineConfig, EngineCrash, EngineReport,
+                                  ServeEngine)
 from repro.serving.paged_kv import CopySpec, PagedKVCache
 from repro.serving.request import Request, RequestResult
 from repro.serving.scheduler import RequestQueue, Scheduler
@@ -25,7 +29,7 @@ from repro.serving.traffic import batch_trace, poisson_trace
 
 __all__ = [
     "ChunkStats", "CopySpec", "EnergyAwareAdmission", "EngineConfig",
-    "EngineReport", "PagedKVCache", "Request", "RequestQueue",
-    "RequestResult", "Scheduler", "ServeEngine", "batch_trace",
-    "poisson_trace",
+    "EngineCrash", "EngineReport", "PagedKVCache", "Request",
+    "RequestQueue", "RequestResult", "Scheduler", "ServeEngine",
+    "batch_trace", "poisson_trace",
 ]

@@ -39,6 +39,7 @@ more host mirror, seeded at prefill-on-join.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Callable
 
@@ -46,7 +47,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.store import CheckpointManager, restore_pytree
 from repro.models import transformer as tfm
+from repro.runtime.chaos import FaultInjector, corrupt_paged_kv
 from repro.runtime.speculate import get_drafter
 from repro.runtime.steps import (StepConfig, make_paged_decode_loop,
                                  make_paged_speculative_decode_loop,
@@ -54,6 +57,16 @@ from repro.runtime.steps import (StepConfig, make_paged_decode_loop,
 from repro.serving.paged_kv import PagedKVCache
 from repro.serving.request import Request, RequestResult
 from repro.serving.scheduler import RequestQueue, Scheduler
+
+
+class EngineCrash(RuntimeError):
+    """Injected engine-process death (chaos drills).  Carries the decode
+    step at which the engine died so recovery latency can be reported;
+    callers recover via ``ServeEngine.restore`` + ``resume``."""
+
+    def __init__(self, step: int):
+        super().__init__(f"engine crashed at step {step}")
+        self.step = int(step)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +116,8 @@ class ChunkStats:
     tokens_computed: int          # n_active * chunk * (K+1) (incl. overrun)
     drafts_proposed: int = 0      # speculative mode only
     drafts_accepted: int = 0
+    clock_step: int = 0           # engine decode-step clock at chunk end
+    degrade_level: int = 0        # 0 healthy, 1 derate, 2 emergency cap
 
 
 @dataclasses.dataclass
@@ -126,6 +141,12 @@ class EngineReport:
     prompt_tokens: int = 0        # prompt tokens across every join (requeues too)
     prefill_tokens_saved: int = 0  # restored from the prefix cache, not computed
     n_preemptions: int = 0        # slots evicted + re-queued on page pressure
+    # fault-tolerance accounting (docs/fault_tolerance.md)
+    n_faults_injected: int = 0    # chaos faults applied to this engine
+    n_restores: int = 0           # crash-restores this report survived
+    degraded_steps: int = 0       # clock steps spent degraded (derate/cap)
+    requeued_requests: int = 0    # in-flight requests recovered via requeue
+    n_pages_quarantined: int = 0  # pages withheld after corruption repair
 
     @property
     def tok_per_s(self) -> float:
@@ -211,7 +232,11 @@ class ServeEngine:
                  step_cfg: StepConfig | None = None, rules=None,
                  on_chunk: Callable[[ChunkStats], float | None] | None = None,
                  on_prefill: Callable[[int, int], float | None] | None = None,
-                 admission=None):
+                 admission=None,
+                 injector: FaultInjector | None = None,
+                 on_heartbeat: Callable[[int, float], None] | None = None,
+                 on_fault: Callable[[object], None] | None = None,
+                 snapshot_dir: str | None = None, snapshot_every: int = 0):
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.params = params
@@ -222,6 +247,17 @@ class ServeEngine:
         # None): lets the launcher charge prefill compute into the same
         # J/token ledger — and see the joules the prefix cache avoided
         self.on_prefill = on_prefill
+        # chaos: faults polled on the decode-step clock each cycle; kinds
+        # the engine cannot act on itself (bus_drop/bus_delay) forward to
+        # on_fault so the launcher can disturb its own telemetry transport
+        self.injector = injector
+        # on_heartbeat(clock_step, chunk_wall_s): liveness signal for a
+        # serving supervisor; suppressed while a "stall" fault is active
+        self.on_heartbeat = on_heartbeat
+        self.on_fault = on_fault
+        self.snapshot_every = int(snapshot_every)
+        self._ckpt = CheckpointManager(snapshot_dir, keep=2) \
+            if snapshot_dir else None
         self.kv = PagedKVCache(cfg, n_slots=engine_cfg.n_slots,
                                page_size=engine_cfg.page_size,
                                max_len=engine_cfg.max_len,
@@ -239,7 +275,10 @@ class ServeEngine:
                                    prefix=self._use_prefix)
         self.cache = self.kv.make_cache()
         self._ctx = make_run_ctx(cfg, rules, self.step_cfg)
-        self._loop = None                    # AOT-compiled paged chunk loop
+        # AOT-compiled paged chunk loops, keyed (chunk_len, speculative):
+        # graceful degradation swaps in a shorter / non-speculative loop
+        # under an emergency cap, each compiled once on first use
+        self._loops: dict[tuple[int, bool], object] = {}
         self._prefills: dict[int, object] = {}   # bucket -> compiled prefill
         self._injects: dict[int, object] = {}    # bucket -> compiled inject
         self._suffix = None                  # AOT chunked-suffix prefill
@@ -258,23 +297,31 @@ class ServeEngine:
             # pos/block_tables: seeded at prefill-on-join, carried through
             # the fused loop, read back at harvest
             self._dstate = self._drafter.init_state(engine_cfg.n_slots)
+        # graceful-degradation state: level 0 = healthy, 1 = derate
+        # (admission paused), 2 = emergency cap (+ shorter chunk, spec off)
+        self._degrade_level = 0
+        self._degrade_until = -1           # engine-clock step the window ends
+        self._cap_frac = 1.0               # cap fraction in force (reporting)
+        self._stall_until = -1             # heartbeat suppression window end
+        self._eff_chunk = engine_cfg.decode_chunk
 
     # -- compiled pieces (AOT so compile time never lands in measured walls) -
-    def _chunk_loop(self, *args):
-        if self._loop is None:
-            if self._drafter is not None:
+    def _chunk_loop(self, chunk: int, spec: bool, *args):
+        key = (chunk, spec)
+        if key not in self._loops:
+            if spec:
                 fn = jax.jit(make_paged_speculative_decode_loop(
                     self.cfg, self.step_cfg, self.rules,
-                    self.ecfg.decode_chunk, drafter=self._drafter,
+                    chunk, drafter=self._drafter,
                     greedy=self.ecfg.greedy,
                     temperature=self.ecfg.temperature), donate_argnums=(1,))
             else:
                 fn = jax.jit(make_paged_decode_loop(
                     self.cfg, self.step_cfg, self.rules,
-                    self.ecfg.decode_chunk, greedy=self.ecfg.greedy,
+                    chunk, greedy=self.ecfg.greedy,
                     temperature=self.ecfg.temperature), donate_argnums=(1,))
-            self._loop = fn.lower(*args).compile()
-        return self._loop
+            self._loops[key] = fn.lower(*args).compile()
+        return self._loops[key]
 
     def _prefill(self, bucket: int):
         if bucket not in self._prefills:
@@ -476,13 +523,14 @@ class ServeEngine:
         res.n_preemptions += 1
         self._report.n_preemptions += 1
 
-    def _grow_pages(self, t0: float) -> None:
+    def _grow_pages(self, t0: float, need: int | None = None) -> None:
         """Lazy-allocation mode: before a chunk, grow every active slot's
         pages to cover the chunk's writes, preempting the lowest-priority
         slot when the pool runs dry (``Scheduler.victim``: lowest
         priority, then most recently admitted)."""
         ecfg = self.ecfg
-        need = ecfg.decode_chunk * (ecfg.spec_k + 1)
+        if need is None:
+            need = ecfg.decode_chunk * (ecfg.spec_k + 1)
         slots = self.scheduler.slots
         order = sorted(self.scheduler.active_slots(),
                        key=lambda s: (-slots[s].request.priority,
@@ -551,41 +599,263 @@ class ServeEngine:
             state.next_token = toks[slot, -1, max(int(counts[slot, -1]) - 1, 0)]
             if state.remaining == 0:
                 res.finish_reason = res.finish_reason or "max_new_tokens"
-                res.finish_step = self._now + self.ecfg.decode_chunk
+                res.finish_step = self._now + self._eff_chunk
                 res.finish_t = time.perf_counter() - t0
                 self.scheduler.finish(slot)
                 self._pos[slot] = 0
         return kept_by_rid
 
+    # -- chaos + degradation -------------------------------------------------
+    def degrade(self, level: int, *, steps: int, cap: float = 1.0) -> None:
+        """Enter (or extend/deepen) a degradation window for ``steps``
+        engine-clock steps.  Level 1 (derate) pauses admission; level 2
+        (emergency cap) additionally halves the decode chunk and drops
+        speculative K.  Called from fault injection and from the launcher
+        when an ``EmergencyPower``/``NodeDerated`` event lands on the bus;
+        the window clears itself when the clock passes its end."""
+        self._degrade_level = max(self._degrade_level, int(level))
+        self._degrade_until = max(self._degrade_until,
+                                  self._now + max(int(steps), 1))
+        if cap:
+            self._cap_frac = min(self._cap_frac, float(cap))
+
+    @property
+    def degrade_level(self) -> int:
+        return self._degrade_level
+
+    def _apply_faults(self, t0: float) -> None:
+        """Poll the injector on the decode-step clock and apply what came
+        due.  ``engine_crash`` raises ``EngineCrash`` (the caller restores
+        from the last snapshot); everything else is absorbed in place."""
+        if self.injector is None:
+            return
+        for ev in self.injector.poll(self._now):
+            self._report.n_faults_injected += 1
+            if ev.kind == "engine_crash":
+                raise EngineCrash(self._now)
+            if ev.kind == "slot_crash":
+                slot = int(ev.arg) % self.ecfg.n_slots
+                if self.scheduler.slots[slot] is not None:
+                    self._preempt(slot, t0)
+                    self._report.requeued_requests += 1
+            elif ev.kind == "page_corrupt":
+                if corrupt_paged_kv(self.kv, self.injector.rng) is not None:
+                    # audit + repair immediately: nothing may allocate on
+                    # corrupted metadata
+                    self.kv.verify_invariants(repair=True)
+                    self._report.n_pages_quarantined = \
+                        len(self.kv.quarantined)
+            elif ev.kind == "stall":
+                self._stall_until = self._now + \
+                    max(ev.duration, self.ecfg.decode_chunk)
+            elif ev.kind == "derate":
+                self.degrade(1, steps=max(ev.duration, 1), cap=ev.arg)
+            elif ev.kind == "emergency_cap":
+                self.degrade(2, steps=max(ev.duration, 1), cap=ev.arg)
+            elif self.on_fault is not None:
+                self.on_fault(ev)     # bus_drop / bus_delay: launcher-owned
+
+    # -- snapshot / restore --------------------------------------------------
+    @staticmethod
+    def _ser_req(req: Request) -> dict:
+        p = np.asarray(req.prompt)
+        return {"rid": req.rid, "prompt": p.tolist(), "dtype": str(p.dtype),
+                "max_new_tokens": req.max_new_tokens,
+                "arrival_step": req.arrival_step, "eos_id": req.eos_id,
+                "priority": req.priority}
+
+    @staticmethod
+    def _de_req(rec: dict) -> Request:
+        return Request(rid=int(rec["rid"]),
+                       prompt=np.asarray(rec["prompt"], dtype=rec["dtype"]),
+                       max_new_tokens=int(rec["max_new_tokens"]),
+                       arrival_step=int(rec["arrival_step"]),
+                       eos_id=rec["eos_id"], priority=int(rec["priority"]))
+
+    def snapshot(self) -> dict:
+        """Recoverable engine state as a checkpointable pytree: the device
+        KV pools plus a JSON blob (uint8 leaf) holding the request queue,
+        per-slot progress, results so far, report counters, and the
+        paged-KV host metadata (block tables + trie).  Taken at chunk
+        boundaries only, so every slot's KV is committed through its
+        ``pos`` and the fold-into-prompt replay is exact."""
+        slots = []
+        for slot in self.scheduler.active_slots():
+            state = self.scheduler.slots[slot]
+            slots.append({"slot": slot,
+                          "request": self._ser_req(state.request),
+                          "remaining": int(state.remaining),
+                          "tok_start": int(state.tok_start),
+                          "written": int(self._pos[slot])})
+        rep = {f.name: getattr(self._report, f.name)
+               for f in dataclasses.fields(self._report)
+               if f.name != "results"}
+        meta = {"now": self._now, "chunk_idx": self._chunk_idx,
+                "occ_sum": self._occ_sum,
+                # an emergency-cap/derate window outlives the process that
+                # crashed under it — the restored engine must stay degraded
+                # until the window actually ends
+                "degrade": {"level": self._degrade_level,
+                            "until": self._degrade_until,
+                            "cap": self._cap_frac,
+                            "stall": self._stall_until},
+                "req_order": self._req_order,
+                "queue": [self._ser_req(r) for r in self._queue.pending()],
+                "slots": slots,
+                "results": {str(rid): dataclasses.asdict(res)
+                            for rid, res in self._results.items()},
+                "report": rep,
+                "kv": self.kv.state_dict()}
+        blob = np.frombuffer(json.dumps(meta).encode(), np.uint8).copy()
+        return {"cache": self.cache, "meta": blob}
+
+    def save_snapshot(self) -> None:
+        if self._ckpt is None:
+            raise ValueError("engine was built without snapshot_dir")
+        self._ckpt.save(self.snapshot(), self._now)
+
+    @classmethod
+    def restore(cls, cfg, engine_cfg: EngineConfig, params, snapshot_dir,
+                *, step: int | None = None, **kwargs) -> "ServeEngine":
+        """Rebuild an engine from the latest committed snapshot.
+
+        The device pools and paged-KV metadata (incl. the prefix trie) come
+        back verbatim — then every in-flight slot is converted into a
+        requeued request with its generated tokens folded into the prompt
+        (PR 5's preemption fold), so ``resume()`` re-admits it through
+        ``admit_with_prefix`` against the restored trie: re-prefill is
+        cheap and restored greedy streams are bit-identical to an
+        uninterrupted run.  ``verify_invariants(repair=True)`` audits the
+        restored pool, quarantining anything a crash corrupted."""
+        eng = cls(cfg, engine_cfg, params, snapshot_dir=snapshot_dir,
+                  **kwargs)
+        like = {"cache": eng.cache, "meta": np.zeros((0,), np.uint8)}
+        tree = restore_pytree(like, snapshot_dir, step)
+        meta = json.loads(bytes(np.asarray(tree["meta"])))
+        eng.cache = tree["cache"]
+        eng.kv.load_state(meta["kv"])
+        eng.kv.verify_invariants(repair=True)
+        eng._results = {int(rid): RequestResult(**rec)
+                        for rid, rec in meta["results"].items()}
+        eng._req_order = [int(r) for r in meta["req_order"]]
+        eng._now = int(meta["now"])
+        eng._chunk_idx = int(meta["chunk_idx"])
+        eng._occ_sum = float(meta["occ_sum"])
+        deg = meta["degrade"]
+        eng._degrade_level = int(deg["level"])
+        eng._degrade_until = int(deg["until"])
+        eng._cap_frac = float(deg["cap"])
+        eng._stall_until = int(deg["stall"])
+        eng._report = EngineReport(results=[], **meta["report"])
+        eng._report.n_restores += 1
+        if eng.injector is not None:
+            # the crash's own injection died with the process (snapshots
+            # predate it) — the injector's log is authoritative
+            eng._report.n_faults_injected = max(
+                eng._report.n_faults_injected, eng.injector.n_injected)
+            # derate/cap windows are EXTERNAL conditions: one that fired
+            # after the last snapshot is one-shot (won't replay) but its
+            # window may still be open — re-impose the remainder
+            for ev in eng.injector.log:
+                lvl = {"derate": 1, "emergency_cap": 2}.get(ev.kind)
+                if lvl and ev.step + ev.duration > eng._now:
+                    eng.degrade(lvl, steps=ev.step + ev.duration - eng._now,
+                                cap=ev.arg)
+        eng._report.n_pages_quarantined = len(eng.kv.quarantined)
+        reqs = [eng._de_req(rec) for rec in meta["queue"]]
+        for srec in meta["slots"]:
+            req = eng._de_req(srec["request"])
+            res = eng._results[req.rid]
+            gen = np.asarray(res.tokens[int(srec["tok_start"]):], np.int32)
+            prompt = np.asarray(req.prompt, np.int32)
+            if gen.size:
+                prompt = np.concatenate(
+                    [prompt, gen.reshape((-1,) + prompt.shape[1:])])
+            slot = int(srec["slot"])
+            if eng._use_prefix and slot in eng.kv.allocated:
+                # index the dead slot's written pages before releasing them
+                # — the requeue then restores from the trie, not compute
+                eng.kv.register_prefix(slot, prompt[:int(srec["written"])])
+            reqs.append(dataclasses.replace(
+                req, prompt=prompt, max_new_tokens=int(srec["remaining"]),
+                arrival_step=eng._now))
+            eng._report.requeued_requests += 1
+        for slot in list(eng.kv.allocated):   # slots died with the process
+            eng.kv.release(slot)
+        eng._pos[:] = 0
+        eng._queue = RequestQueue(reqs)
+        return eng
+
+    def resume(self) -> EngineReport:
+        """Continue a restored engine to completion."""
+        return self._drive()
+
     # -- main loop -----------------------------------------------------------
-    def run(self, requests: list[Request]) -> EngineReport:
-        ecfg = self.ecfg
-        queue = RequestQueue(requests)
+    def _begin(self, requests: list[Request]) -> None:
+        self._queue = RequestQueue(requests)
         self._results = {r.rid: RequestResult(
             rid=r.rid, prompt_len=r.prompt_len, arrival_step=r.arrival_step,
             max_new_tokens=r.max_new_tokens) for r in requests}
+        self._req_order = [r.rid for r in requests]
         self._now = 0
-        report = EngineReport(results=[], spec_k=ecfg.spec_k)
-        self._queue = queue
-        self._report = report
-        occ_sum = 0.0
+        self._chunk_idx = 0
+        self._occ_sum = 0.0
+        self._report = EngineReport(results=[], spec_k=self.ecfg.spec_k)
+        self._degrade_level = 0
+        self._degrade_until = -1
+        self._cap_frac = 1.0
+        self._stall_until = -1
+        self._eff_chunk = self.ecfg.decode_chunk
+
+    def run(self, requests: list[Request]) -> EngineReport:
+        self._begin(requests)
+        if self._ckpt is not None and self.snapshot_every > 0:
+            # step-0 snapshot: a crash BEFORE the first periodic save must
+            # still restore (to the full queue), never lose the run
+            self.save_snapshot()
+        return self._drive()
+
+    def _drive(self) -> EngineReport:
+        ecfg = self.ecfg
+        queue = self._queue
+        report = self._report
         t0 = time.perf_counter()
         n_cb = self.cfg.n_codebooks
         tok_shape = (ecfg.n_slots, 1) + ((n_cb,) if n_cb else ())
         tok_in = np.zeros(tok_shape, np.int32)
-        chunk_idx = 0
 
         while len(queue) or self.scheduler.n_active:
+            self._apply_faults(t0)           # may raise EngineCrash
+            if self._degrade_level and self._now >= self._degrade_until:
+                self._degrade_level = 0      # window cleared: full service
+                self._cap_frac = 1.0
+            degraded = self._degrade_level
             t_p = time.perf_counter()
-            for slot, req, m, copy in self.scheduler.poll(queue, self._now):
-                self._join(slot, req, m, copy, t0)
+            if not degraded:                 # degraded: admission paused
+                for slot, req, m, copy in self.scheduler.poll(queue,
+                                                              self._now):
+                    self._join(slot, req, m, copy, t0)
+            # emergency cap: halve the decode chunk, drop speculation — the
+            # chunk's compute shrinks instead of violating the cap
+            eff_chunk = ecfg.decode_chunk if degraded < 2 \
+                else max(ecfg.decode_chunk // 2, 1)
+            spec = self._drafter is not None and degraded < 2
+            eff_k = ecfg.spec_k if spec else 0
+            self._eff_chunk = eff_chunk
             if ecfg.preempt:
                 # grows/preempts but always leaves >= 1 slot active (the
                 # last survivor raises rather than self-preempting)
-                self._grow_pages(t0)
+                self._grow_pages(t0, eff_chunk * (eff_k + 1))
             report.prefill_wall_s += time.perf_counter() - t_p
 
             if self.scheduler.n_active == 0:
+                if degraded:
+                    # admission is paused and nothing is running: jump the
+                    # clock to the window's end instead of spinning (or
+                    # tripping the inadmissible-at-zero-load check below)
+                    self._now = max(self._degrade_until, self._now + 1)
+                    report.degraded_steps += eff_chunk
+                    continue
                 nxt = queue.next_arrival()
                 if nxt is None:
                     break
@@ -609,7 +879,6 @@ class ServeEngine:
             self.cache = {**self.cache,
                           "pos": jnp.asarray(self._pos),
                           "block_tables": jnp.asarray(self.kv.tables)}
-            spec = self._drafter is not None
             args = [self.params, self.cache, jnp.asarray(tok_in),
                     jnp.asarray(active)]
             if spec:
@@ -618,8 +887,8 @@ class ServeEngine:
             if not ecfg.greedy:
                 # even namespace: first-token keys live at (rid << 1) | 1
                 args.append(jax.random.fold_in(self._sample_key,
-                                               chunk_idx << 1))
-            loop = self._chunk_loop(*args)
+                                               self._chunk_idx << 1))
+            loop = self._chunk_loop(eff_chunk, spec, *args)
             t_c = time.perf_counter()
             if spec:
                 toks, counts, self.cache, dstate = loop(*args)
@@ -638,23 +907,27 @@ class ServeEngine:
                 self._pos += counts.sum(axis=1).astype(np.int32)
                 kept_by_rid = self._harvest_spec(toks, counts, t0)
                 kept = sum(kept_by_rid.values())
-                computed = n_active * ecfg.decode_chunk * (ecfg.spec_k + 1)
-                proposed = n_active * ecfg.decode_chunk * ecfg.spec_k
-                accepted = int(counts.sum()) - n_active * ecfg.decode_chunk
+                computed = n_active * eff_chunk * (eff_k + 1)
+                proposed = n_active * eff_chunk * eff_k
+                accepted = int(counts.sum()) - n_active * eff_chunk
             else:
-                self._pos[active.astype(bool)] += ecfg.decode_chunk
+                self._pos[active.astype(bool)] += eff_chunk
                 kept_by_rid = self._harvest(toks, t0)
                 kept = sum(kept_by_rid.values())
-                computed = n_active * ecfg.decode_chunk
+                computed = n_active * eff_chunk
                 proposed = accepted = 0
-            self._now += ecfg.decode_chunk
-            chunk_idx += 1
+            self._now += eff_chunk
+            self._chunk_idx += 1
+            if degraded:
+                report.degraded_steps += eff_chunk
 
-            stats = ChunkStats(step=chunk_idx, wall_s=wall,
+            stats = ChunkStats(step=self._chunk_idx, wall_s=wall,
                                n_slots=ecfg.n_slots, n_active=n_active,
                                tokens_kept=kept, tokens_computed=computed,
                                drafts_proposed=proposed,
-                               drafts_accepted=accepted)
+                               drafts_accepted=accepted,
+                               clock_step=self._now,
+                               degrade_level=degraded)
             energy = self.on_chunk(stats) if self.on_chunk is not None else None
             report.n_chunks += 1
             report.decode_wall_s += wall
@@ -662,14 +935,23 @@ class ServeEngine:
             report.tokens_computed += stats.tokens_computed
             report.drafts_proposed += proposed
             report.drafts_accepted += accepted
-            occ_sum += n_active / ecfg.n_slots
+            self._occ_sum += n_active / ecfg.n_slots
             if energy:
                 report.energy_j += energy
                 # charge occupied slots only, pro rata by kept tokens
                 for rid, n in kept_by_rid.items():
                     if n > 0:
                         self._results[rid].energy_j += energy * n / max(kept, 1)
+            if self.on_heartbeat is not None and self._now > self._stall_until:
+                self.on_heartbeat(self._now, wall)
+            if self._ckpt is not None and self.snapshot_every > 0 \
+                    and self._chunk_idx % self.snapshot_every == 0:
+                self.save_snapshot()
 
-        report.occupancy = occ_sum / max(report.n_chunks, 1)
-        report.results = [self._results[r.rid] for r in requests]
+        # final poll: a fault due between the last chunk and run exit must
+        # still fire (an engine_crash here restores + replays the tail —
+        # results are only authoritative once this returns)
+        self._apply_faults(t0)
+        report.occupancy = self._occ_sum / max(report.n_chunks, 1)
+        report.results = [self._results[rid] for rid in self._req_order]
         return report

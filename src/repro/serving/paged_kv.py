@@ -113,6 +113,11 @@ class PagedKVCache:
         self._root = _TrieNode(None, None, -1, None)
         self._clock = 0
         self._copy_holds: dict[int, int] = {}       # page -> pending holds
+        # Pages pulled from circulation by verify_invariants(repair=True):
+        # corrupted metadata, no legitimate holder.  Never re-enter the
+        # free list — capacity degrades gracefully instead of serving a
+        # poisoned page.
+        self.quarantined: set[int] = set()
 
     # -- device side --------------------------------------------------------
     def make_cache(self):
@@ -129,7 +134,7 @@ class PagedKVCache:
         self.refcount[page] -= 1
         if self.refcount[page] < 0:
             raise AssertionError(f"page {page}: refcount underflow")
-        if self.refcount[page] == 0:
+        if self.refcount[page] == 0 and page not in self.quarantined:
             self.free.append(page)
 
     def _take_free(self) -> int:
@@ -393,6 +398,177 @@ class PagedKVCache:
             else:
                 rows[i] = self.n_pages * self.page_size    # dropped
         return rows
+
+    # -- audit ----------------------------------------------------------------
+    def _all_nodes(self) -> list[_TrieNode]:
+        out, stack = [], [self._root]
+        while stack:
+            node = stack.pop()
+            if node is not self._root:
+                out.append(node)
+            stack.extend(node.children.values())
+        return out
+
+    def _expected_holders(self) -> np.ndarray:
+        """Ground-truth refcounts recomputed from the holder structures:
+        slots mapping the page + trie nodes indexing it + pending copy
+        holds.  ``refcount`` must equal this exactly."""
+        exp = np.zeros((self.n_pages,), np.int64)
+        for pages in self.allocated.values():
+            for p in pages:
+                exp[p] += 1
+        for node in self._all_nodes():
+            if 0 <= node.page < self.n_pages:
+                exp[node.page] += 1
+        for p, holds in self._copy_holds.items():
+            exp[p] += holds
+        return exp
+
+    def verify_invariants(self, *, repair: bool = False) -> list[str]:
+        """Audit the host metadata against the invariants the decode path
+        relies on.  Returns the violations found (empty = clean).
+
+        With ``repair=True`` the pool is additionally put back into a safe
+        state: corrupted trie subtrees are dropped, refcounts of pages
+        with legitimate holders are recomputed, and implicated pages with
+        *no* holder are quarantined (withheld from the free list) rather
+        than recirculated — serving degrades capacity instead of crashing
+        or handing out a poisoned page.  Runs on engine restore and on
+        demand (chaos drills).
+        """
+        violations: list[str] = []
+        free_set = set(self.free)
+        # 1. trie pages must be real, non-scratch, and not on the free list
+        bad_nodes = []
+        for node in self._all_nodes():
+            if not (self.n_slots <= node.page < self.n_pages):
+                violations.append(f"trie: node holds invalid page "
+                                  f"{node.page}")
+                bad_nodes.append(node)
+            elif node.page in free_set:
+                violations.append(f"trie: node points at freed page "
+                                  f"{node.page} (stale)")
+                bad_nodes.append(node)
+        implicated = {n.page for n in bad_nodes}
+        if repair:
+            for node in bad_nodes:
+                # drop the whole subtree: children cached *behind* a bad
+                # page are unreachable by prefix anyway
+                if node.key in node.parent.children \
+                        and node.parent.children[node.key] is node:
+                    del node.parent.children[node.key]
+        # 2. free-list duplicates
+        seen: set[int] = set()
+        for p in self.free:
+            if p in seen:
+                violations.append(f"free: page {p} listed more than once")
+                implicated.add(p)
+            seen.add(p)
+        # 3. refcount == holders; free list == zero-refcount pages
+        exp = self._expected_holders()
+        for p in range(self.n_slots, self.n_pages):
+            if p in self.quarantined:
+                continue
+            if self.refcount[p] != exp[p]:
+                violations.append(f"refcount: page {p} is "
+                                  f"{int(self.refcount[p])}, holders say "
+                                  f"{int(exp[p])}")
+                implicated.add(p)
+            if exp[p] == 0 and p not in seen and p not in implicated:
+                violations.append(f"free: page {p} has no holder but is "
+                                  "not on the free list")
+                implicated.add(p)
+        for p in range(self.n_slots):               # scratch never circulates
+            if self.refcount[p] != exp[p] or p in seen:
+                violations.append(f"scratch: page {p} leaked into "
+                                  "circulation")
+                implicated.add(p)
+        if repair and violations:
+            for p in implicated:
+                if exp[p] > 0:
+                    self.refcount[p] = exp[p]       # holders are the truth
+                elif p >= self.n_slots:
+                    self.quarantined.add(p)         # no holder: withhold
+                    self.refcount[p] = 0
+            # rebuild the free list: keep surviving entries in order (free
+            # order determines future page assignment), append recovered
+            # strays, drop quarantined/held/duplicate entries
+            rebuilt, emitted = [], set()
+            for p in self.free:
+                if p >= self.n_slots and exp[p] == 0 and p not in emitted \
+                        and p not in self.quarantined:
+                    rebuilt.append(p)
+                    emitted.add(p)
+            for p in range(self.n_slots, self.n_pages):
+                if exp[p] == 0 and p not in emitted \
+                        and p not in self.quarantined:
+                    rebuilt.append(p)
+                    emitted.add(p)
+            self.free = deque(rebuilt)
+        return violations
+
+    # -- snapshot / restore ---------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serialisable host metadata: block tables, free list,
+        allocations, refcounts, and the prefix trie (BFS order, parent
+        links).  The device pools are snapshotted separately — together
+        they rebuild an identical manager via :meth:`load_state`."""
+        nodes: list[dict] = []
+        queue = deque([(self._root, -1)])
+        while queue:
+            node, parent = queue.popleft()
+            if node is not self._root:
+                nodes.append({
+                    "parent": parent,
+                    "page": int(node.page),
+                    "tokens": np.asarray(node.tokens).ravel().tolist(),
+                    "dtype": str(np.asarray(node.tokens).dtype),
+                    "last_used": int(node.last_used),
+                })
+                parent_idx = len(nodes) - 1
+            else:
+                parent_idx = -1
+            for child in node.children.values():    # insertion order kept
+                queue.append((child, parent_idx))
+        return {
+            "n_slots": self.n_slots, "page_size": self.page_size,
+            "max_len": self.max_len, "n_pages": self.n_pages,
+            "tables": self.tables.tolist(),
+            "free": list(self.free),
+            "allocated": {str(s): list(p) for s, p in self.allocated.items()},
+            "refcount": self.refcount.tolist(),
+            "copy_holds": {str(p): h for p, h in self._copy_holds.items()},
+            "quarantined": sorted(self.quarantined),
+            "clock": self._clock,
+            "trie": nodes,
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Rebuild the manager in place from :meth:`state_dict` output."""
+        for field in ("n_slots", "page_size", "max_len", "n_pages"):
+            if int(state[field]) != getattr(self, field):
+                raise ValueError(f"snapshot {field}={state[field]} does not "
+                                 f"match pool ({getattr(self, field)})")
+        self.tables = np.asarray(state["tables"], np.int32)
+        self.free = deque(int(p) for p in state["free"])
+        self.allocated = {int(s): [int(p) for p in pages]
+                          for s, pages in state["allocated"].items()}
+        self.refcount = np.asarray(state["refcount"], np.int64)
+        self._copy_holds = {int(p): int(h)
+                            for p, h in state["copy_holds"].items()}
+        self.quarantined = {int(p) for p in state.get("quarantined", ())}
+        self._clock = int(state["clock"])
+        self._root = _TrieNode(None, None, -1, None)
+        rebuilt: list[_TrieNode] = []
+        for rec in state["trie"]:
+            tokens = np.asarray(rec["tokens"], dtype=rec["dtype"])
+            key = np.ascontiguousarray(tokens).tobytes()
+            parent = self._root if rec["parent"] < 0 \
+                else rebuilt[rec["parent"]]
+            node = _TrieNode(key, tokens, int(rec["page"]), parent)
+            node.last_used = int(rec["last_used"])
+            parent.children[key] = node
+            rebuilt.append(node)
 
     @property
     def n_free(self) -> int:

@@ -70,6 +70,10 @@ class RequestQueue:
     def pop_at(self, index: int) -> Request:
         return self._pending.pop(index)
 
+    def pending(self) -> list[Request]:
+        """Queued requests in arrival order (snapshot/introspection)."""
+        return list(self._pending)
+
     def push(self, request: Request) -> None:
         """Insert a (re-queued) request in arrival order."""
         keys = [(r.arrival_step, r.rid) for r in self._pending]

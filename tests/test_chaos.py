@@ -1,0 +1,304 @@
+"""Chaos-injection + crash-recovery tests: injector semantics, paged-KV
+corruption audit/quarantine, engine snapshot/restore exactness, graceful
+degradation under power emergencies, and the lossy-telemetry bus shim."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.control import EventBus, StepDone
+from repro.models import transformer as tfm
+from repro.runtime.chaos import (ChaosBus, FaultEvent, FaultInjector,
+                                 corrupt_paged_kv)
+from repro.serving import (EngineConfig, EngineCrash, PagedKVCache,
+                           ServeEngine, poisson_trace)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """Shrunk below the smoke config: these tests exercise host-side
+    recovery mechanics, not model compute."""
+    spec = get_arch("smollm-135m")
+    cfg = dataclasses.replace(spec.smoke, d_model=64, d_ff=128, head_dim=16)
+    params, _ = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+ECFG = EngineConfig(n_slots=2, page_size=4, max_len=48, decode_chunk=4)
+
+
+def _trace(cfg, n=5, seed=7):
+    return poisson_trace(n, rate_per_step=0.3, seed=seed,
+                         vocab_size=cfg.vocab_size, prompt_len=(3, 13),
+                         max_new_tokens=(4, 10))
+
+
+def _streams(rep):
+    return {r.rid: list(np.asarray(r.tokens).ravel()) for r in rep.results}
+
+
+def _run_with_recovery(cfg, params, trace, injector, snap, *, ecfg=ECFG,
+                       snapshot_every=2, **kwargs):
+    eng = ServeEngine(cfg, ecfg, params, injector=injector,
+                      snapshot_dir=str(snap), snapshot_every=snapshot_every,
+                      **kwargs)
+    restarts = 0
+    while True:
+        try:
+            return eng, (eng.resume() if restarts else eng.run(trace))
+        except EngineCrash:
+            restarts += 1
+            assert restarts <= 3, "crash replayed after restore"
+            eng = ServeEngine.restore(cfg, ecfg, params, str(snap),
+                                      injector=injector,
+                                      snapshot_every=snapshot_every,
+                                      **kwargs)
+
+
+# --------------------------------------------------------------------------
+# injector semantics
+# --------------------------------------------------------------------------
+def test_fault_event_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(kind="gremlin", step=3)
+
+
+def test_injector_fires_once_in_step_order():
+    inj = FaultInjector()
+    inj.schedule("derate", 10, duration=4, arg=0.8)
+    inj.schedule("slot_crash", 5, arg=1)
+    assert inj.pending() == 2
+    assert [e.kind for e in inj.poll(4)] == []
+    due = inj.poll(12)                        # both due; fires in step order
+    assert [(e.kind, e.step) for e in due] == [("slot_crash", 5),
+                                               ("derate", 10)]
+    assert inj.poll(20) == []                 # one-shot: never re-fires
+    assert inj.pending() == 0 and inj.n_injected == 2
+    assert [e.kind for e in inj.log] == ["slot_crash", "derate"]
+
+
+def test_injector_from_spec_roundtrip():
+    inj = FaultInjector.from_spec(
+        "engine_crash@40, emergency_cap@10:8:0.5,bus_drop@3")
+    assert [(e.kind, e.step, e.duration, e.arg) for e in inj.events] == [
+        ("bus_drop", 3, 0, 0.0), ("emergency_cap", 10, 8, 0.5),
+        ("engine_crash", 40, 0, 0.0)]
+    with pytest.raises(ValueError, match="expected kind@step"):
+        FaultInjector.from_spec("engine_crash")
+
+
+# --------------------------------------------------------------------------
+# lossy telemetry transport
+# --------------------------------------------------------------------------
+def test_chaos_bus_drop_delay_flush():
+    bus = EventBus()
+    seen = bus.tap(StepDone)
+    cbus = ChaosBus(bus)
+
+    def ev(step):
+        return StepDone(node_id="n", step=step, duration_s=0.1)
+
+    cbus.drop_next(1)
+    cbus.publish(ev(0))                       # vanishes
+    cbus.delay_next(2)
+    cbus.publish(ev(1))
+    cbus.publish(ev(2))                       # both held
+    assert [e.step for e in seen] == []
+    cbus.publish(ev(3))                       # clean publish flushes first
+    assert [e.step for e in seen] == [1, 2, 3]
+    cbus.delay_next(1)
+    cbus.publish(ev(4))
+    assert cbus.flush() == 1                  # explicit drain
+    assert [e.step for e in seen] == [1, 2, 3, 4]
+    assert cbus.n_dropped == 1 and cbus.n_delayed == 3
+    assert cbus.subscribers(StepDone) == 1    # proxies to the inner bus
+
+
+# --------------------------------------------------------------------------
+# paged-KV corruption audit
+# --------------------------------------------------------------------------
+def _loaded_kv(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    kv = PagedKVCache(cfg, n_slots=2, page_size=4, max_len=32, n_pages=14)
+    for slot in range(2):
+        tokens = rng.integers(0, 3, size=9 + slot).astype(np.int32)
+        kv.admit_with_prefix(slot, tokens, len(tokens) + 4)
+        kv.register_prefix(slot, tokens)
+    kv.release(1)                             # trie keeps pages live + free
+    return kv
+
+
+def test_verify_invariants_clean_pool(tiny):
+    cfg, _ = tiny
+    assert _loaded_kv(cfg).verify_invariants() == []
+
+
+def test_corruption_detected_then_repaired_and_quarantined(tiny):
+    """Every corruption kind the injector can produce is caught by the
+    audit, and repair leaves a pool that passes a clean re-audit with the
+    implicated pages quarantined out of circulation."""
+    cfg, _ = tiny
+    kinds_seen = set()
+    for seed in range(12):
+        kv = _loaded_kv(cfg, seed=seed)
+        desc = corrupt_paged_kv(kv, np.random.default_rng(seed))
+        assert desc is not None
+        kinds_seen.add(desc.split(":")[0])
+        assert kv.verify_invariants() != []   # detected
+        kv.verify_invariants(repair=True)
+        assert kv.verify_invariants() == []   # repaired
+        assert not (set(kv.free) & kv.quarantined)
+    assert kinds_seen == {"refcount", "free_dup", "stale_trie"}
+
+
+def test_quarantined_pages_stay_out_of_circulation(tiny):
+    cfg, _ = tiny
+    kv = _loaded_kv(cfg)
+    # the slot's last page covers a partial-page tail the trie never
+    # indexed — the slot is its only holder, so release drops it to zero
+    victim = kv.allocated[0][-1]
+    kv.quarantined.add(victim)
+    kv.release(0)
+    assert kv.refcount[victim] == 0
+    assert victim not in kv.free              # never handed out again
+
+
+# --------------------------------------------------------------------------
+# crash -> restore exactness
+# --------------------------------------------------------------------------
+def test_engine_crash_restore_streams_exact(tiny, tmp_path):
+    """Mid-run engine crash, restore from the last snapshot, resume: every
+    greedy stream bit-identical to the fault-free run, zero tokens lost."""
+    cfg, params = tiny
+    trace = _trace(cfg)
+    base = _streams(ServeEngine(cfg, ECFG, params).run(trace))
+    inj = FaultInjector()
+    inj.schedule("engine_crash", 14)
+    eng, rep = _run_with_recovery(cfg, params, trace, inj, tmp_path)
+    assert rep.n_restores == 1 and rep.n_faults_injected >= 1
+    assert _streams(rep) == base
+    assert eng.kv.verify_invariants() == []
+
+
+def test_slot_crash_and_corruption_invisible_in_output(tiny, tmp_path):
+    cfg, params = tiny
+    trace = _trace(cfg, seed=11)
+    base = _streams(ServeEngine(cfg, ECFG, params).run(trace))
+    inj = FaultInjector(seed=3)
+    inj.schedule("slot_crash", 6, arg=0)
+    inj.schedule("slot_crash", 10, arg=1)
+    inj.schedule("page_corrupt", 12)
+    eng, rep = _run_with_recovery(cfg, params, trace, inj, tmp_path)
+    assert _streams(rep) == base
+    assert rep.n_faults_injected == 3
+    assert eng.kv.verify_invariants() == []
+
+
+def test_emergency_cap_degrades_then_recovers(tiny, tmp_path):
+    """An emergency-cap window pauses admission and halves the decode
+    chunk; service degrades instead of stopping, the window expires, and
+    the output is untouched."""
+    cfg, params = tiny
+    # busy trace: slots must be occupied when the window hits, so degraded
+    # chunks (not just idle clock-jumps) are exercised
+    trace = poisson_trace(8, rate_per_step=0.8, seed=13,
+                          vocab_size=cfg.vocab_size, prompt_len=(3, 10),
+                          max_new_tokens=(8, 12))
+    base = _streams(ServeEngine(cfg, ECFG, params).run(trace))
+    inj = FaultInjector()
+    inj.schedule("emergency_cap", 8, duration=10, arg=0.5)
+    chunks = []
+    eng, rep = _run_with_recovery(cfg, params, trace, inj, tmp_path,
+                                  on_chunk=lambda s: chunks.append(s) and None)
+    assert _streams(rep) == base
+    assert rep.degraded_steps > 0
+    degraded = [c for c in chunks if c.degrade_level >= 2 and c.n_active]
+    assert degraded and all(         # chunk halved: computed = active * c/2
+        c.tokens_computed == c.n_active * (ECFG.decode_chunk // 2)
+        for c in degraded)
+    assert chunks[-1].degrade_level == 0      # recovered: full service
+    assert eng.degrade_level == 0
+
+
+def test_speculative_crash_restore_exact(tiny, tmp_path):
+    """Crash + emergency cap on the speculative engine: the cap window
+    drops spec-K (verify compute shed first), the crash restores, and the
+    streams still match the plain fault-free engine exactly."""
+    cfg, params = tiny
+    ecfg = dataclasses.replace(ECFG, spec_k=2, drafter="ngram")
+    trace = _trace(cfg, seed=17)
+    base = _streams(ServeEngine(cfg, ECFG, params).run(trace))
+    inj = FaultInjector()
+    inj.schedule("emergency_cap", 6, duration=8, arg=0.5)
+    inj.schedule("engine_crash", 16)
+    _, rep = _run_with_recovery(cfg, params, trace, inj, tmp_path,
+                                ecfg=ecfg)
+    assert _streams(rep) == base
+    assert rep.n_restores == 1 and rep.degraded_steps > 0
+
+
+def test_stall_suppresses_heartbeats(tiny):
+    cfg, params = tiny
+    trace = _trace(cfg, seed=19)
+    base_beats = []
+    ServeEngine(cfg, ECFG, params,
+                on_heartbeat=lambda s, w: base_beats.append(s)).run(trace)
+    beats = []
+    inj = FaultInjector()
+    inj.schedule("stall", 8, duration=12)
+    rep = ServeEngine(cfg, ECFG, params, injector=inj,
+                      on_heartbeat=lambda s, w: beats.append(s)).run(trace)
+    assert len(base_beats) == rep.n_chunks    # healthy: one beat per chunk
+    assert beats and len(beats) < len(base_beats)   # stall went silent
+
+
+def test_bus_faults_forward_to_on_fault(tiny):
+    cfg, params = tiny
+    inj = FaultInjector()
+    inj.schedule("bus_drop", 4, duration=2)
+    inj.schedule("bus_delay", 8, duration=1)
+    forwarded = []
+    eng = ServeEngine(cfg, ECFG, params, injector=inj,
+                      on_fault=forwarded.append)
+    eng.run(_trace(cfg, seed=23))
+    assert [e.kind for e in forwarded] == ["bus_drop", "bus_delay"]
+
+
+# --------------------------------------------------------------------------
+# snapshot round-trip
+# --------------------------------------------------------------------------
+def test_kv_state_dict_roundtrip(tiny):
+    cfg, _ = tiny
+    kv = _loaded_kv(cfg, seed=5)
+    state = kv.state_dict()
+    kv2 = PagedKVCache(cfg, n_slots=2, page_size=4, max_len=32, n_pages=14)
+    kv2.load_state(state)
+    assert kv2.verify_invariants() == []
+    np.testing.assert_array_equal(kv2.tables, kv.tables)
+    np.testing.assert_array_equal(kv2.refcount, kv.refcount)
+    assert list(kv2.free) == list(kv.free)
+    assert kv2.allocated == kv.allocated
+    assert kv2.state_dict() == state          # fixed point
+
+
+def test_kv_load_state_rejects_config_mismatch(tiny):
+    cfg, _ = tiny
+    state = _loaded_kv(cfg).state_dict()
+    other = PagedKVCache(cfg, n_slots=2, page_size=8, max_len=32, n_pages=14)
+    with pytest.raises(ValueError):
+        other.load_state(state)
+
+
+def test_restored_engine_reuses_prefix_pages(tiny, tmp_path):
+    """The crash fold registers each dead slot's written tokens in the
+    trie before release — the requeued request's re-prefill restores from
+    cache instead of recomputing."""
+    cfg, params = tiny
+    trace = _trace(cfg, seed=29)
+    inj = FaultInjector()
+    inj.schedule("engine_crash", 14)
+    _, rep = _run_with_recovery(cfg, params, trace, inj, tmp_path)
+    assert rep.requeued_requests >= 1
+    assert rep.prefill_tokens_saved > 0

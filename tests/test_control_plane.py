@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 
 from repro.control import (CapApplied, DriftDetected, Event, EventBus,
-                           FitUpdated, PolicyUpdated, PowerSampled, StepDone)
+                           FitUpdated, NodeDerated, PolicyUpdated,
+                           PowerSampled, StepDone)
 from repro.control.coordinator import ClusterCoordinator
 from repro.control.online import OnlineCapProfiler
 from repro.core import (BALANCED, CapProfiler, ClusterNode, FrostService,
@@ -70,6 +71,69 @@ def test_bus_handler_errors_are_isolated():
     n = bus.publish(StepDone(node_id="n", step=1, duration_s=0.1))
     assert n == 2 and len(seen) == 1              # pipeline survives
     assert len(bus.drain_errors()) == 1 and not bus.errors
+
+
+def test_bus_retry_recovers_transient_failure():
+    """A handler that fails transiently is retried within the publish; a
+    success on any attempt means no error record and no dead letter."""
+    bus = EventBus(max_retries=2)
+    calls = {"n": 0}
+    seen = []
+
+    def flaky(ev):
+        calls["n"] += 1
+        if calls["n"] < 3:                        # fails twice, then works
+            raise RuntimeError("transient")
+        seen.append(ev)
+
+    bus.subscribe(StepDone, flaky)
+    bus.publish(StepDone(node_id="n", step=1, duration_s=0.1))
+    assert len(seen) == 1 and calls["n"] == 3
+    assert bus.n_retries == 2
+    assert bus.n_dead_lettered == 0 and not bus.errors
+
+
+def test_bus_dead_letter_and_redeliver():
+    """Retry exhaustion dead-letters the event WITH its payload; a
+    recovered consumer replays it via redeliver_dead_letters."""
+    bus = EventBus(max_retries=1)
+    healthy = {"ok": False}
+    seen = []
+
+    def consumer(ev):
+        if not healthy["ok"]:
+            raise RuntimeError("consumer down")
+        seen.append(ev)
+
+    bus.subscribe(StepDone, consumer)
+    bus.publish(StepDone(node_id="n", step=7, duration_s=0.1))
+    assert not seen and bus.n_dead_lettered == 1
+    dl = bus.dead_letters[0]
+    assert dl.attempts == 2 and dl.event.step == 7
+    healthy["ok"] = True
+    assert bus.redeliver_dead_letters() == 1
+    assert [e.step for e in seen] == [7]
+    assert not bus.dead_letters                   # drained on success
+
+
+def test_bus_redeliver_refailure_re_dead_letters():
+    bus = EventBus(max_retries=0)
+    bus.subscribe(StepDone, lambda ev: (_ for _ in ()).throw(
+        RuntimeError("still down")))
+    bus.publish(StepDone(node_id="n", step=1, duration_s=0.1))
+    assert bus.redeliver_dead_letters() == 0
+    assert len(bus.dead_letters) == 1             # re-dead-lettered, kept
+
+
+def test_bus_backoff_is_exponential_and_injectable():
+    sleeps = []
+    bus = EventBus(max_retries=3, backoff_s=0.1, sleep=sleeps.append)
+    bus.subscribe(StepDone, lambda ev: (_ for _ in ()).throw(
+        RuntimeError("hard down")))
+    bus.publish(StepDone(node_id="n", step=1, duration_s=0.1))
+    # 4 attempts -> 3 inter-attempt sleeps, doubling each time
+    assert sleeps == pytest.approx([0.1, 0.2, 0.4])
+    assert bus.n_dead_lettered == 1 and bus.n_retries == 3
 
 
 def test_power_sampler_publishes_on_bus():
@@ -376,6 +440,22 @@ def test_coordinator_ignores_unknown_nodes():
                                     WL_COMPUTE))
     bus.publish(StepDone(node_id="ghost", step=0, duration_s=0.1))
     assert not coord.plans                        # ghost didn't trip rebalance
+
+
+def test_coordinator_adopts_published_derate():
+    """A NodeDerated published by a serving supervisor lands in the
+    coordinator's derate estimate immediately — fresher than waiting a
+    whole rebalance window of StepDone latencies."""
+    bus = EventBus()
+    coord = ClusterCoordinator(bus, global_budget_w=1000.0,
+                               rebalance_every=1000)
+    coord.register_node(ClusterNode("serve-0", PowerCappedDevice(TPU_V5E),
+                                    WL_MEMORY))
+    bus.publish(NodeDerated(node_id="serve-0", derate=0.7,
+                            source="serving-supervisor"))
+    assert coord.derates()["serve-0"] == pytest.approx(0.7)
+    bus.publish(NodeDerated(node_id="ghost", derate=0.5))   # unknown: ignored
+    assert "ghost" not in coord.derates()
 
 
 # --------------------------------------------------------------------------

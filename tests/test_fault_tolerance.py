@@ -10,7 +10,9 @@ from repro.core import PowerCappedDevice, TPU_V5E, WorkloadProfile
 from repro.core.powershift import ClusterNode
 from repro.runtime.compress import (compress_residual, dequantize_int8,
                                     init_error_state, quantize_int8)
-from repro.runtime.fault import Supervisor, SupervisorConfig
+from repro.control import EventBus, NodeDerated
+from repro.runtime.fault import (ServingSupervisor, Supervisor,
+                                 SupervisorConfig)
 
 
 # --------------------------------------------------------------------------
@@ -78,6 +80,80 @@ def test_supervisor_abort_after_budget(tmp_path):
     sup.register("n0")
     sup.handle_failure(["n0"])
     assert sup.handle_failure(["n0"])["action"] == "abort"
+
+
+def test_supervisor_failure_detected_via_liveness(tmp_path):
+    """Injection stalls the node's heartbeat instead of flagging it dead
+    directly — recovery proves check_liveness is wired into run()."""
+    state, report = _trainer(tmp_path, inject={6: "node-1"})
+    events = [e["event"] for e in report["events"]]
+    assert "node_dead" in events                  # liveness saw the silence
+    assert events.index("node_dead") < events.index("recovery")
+
+
+def test_supervisor_restores_exactly_once_per_failure(tmp_path):
+    """handle_failure restores the checkpoint; run() must reuse that state
+    via take_restored instead of paying (and counting) a second restore."""
+    from repro.checkpoint import CheckpointManager
+    ckpt = CheckpointManager(tmp_path, keep=2)
+    state0 = {"x": jnp.zeros(())}
+    ckpt.save(state0, 0)
+    n_restores = {"n": 0}
+
+    def restore_fn():
+        n_restores["n"] += 1
+        return ckpt.restore(state0), ckpt.latest_step() or 0
+
+    sup = Supervisor(SupervisorConfig(checkpoint_every=4),
+                     save_fn=lambda s, i: ckpt.save(s, i),
+                     restore_fn=restore_fn)
+    sup.register("node-0")
+    sup.register("node-1")
+    step_fn = lambda s, b: ({"x": s["x"] + b}, {"loss": 0.0})
+    _, report = sup.run(step_fn, state0, [jnp.asarray(1.0)] * 12,
+                        inject_failure_at={6: "node-1"})
+    assert report["restarts"] == 1
+    assert n_restores["n"] == 1                   # once, not once-per-caller
+
+
+def test_supervisor_heartbeat_auto_registers_unknown_node():
+    sup = Supervisor(SupervisorConfig(), save_fn=lambda s, i: None,
+                     restore_fn=lambda: (None, 0))
+    sup.heartbeat("joiner", step=3, latency_s=0.5)   # elastic scale-up
+    assert "joiner" in sup.workers and sup.workers["joiner"].step == 3
+    assert any(e["event"] == "auto_register" for e in sup.events)
+
+
+def test_serving_supervisor_publishes_derate():
+    """Chunk-wall inflation becomes a NodeDerated on the control bus: the
+    serving half of the FROST straggler loop."""
+    bus = EventBus()
+    derated = bus.tap(NodeDerated)
+    sup = ServingSupervisor(bus=bus, node_id="serve-0",
+                            baseline_wall_s=1.0, ewma=0.0)
+    sup.on_heartbeat(4, 1.0)                      # healthy: no publish
+    assert not derated
+    for step in range(8, 24, 4):
+        sup.on_heartbeat(step, 2.0)               # chunks run 2x slow
+    assert derated and derated[-1].derate == pytest.approx(0.5)
+    assert sup.workers["serve-0"].derate == pytest.approx(0.5)
+    n = len(derated)
+    sup.on_heartbeat(24, 2.0)                     # unchanged: delta-gated
+    assert len(derated) == n
+
+
+def test_serving_supervisor_tick_fires_on_dead():
+    t = {"now": 0.0}
+    dead_nodes = []
+    sup = ServingSupervisor(SupervisorConfig(heartbeat_timeout_s=5.0),
+                            on_dead=dead_nodes.append,
+                            clock=lambda: t["now"])
+    sup.on_heartbeat(0, 0.01)
+    t["now"] = 3.0
+    assert sup.tick() == [] and not dead_nodes    # within the window
+    t["now"] = 10.0                               # engine went silent
+    assert sup.tick() == ["serve-0"]
+    assert dead_nodes == ["serve-0"]
 
 
 def test_straggler_detection_and_rebalance(tmp_path):
