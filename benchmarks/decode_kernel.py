@@ -1,0 +1,219 @@
+"""Decode-attention kernel microbench: two-stage split-KV scaling.
+
+Sweeps batch x KV depth x ``kv_splits`` over the decode sweep and reports
+**modelled** tok/s from the TPU_V5E occupancy roofline (same analytic
+device model every J/token figure in this repo uses — the CPU stand-in
+cannot measure TPU grid occupancy, and a 1-core host would report the
+opposite sign).  The model charges stage 1 with the KV stream at the
+bandwidth the occupied fraction of the chip can draw
+(``util = min(1, grid_cells / n_exec)``: an underfilled grid leaves
+memory controllers idle, the exact deficit splitting repairs), plus a
+per-kernel launch cost and — for two-stage points — the stage-2 merge
+traffic, so large split counts pay their overhead and cannot win for
+free.
+
+Measured numbers ride along: wall-clock of the jnp sweep (informational;
+host-bound) and **exactness on real arrays** (two-stage vs single-stage,
+max |err| and greedy-argmax agreement), which gate the artifact.
+
+RAISES (CI smoke runs this via ``benchmarks.run --only kernel``):
+  * exactness: max |err| beyond fp32 tolerance or any greedy argmax flip,
+  * shallow regression: modelled tok/s at the auto-chosen split count
+    below single-split at ANY point,
+  * scaling: < ``MIN_DEEP_SPEEDUP``x modelled speedup vs ``kv_splits=1``
+    at the deepest KV length (lowest-batch row).
+
+Emits ``kernel.*`` CSV lines and a git-SHA-stamped ``BENCH_kernel.json``
+trajectory artifact (via benchmarks.run).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TPU_V5E
+from repro.kernels import ops
+from repro.kernels.ops import choose_kv_splits
+
+# modelled chip: executors that can host independent (b, h, split) grid
+# cells concurrently.  8 = one v5e chip's worth of independent sweep lanes.
+N_EXEC = 8
+# per-stage dispatch cost: both stages live in ONE jitted executable (no
+# host round-trip), so this is XLA op scheduling overhead, not a launch
+LAUNCH_S = 5e-7
+MIN_DEEP_SPEEDUP = 1.3            # acceptance floor at the deepest KV point
+EXACT_TOL = 2e-5                  # fp32 reassociation budget for real arrays
+
+# sweep geometry (GQA, bf16 cache — the serving default)
+HQ, HKV, D, DV = 4, 2, 64, 64
+KV_BYTES = 2                      # bf16 storage
+BLOCK = 256                       # decode_k_chunk: keys per grid step
+
+
+def model_sweep_time(batch: int, kv_len: int, n_splits: int) -> float:
+    """Roofline time for one decode sweep at this operating point."""
+    n_blocks = -(-kv_len // BLOCK)
+    s = max(1, min(n_splits, n_blocks))
+    cells = batch * HQ * s
+    util = min(1.0, cells / N_EXEC)
+    kv_bytes = batch * kv_len * HKV * (D + DV) * KV_BYTES
+    flops = 2.0 * batch * HQ * kv_len * (D + DV)
+    t1 = max(kv_bytes / (TPU_V5E.hbm_bw * util),
+             flops / (TPU_V5E.peak_flops * TPU_V5E.matmul_efficiency * util))
+    t = t1 + LAUNCH_S
+    if s > 1:
+        # stage 2: read S partials + LSE per (b, h) row, write one row out
+        merge_bytes = batch * HQ * (s * (DV + 1) + DV) * 4
+        t += merge_bytes / TPU_V5E.hbm_bw + LAUNCH_S
+    return t
+
+
+def modelled_tok_per_s(batch: int, kv_len: int, n_splits: int) -> float:
+    return batch / model_sweep_time(batch, kv_len, n_splits)
+
+
+def _measure_exactness() -> dict:
+    """Real-array parity: two-stage jnp and Pallas-interpret sweeps vs the
+    single-stage path, plus greedy argmax through a projection head."""
+    rng = np.random.default_rng(0)
+    B, C = 2, 512
+    q = jnp.asarray(rng.standard_normal((B, 1, HQ, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, C, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, C, HKV, DV)), jnp.float32)
+    head = jnp.asarray(rng.standard_normal((HQ * DV, 128)), jnp.float32)
+    pos = jnp.int32(C + 37)                        # wrapped ring
+    k_pos = ops.ring_positions(pos, C)
+
+    single = ops.decode_attention_jnp(q, k, v, k_pos, pos)
+    ref_arg = jnp.argmax(single.reshape(B, -1) @ head, axis=-1)
+    max_err, argmax_ok = 0.0, True
+    for s in (2, 4, 8):
+        two = ops.decode_attention_jnp(q, k, v, k_pos, pos, n_splits=s)
+        max_err = max(max_err, float(jnp.max(jnp.abs(single - two))))
+        argmax_ok &= bool(jnp.all(
+            jnp.argmax(two.reshape(B, -1) @ head, axis=-1) == ref_arg))
+    # one Pallas-interpret point (the kernel the model stands in for)
+    from repro.kernels import decode_attention as da
+    p1 = da.decode_attention_pallas(q, k, v, pos, block_k=64, interpret=True)
+    p4 = da.decode_attention_pallas(q, k, v, pos, block_k=64, n_splits=4,
+                                    interpret=True)
+    max_err = max(max_err, float(jnp.max(jnp.abs(p1 - p4))))
+    argmax_ok &= bool(jnp.all(
+        jnp.argmax(p4.reshape(B, -1) @ head, axis=-1) == ref_arg))
+    return {"max_exactness_err": max_err, "argmax_ok": argmax_ok}
+
+
+def _measure_wall(kv_len: int, n_splits: int, reps: int = 3) -> float:
+    """Informational jnp wall-clock at B=1 (host-bound; not gated)."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 1, HQ, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, kv_len, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, kv_len, HKV, DV)), jnp.float32)
+    pos = jnp.int32(kv_len - 1)
+    k_pos = ops.ring_positions(pos, kv_len)
+    fn = jax.jit(lambda: ops.decode_attention_jnp(
+        q, k, v, k_pos, pos, n_splits=n_splits))
+    jax.block_until_ready(fn())                   # warm the jit
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def run(quick: bool = False) -> dict:
+    kv_lens = [256, 4096] if quick else [256, 2048, 8192, 32768]
+    batches = [1, 4]
+    split_grid = [1, 2, 4, 8, 16]
+
+    rows = []
+    shallow_auto_ratio = float("inf")
+    for b in batches:
+        for kv in kv_lens:
+            base = modelled_tok_per_s(b, kv, 1)
+            by_split = {s: modelled_tok_per_s(b, kv, s) for s in split_grid}
+            auto_s = choose_kv_splits(b, kv, HQ, N_EXEC, block=BLOCK)
+            auto = modelled_tok_per_s(b, kv, auto_s)
+            best_s = max(by_split, key=by_split.get)
+            rows.append({
+                "batch": b, "kv_len": kv, "auto_splits": auto_s,
+                "modelled_tok_per_s_single": base,
+                "modelled_tok_per_s_auto": auto,
+                "modelled_auto_ratio": auto / base,
+                "modelled_best_splits": best_s,
+                "modelled_best_ratio": by_split[best_s] / base,
+                "modelled_tok_per_s_by_splits": by_split,
+            })
+            shallow_auto_ratio = min(shallow_auto_ratio, auto / base)
+
+    # shallow gate: the auto heuristic must never cost throughput — at any
+    # benched point, not just the shallow ones (splits=1 must stay the
+    # choice wherever splitting cannot pay for its merge)
+    for r in rows:
+        if r["modelled_auto_ratio"] < 1.0 - 1e-9:
+            raise AssertionError(
+                f"two-stage regression: auto splits={r['auto_splits']} gives "
+                f"{r['modelled_auto_ratio']:.3f}x single-split tok/s at "
+                f"B={r['batch']} KV={r['kv_len']}")
+
+    # deep gate: lowest-batch row at the deepest KV length must scale
+    deep = next(r for r in rows
+                if r["batch"] == min(batches) and r["kv_len"] == kv_lens[-1])
+    deep_speedup = deep["modelled_auto_ratio"]
+    if deep_speedup < MIN_DEEP_SPEEDUP:
+        raise AssertionError(
+            f"split sweep does not scale: {deep_speedup:.2f}x < "
+            f"{MIN_DEEP_SPEEDUP}x at B={deep['batch']} KV={deep['kv_len']}")
+
+    exact = _measure_exactness()
+    if exact["max_exactness_err"] > EXACT_TOL or not exact["argmax_ok"]:
+        raise AssertionError(
+            f"two-stage exactness failure: max |err| "
+            f"{exact['max_exactness_err']:.2e} (tol {EXACT_TOL:.0e}), "
+            f"greedy argmax ok={exact['argmax_ok']}")
+
+    wall_kv = kv_lens[-1]
+    wall_single = _measure_wall(wall_kv, 1, reps=2 if quick else 3)
+    wall_split = _measure_wall(wall_kv, deep["auto_splits"],
+                               reps=2 if quick else 3)
+
+    return {
+        "n_exec": N_EXEC,
+        "heads": {"q": HQ, "kv": HKV, "d": D, "dv": DV},
+        "block": BLOCK,
+        "rows": rows,
+        "deep_kv_len": deep["kv_len"],
+        "deep_speedup": deep_speedup,
+        "deep_best_splits": deep["auto_splits"],
+        "shallow_auto_ratio": shallow_auto_ratio,
+        "max_exactness_err": exact["max_exactness_err"],
+        "argmax_ok": exact["argmax_ok"],
+        "measured_wall_s_single": wall_single,
+        "measured_wall_s_auto": wall_split,
+    }
+
+
+def main(quick: bool = False) -> dict:
+    res = run(quick=quick)
+    for r in res["rows"]:
+        print(f"kernel.modelled_tok_per_s,{r['modelled_tok_per_s_auto']:.0f},"
+              f"B={r['batch']} KV={r['kv_len']} auto splits="
+              f"{r['auto_splits']} ({r['modelled_auto_ratio']:.2f}x single)")
+    print(f"kernel.deep_speedup,{res['deep_speedup']:.2f}x,"
+          f"modelled two-stage vs single-split at KV={res['deep_kv_len']} "
+          f"(S={res['deep_best_splits']}, {res['n_exec']} executors)")
+    print(f"kernel.max_exactness_err,{res['max_exactness_err']:.2e},"
+          f"measured on real arrays (greedy argmax ok={res['argmax_ok']})")
+    print(f"kernel.measured_wall_ms,{res['measured_wall_s_auto']*1e3:.3f},"
+          f"jnp sweep at KV={res['deep_kv_len']} on this host "
+          f"({res['measured_wall_s_single']*1e3:.3f} ms single-stage; "
+          "informational — host wall does not see TPU grid occupancy)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

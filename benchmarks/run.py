@@ -59,6 +59,13 @@ TRAJECTORY = {
         "degraded_steps": r["degraded_steps"],
         "j_per_token_overhead_vs_faultfree": r["j_per_token_overhead"],
     },
+    "kernel": lambda r: {
+        "deep_speedup_vs_single_split": r["deep_speedup"],
+        "deep_kv_len": r["deep_kv_len"],
+        "deep_best_splits": r["deep_best_splits"],
+        "shallow_auto_ratio": r["shallow_auto_ratio"],
+        "max_exactness_err": r["max_exactness_err"],
+    },
 }
 
 # one human-readable headline CSV line per trajectory job (printed for CI
@@ -84,6 +91,11 @@ HEADLINE = {
                         f"{r['degraded_steps']} capped steps; "
                         f"{r['j_per_token_overhead']:.2f}x J/token "
                         "vs fault-free"),
+    "kernel": lambda r: (f"kernel.deep_speedup,{r['deep_speedup']:.2f},"
+                         f"two-stage split-KV at KV={r['deep_kv_len']} "
+                         f"(S={r['deep_best_splits']}); shallow auto ratio "
+                         f"{r['shallow_auto_ratio']:.2f}x, exactness "
+                         f"{r['max_exactness_err']:.1e}"),
 }
 
 
@@ -106,6 +118,9 @@ def _write_trajectory(name: str, res: dict, quick: bool) -> None:
     path = ROOT / f"BENCH_{name}.json"
     payload = {"bench": name, "git_sha": _git_sha(),
                **TRAJECTORY[name](res)}
+    # a trajectory artifact without its commit stamp can't be diffed across
+    # PRs — refuse to write one (regenerate from a git checkout instead)
+    assert payload.get("git_sha"), f"BENCH_{name}.json payload missing git_sha"
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"{name}.trajectory,{path.name},machine-readable perf artifact")
 
@@ -119,10 +134,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (chaos_serve, ctrl_overhead, decode_throughput,
-                            fig2_energy, fig3_overhead, fig4_capping,
-                            fig5_edxp, fig6_tradeoff, prefix_cache,
-                            roofline, serve_engine, spec_decode)
+    from benchmarks import (chaos_serve, ctrl_overhead, decode_kernel,
+                            decode_throughput, fig2_energy, fig3_overhead,
+                            fig4_capping, fig5_edxp, fig6_tradeoff,
+                            prefix_cache, roofline, serve_engine, spec_decode)
     ART.mkdir(parents=True, exist_ok=True)
     jobs = {
         "fig2": lambda: fig2_energy.main(quick=args.quick),
@@ -136,6 +151,7 @@ def main(argv=None) -> int:
         "spec": lambda: spec_decode.main(quick=args.quick),
         "prefix": lambda: prefix_cache.main(quick=args.quick),
         "chaos": lambda: chaos_serve.main(quick=args.quick),
+        "kernel": lambda: decode_kernel.main(quick=args.quick),
         "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],
     }
     failures = 0

@@ -34,8 +34,26 @@ fold into the same iota/pos machinery, and the fed block's own k/v arrive
 as a separate in-flight input folded at the last grid step — speculative
 candidates never land in HBM, so rejection needs no cache rollback.
 
+Every kernel family also has a *two-stage* form (``n_splits > 1``), the
+flash-decoding shape for deep caches at low batch: stage 1 adds a
+``num_kv_splits`` grid axis — each split independently sweeps its
+contiguous slice of k-blocks/pages and writes a *normalized* partial
+output plus the slice's log-sum-exp, with no cross-split scratch
+dependency, so splits can run on different cores — and stage 2 is ONE
+shared LSE-merge kernel (``merge_kv_splits_pallas``) doing the
+numerically-exact online-softmax reduction over splits:
+
+    out = sum_s partial_s * exp(lse_s - m*) / sum_s exp(lse_s - m*)
+
+``n_splits = 1`` bypasses stage 2 entirely and is bit-for-bit today's
+single-kernel sweep.  The split count is chosen by
+``ops.choose_kv_splits`` (grid-occupancy heuristic) unless forced via
+``KernelPolicy.kv_splits``.  See docs/decode_path.md ("Two-stage
+split-KV").
+
 Validated in interpret mode against ``kernels/ref.decode_attention_ref``
-and ``ops.decode_attention_jnp`` (tests/test_kernels.py).
+and ``ops.decode_attention_jnp`` (tests/test_kernels.py,
+tests/test_split_kv.py).
 """
 from __future__ import annotations
 
@@ -73,12 +91,13 @@ def _online_softmax_update(q, k, v, valid, m_ref, l_ref, acc_ref, *,
     m_ref[...] = m_new
 
 
-def _fold_candidates_and_finish(q_ref, kn_ref, vn_ref, o_ref, m_ref, l_ref,
-                                acc_ref, *, scale: float, window: int,
-                                logit_cap: float, q_len: int):
-    """Verify-kernel epilogue, shared by the ring and paged variants: fold
-    the in-flight candidate block (causal within the fed tokens — query row
-    i attends to candidates j <= i), then normalize into the output tile."""
+def _fold_candidates(q_ref, kn_ref, vn_ref, m_ref, l_ref, acc_ref, *,
+                     scale: float, window: int, logit_cap: float, q_len: int):
+    """Fold the in-flight candidate block into the online-softmax scratch
+    (causal within the fed tokens — query row i attends to candidates
+    j <= i).  Shared by the single-stage verify epilogue and the two-stage
+    verify kernels (which fold candidates into the LAST split only, keeping
+    stage 2 a layout-agnostic LSE merge)."""
     ri = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0)
     cj = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
     cand_valid = cj <= ri
@@ -89,8 +108,86 @@ def _fold_candidates_and_finish(q_ref, kn_ref, vn_ref, o_ref, m_ref, l_ref,
         kn_ref[0, 0].astype(jnp.float32),
         vn_ref[0, 0].astype(jnp.float32),
         cand_valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+
+
+def _fold_candidates_and_finish(q_ref, kn_ref, vn_ref, o_ref, m_ref, l_ref,
+                                acc_ref, *, scale: float, window: int,
+                                logit_cap: float, q_len: int):
+    """Verify-kernel epilogue, shared by the ring and paged variants: fold
+    the in-flight candidate block, then normalize into the output tile."""
+    _fold_candidates(q_ref, kn_ref, vn_ref, m_ref, l_ref, acc_ref,
+                     scale=scale, window=window, logit_cap=logit_cap,
+                     q_len=q_len)
     l = jnp.maximum(l_ref[...], 1e-30)
     o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _write_partials(part_ref, lse_ref, m_ref, l_ref, acc_ref):
+    """Stage-1 epilogue: flush this split's scratch as a *normalized*
+    partial output plus its log-sum-exp.
+
+    ``partial = acc / max(l, eps)`` and ``lse = m + log(l)`` make the
+    stage-2 merge exact: ``partial_s * l_s e^{m_s} = acc_s e^{m_s}``, so
+    weighting partials by ``softmax(lse)`` recovers the single-sweep
+    softmax identically.  A split whose blocks were all masked (ring not
+    yet wrapped, window, or the clamp padding of a non-divisible split
+    count) still has ``l == 0`` — its lse is pinned to NEG_INF so the
+    merge weighs it to exactly zero instead of NaN-ing on log(0)."""
+    l = l_ref[...]
+    part_ref[0, 0, 0] = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+    lse_ref[0, 0, 0] = jnp.where(
+        l > 0.0, m_ref[...] + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+
+
+def _lse_merge_kernel(part_ref, lse_ref, o_ref):
+    """Stage 2: numerically-exact online-softmax reduction over splits.
+
+    One (flattened batch*head) tile per grid step: renormalize every
+    split's partial by its share of the global denominator.  All-empty
+    rows (every lse == NEG_INF) degrade to a uniform average of partials —
+    finite garbage, same contract as the single-stage kernels' masked-row
+    behaviour."""
+    lse = lse_ref[0]                                     # (S, R)
+    m = jnp.max(lse, axis=0)                             # (R,)
+    w = jnp.exp(lse - m[None, :])                        # (S, R)
+    den = jnp.maximum(jnp.sum(w, axis=0), 1e-30)         # (R,)
+    acc = jnp.sum(part_ref[0] * w[..., None], axis=0)    # (R, Dv)
+    o_ref[0] = (acc / den[:, None]).astype(o_ref.dtype)
+
+
+def merge_kv_splits_pallas(partial: jax.Array, lse: jax.Array, *,
+                           out_dtype, interpret: bool = False) -> jax.Array:
+    """Merge stage-1 split partials: ``partial (..., S, R, Dv)`` fp32 +
+    ``lse (..., S, R)`` fp32 -> ``(..., R, Dv)`` in ``out_dtype``.
+
+    The ONE stage-2 kernel shared by all four sweep families (ring/paged x
+    decode/verify) and by the chunked-prefill path that reuses the paged
+    verify sweep — the merge is layout-agnostic because stage 1 already
+    folded every layout quirk (ring arithmetic, block tables, in-flight
+    candidates) into the partial/lse contract."""
+    lead = partial.shape[:-3]
+    S, R, Dv = partial.shape[-3:]
+    pf = partial.reshape((-1, S, R, Dv))
+    lf = lse.reshape((-1, S, R))
+    N = pf.shape[0]
+    out = pl.pallas_call(
+        _lse_merge_kernel,
+        grid=(N,),
+        in_specs=[pl.BlockSpec((1, S, R, Dv), lambda n: (n, 0, 0, 0)),
+                  pl.BlockSpec((1, S, R), lambda n: (n, 0, 0))],
+        out_specs=pl.BlockSpec((1, R, Dv), lambda n: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, R, Dv), out_dtype),
+        interpret=interpret,
+    )(pf, lf)
+    return out.reshape(lead + (R, Dv))
+
+
+def _split_blocks(n_blocks: int, n_splits: int) -> tuple[int, int]:
+    """Clamp the split count to the block count and size each split's
+    contiguous block slice (ceil — the last split may sweep fewer blocks
+    when the counts don't divide)."""
+    s = max(1, min(int(n_splits), n_blocks))
+    return s, -(-n_blocks // s)
 
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
@@ -129,6 +226,116 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _decode_partials_kernel(pos_ref, q_ref, k_ref, v_ref, part_ref, lse_ref,
+                            m_ref, l_ref, acc_ref, *, scale: float,
+                            window: int, logit_cap: float, block_k: int,
+                            n_k: int, kpb: int, cache_len: int):
+    """Stage 1 of the two-stage ring decode sweep: grid
+    ``(B, Hq, n_splits, kpb)``.  Split ``s`` owns global k-blocks
+    ``[s*kpb, (s+1)*kpb)``; its scratch is private (init at local block 0,
+    flushed as (partial, lse) at local block kpb-1) so splits have no
+    cross-split dependency.  Blocks past ``n_k`` (non-divisible split
+    counts — the index_map clamps their DMA to the last real block) mask
+    off wholly."""
+    isp, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    g = isp * kpb + ik                       # global k-block index
+    slot = g * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    k_pos = pos - jnp.remainder(pos - slot, cache_len)
+    valid = (k_pos >= 0) & (g < n_k)
+    if window > 0:
+        valid = jnp.logical_and(valid, k_pos > pos - window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        _online_softmax_update(
+            q_ref[0, 0].astype(jnp.float32),
+            k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32),
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+
+    @pl.when(ik == kpb - 1)
+    def _flush():
+        _write_partials(part_ref, lse_ref, m_ref, l_ref, acc_ref)
+
+
+def decode_attention_pallas_partials(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_cache: jax.Array,            # (B, C, Hkv, D)   ring buffer, storage dtype
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    pos: jax.Array,                # () int32 absolute position of q
+    *,
+    n_splits: int, window: int = 0, logit_cap: float = 0.0,
+    scale: float | None = None, block_k: int = 256, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 1 only: per-split partial sweep over the ring cache.
+
+    Returns ``(partial (B, Hq, S, 1, Dv) fp32, lse (B, Hq, S, 1) fp32)``
+    — the two-stage contract validated against
+    ``ref.decode_attention_split_ref``."""
+    B, _, Hq, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    block_k = min(block_k, C)
+    if C % block_k:
+        block_k = next(b for b in range(block_k, 0, -1) if C % b == 0)
+    n_k = C // block_k
+    n_splits, kpb = _split_blocks(n_k, n_splits)
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, 1, D)
+    kt = k_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, D)
+    vt = v_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, Dv)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_partials_kernel, scale=scale, window=window,
+        logit_cap=logit_cap, block_k=block_k, n_k=n_k, kpb=kpb, cache_len=C)
+
+    def kv_index(b, h, s, ik, pos_ref, G=G, kpb=kpb, n_k=n_k):
+        # clamp out-of-range blocks of the ragged last split to a real
+        # block: its DMA lands somewhere valid and the kernel masks it off
+        return (b, h // G, jnp.minimum(s * kpb + ik, n_k - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, n_splits, kpb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, s, ik, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+            pl.BlockSpec((1, 1, block_k, Dv), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, 1, Dv),
+                         lambda b, h, s, ik, pos_ref: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda b, h, s, ik, pos_ref: (b, h, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),       # running max m
+            pltpu.VMEM((1,), jnp.float32),       # running denom l
+            pltpu.VMEM((1, Dv), jnp.float32),    # running numerator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, n_splits, 1, Dv), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hq, n_splits, 1), jnp.float32)],
+        interpret=interpret,
+    )(pos_arr, qt, kt, vt)
+
+
 def decode_attention_pallas(
     q: jax.Array,                  # (B, 1, Hq, D)
     k_cache: jax.Array,            # (B, C, Hkv, D)   ring buffer, storage dtype
@@ -136,11 +343,21 @@ def decode_attention_pallas(
     pos: jax.Array,                # () int32 absolute position of q
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
-    block_k: int = 256, interpret: bool = False,
+    block_k: int = 256, n_splits: int = 1, interpret: bool = False,
 ) -> jax.Array:
     """Split-K decode attention against the canonical ring-buffer cache
     (slot = p % C).  Assumes that invariant — callers with an arbitrary
-    ``k_pos`` layout must use the jnp/ref paths."""
+    ``k_pos`` layout must use the jnp/ref paths.  ``n_splits > 1`` runs
+    the two-stage pipeline (parallel partial sweeps + LSE merge);
+    ``n_splits = 1`` is the original single-kernel sweep, unchanged."""
+    if n_splits > 1:
+        partial, lse = decode_attention_pallas_partials(
+            q, k_cache, v_cache, pos, n_splits=n_splits, window=window,
+            logit_cap=logit_cap, scale=scale, block_k=block_k,
+            interpret=interpret)
+        out = merge_kv_splits_pallas(partial, lse, out_dtype=q.dtype,
+                                     interpret=interpret)   # (B, Hq, 1, Dv)
+        return out.transpose(0, 2, 1, 3)                    # (B, 1, Hq, Dv)
     B, _, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
@@ -240,6 +457,131 @@ def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, o_ref,
             scale=scale, window=window, logit_cap=logit_cap, q_len=q_len)
 
 
+def _verify_partials_kernel(pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                            part_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+                            scale: float, window: int, logit_cap: float,
+                            block_k: int, n_k: int, kpb: int, n_splits: int,
+                            cache_len: int, q_len: int):
+    """Stage 1 of the two-stage ring verify sweep.  Same masks as
+    ``_verify_kernel``; the in-flight candidate block folds into the LAST
+    split's scratch just before its flush, so stage 2 stays the generic
+    LSE merge (no candidate-aware merge variant needed)."""
+    isp, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    g = isp * kpb + ik
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q_len, block_k), 0)
+    q_pos = pos + qi
+    slot = g * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (q_len, block_k), 1)
+    last = pos - 1                    # committed through pos - 1
+    k_pos = last - jnp.remainder(last - slot, cache_len)
+    valid = (k_pos >= 0) & (k_pos > q_pos - cache_len) & (g < n_k)
+    if window > 0:
+        valid = jnp.logical_and(valid, k_pos > q_pos - window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        _online_softmax_update(
+            q_ref[0, 0].astype(jnp.float32),                 # (Q, D)
+            k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32),
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+
+    @pl.when((ik == kpb - 1) & (isp == n_splits - 1))
+    def _fold():
+        _fold_candidates(q_ref, kn_ref, vn_ref, m_ref, l_ref, acc_ref,
+                         scale=scale, window=window, logit_cap=logit_cap,
+                         q_len=q_len)
+
+    @pl.when(ik == kpb - 1)
+    def _flush():
+        _write_partials(part_ref, lse_ref, m_ref, l_ref, acc_ref)
+
+
+def verify_attention_pallas_partials(
+    q: jax.Array,                  # (B, Q, Hq, D)   Q = K+1 fed tokens
+    k_cache: jax.Array,            # (B, C, Hkv, D)  committed through pos-1
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)  in-flight candidate rows
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    pos: jax.Array,                # () int32 absolute position of q[:, 0]
+    *,
+    n_splits: int, window: int = 0, logit_cap: float = 0.0,
+    scale: float | None = None, block_k: int = 256, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 1 only: per-split verify sweep over the ring cache, candidates
+    folded into the last split.  Returns ``(partial (B, Hq, S, Q, Dv) fp32,
+    lse (B, Hq, S, Q) fp32)``."""
+    B, Q, Hq, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = Hq // Hkv
+    if Q > C:
+        raise ValueError(f"verify block {Q} exceeds cache capacity {C}")
+    if scale is None:
+        scale = D ** -0.5
+    block_k = min(block_k, C)
+    if C % block_k:
+        block_k = next(b for b in range(block_k, 0, -1) if C % b == 0)
+    n_k = C // block_k
+    n_splits, kpb = _split_blocks(n_k, n_splits)
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, Q, D)
+    kt = k_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, D)
+    vt = v_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, Dv)
+    knt = k_new.transpose(0, 2, 1, 3)            # (B, Hkv, Q, D)
+    vnt = v_new.transpose(0, 2, 1, 3)            # (B, Hkv, Q, Dv)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _verify_partials_kernel, scale=scale, window=window,
+        logit_cap=logit_cap, block_k=block_k, n_k=n_k, kpb=kpb,
+        n_splits=n_splits, cache_len=C, q_len=Q)
+
+    def kv_index(b, h, s, ik, pos_ref, G=G, kpb=kpb, n_k=n_k):
+        return (b, h // G, jnp.minimum(s * kpb + ik, n_k - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, n_splits, kpb),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, D),
+                         lambda b, h, s, ik, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+            pl.BlockSpec((1, 1, block_k, Dv), kv_index),
+            pl.BlockSpec((1, 1, Q, D),
+                         lambda b, h, s, ik, pos_ref, G=G: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Q, Dv),
+                         lambda b, h, s, ik, pos_ref, G=G: (b, h // G, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, Dv),
+                         lambda b, h, s, ik, pos_ref: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q),
+                         lambda b, h, s, ik, pos_ref: (b, h, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Q,), jnp.float32),       # running max m, per query
+            pltpu.VMEM((Q,), jnp.float32),       # running denom l
+            pltpu.VMEM((Q, Dv), jnp.float32),    # running numerator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, n_splits, Q, Dv), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hq, n_splits, Q), jnp.float32)],
+        interpret=interpret,
+    )(pos_arr, qt, kt, vt, knt, vnt)
+
+
 def verify_attention_pallas(
     q: jax.Array,                  # (B, Q, Hq, D)   Q = K+1 fed tokens
     k_cache: jax.Array,            # (B, C, Hkv, D)  committed through pos-1
@@ -249,12 +591,21 @@ def verify_attention_pallas(
     pos: jax.Array,                # () int32 absolute position of q[:, 0]
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
-    block_k: int = 256, interpret: bool = False,
+    block_k: int = 256, n_splits: int = 1, interpret: bool = False,
 ) -> jax.Array:
     """Split-K speculative verify attention against the canonical ring
     cache.  Assumes the ring invariant for the *committed* prefix (last
     write at ``(pos - 1) % C``); the fed block's candidates never touch the
-    cache — rejection therefore needs no rollback."""
+    cache — rejection therefore needs no rollback.  ``n_splits > 1`` runs
+    the two-stage pipeline; ``n_splits = 1`` is the original sweep."""
+    if n_splits > 1:
+        partial, lse = verify_attention_pallas_partials(
+            q, k_cache, v_cache, k_new, v_new, pos, n_splits=n_splits,
+            window=window, logit_cap=logit_cap, scale=scale, block_k=block_k,
+            interpret=interpret)
+        out = merge_kv_splits_pallas(partial, lse, out_dtype=q.dtype,
+                                     interpret=interpret)   # (B, Hq, Q, Dv)
+        return out.transpose(0, 2, 1, 3)                    # (B, Q, Hq, Dv)
     B, Q, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
@@ -349,6 +700,128 @@ def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
             scale=scale, window=window, logit_cap=logit_cap, q_len=q_len)
 
 
+def _paged_verify_partials_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref,
+                                  kn_ref, vn_ref, part_ref, lse_ref,
+                                  m_ref, l_ref, acc_ref, *, scale: float,
+                                  window: int, logit_cap: float,
+                                  page_size: int, n_blocks: int, ppb: int,
+                                  n_splits: int, q_len: int):
+    """Stage 1 of the two-stage paged verify sweep.  Same masks as
+    ``_paged_verify_kernel``; candidates fold into the LAST split only."""
+    ib = pl.program_id(0)
+    isp, ij = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[ib]
+    gj = isp * ppb + ij
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q_len, page_size), 0)
+    q_pos = pos + qi
+    k_pos = gj * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (q_len, page_size), 1)
+    valid = (k_pos < pos) & (gj < n_blocks)      # committed rows only
+    if window > 0:
+        valid = jnp.logical_and(valid, k_pos > q_pos - window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        _online_softmax_update(
+            q_ref[0, 0].astype(jnp.float32),                 # (Q, D)
+            k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32),
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+
+    @pl.when((ij == ppb - 1) & (isp == n_splits - 1))
+    def _fold():
+        _fold_candidates(q_ref, kn_ref, vn_ref, m_ref, l_ref, acc_ref,
+                         scale=scale, window=window, logit_cap=logit_cap,
+                         q_len=q_len)
+
+    @pl.when(ij == ppb - 1)
+    def _flush():
+        _write_partials(part_ref, lse_ref, m_ref, l_ref, acc_ref)
+
+
+def paged_verify_attention_pallas_partials(
+    q: jax.Array,                  # (B, Q, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    k_new: jax.Array,              # (B, Q, Hkv, D)    in-flight candidates
+    v_new: jax.Array,              # (B, Q, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) absolute position of q[:, 0]
+    *,
+    n_splits: int, window: int = 0, logit_cap: float = 0.0,
+    scale: float | None = None, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 1 only: per-split paged verify sweep, candidates folded into
+    the last split.  Returns ``(partial (B, Hq, S, Q, Dv) fp32,
+    lse (B, Hq, S, Q) fp32)``."""
+    B, Q, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    nb = block_tables.shape[1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    n_splits, ppb = _split_blocks(nb, n_splits)
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, Q, D)
+    kt = k_pages.transpose(0, 2, 1, 3)           # (P, Hkv, ps, D)
+    vt = v_pages.transpose(0, 2, 1, 3)           # (P, Hkv, ps, Dv)
+    knt = k_new.transpose(0, 2, 1, 3)            # (B, Hkv, Q, D)
+    vnt = v_new.transpose(0, 2, 1, 3)            # (B, Hkv, Q, Dv)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
+
+    kernel = functools.partial(
+        _paged_verify_partials_kernel, scale=scale, window=window,
+        logit_cap=logit_cap, page_size=ps, n_blocks=nb, ppb=ppb,
+        n_splits=n_splits, q_len=Q)
+
+    def kv_index(b, h, s, j, bt_ref, pos_ref, G=G, ppb=ppb, nb=nb):
+        return (bt_ref[b, jnp.minimum(s * ppb + j, nb - 1)], h // G, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block table + positions
+        grid=(B, Hq, n_splits, ppb),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, D),
+                         lambda b, h, s, j, bt_ref, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D), kv_index),
+            pl.BlockSpec((1, 1, ps, Dv), kv_index),
+            pl.BlockSpec((1, 1, Q, D),
+                         lambda b, h, s, j, bt_ref, pos_ref, G=G:
+                         (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Q, Dv),
+                         lambda b, h, s, j, bt_ref, pos_ref, G=G:
+                         (b, h // G, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, Dv),
+                         lambda b, h, s, j, bt_ref, pos_ref: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q),
+                         lambda b, h, s, j, bt_ref, pos_ref: (b, h, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Q,), jnp.float32),       # running max m, per query
+            pltpu.VMEM((Q,), jnp.float32),       # running denom l
+            pltpu.VMEM((Q, Dv), jnp.float32),    # running numerator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, n_splits, Q, Dv), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hq, n_splits, Q), jnp.float32)],
+        interpret=interpret,
+    )(bt, pos_arr, qt, kt, vt, knt, vnt)
+
+
 def paged_verify_attention_pallas(
     q: jax.Array,                  # (B, Q, Hq, D)
     k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
@@ -359,12 +832,21 @@ def paged_verify_attention_pallas(
     pos: jax.Array,                # (B,) absolute position of q[:, 0]
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
-    interpret: bool = False,
+    n_splits: int = 1, interpret: bool = False,
 ) -> jax.Array:
     """Split-K speculative verify attention over a paged KV cache: same
     block-table gather as ``paged_decode_attention_pallas``, ``q_len = K+1``
     query rows per (b, h) tile, in-flight candidates folded at the last
-    grid step.  ``pos`` is per-request (ragged batch)."""
+    grid step.  ``pos`` is per-request (ragged batch).  ``n_splits > 1``
+    runs the two-stage pipeline; ``n_splits = 1`` is the original sweep."""
+    if n_splits > 1:
+        partial, lse = paged_verify_attention_pallas_partials(
+            q, k_pages, v_pages, k_new, v_new, block_tables, pos,
+            n_splits=n_splits, window=window, logit_cap=logit_cap,
+            scale=scale, interpret=interpret)
+        out = merge_kv_splits_pallas(partial, lse, out_dtype=q.dtype,
+                                     interpret=interpret)   # (B, Hq, Q, Dv)
+        return out.transpose(0, 2, 1, 3)                    # (B, Q, Hq, Dv)
     B, Q, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     Dv = v_pages.shape[-1]
@@ -458,6 +940,107 @@ def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_partials_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref,
+                                  part_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+                                  scale: float, window: int, logit_cap: float,
+                                  page_size: int, n_blocks: int, ppb: int):
+    """Stage 1 of the two-stage paged decode sweep: identical masks to
+    ``_paged_decode_kernel``, but each split flushes normalized partials +
+    LSE instead of chaining scratch across every page."""
+    ib = pl.program_id(0)
+    isp, ij = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[ib]
+    gj = isp * ppb + ij
+    k_pos = gj * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = (k_pos <= pos) & (gj < n_blocks)
+    if window > 0:
+        valid = jnp.logical_and(valid, k_pos > pos - window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        _online_softmax_update(
+            q_ref[0, 0].astype(jnp.float32),                 # (1, D)
+            k_ref[0, 0].astype(jnp.float32),                 # (ps, D)
+            v_ref[0, 0].astype(jnp.float32),                 # (ps, Dv)
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+
+    @pl.when(ij == ppb - 1)
+    def _flush():
+        _write_partials(part_ref, lse_ref, m_ref, l_ref, acc_ref)
+
+
+def paged_decode_attention_pallas_partials(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *,
+    n_splits: int, window: int = 0, logit_cap: float = 0.0,
+    scale: float | None = None, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 1 only: per-split paged decode sweep.  Returns
+    ``(partial (B, Hq, S, 1, Dv) fp32, lse (B, Hq, S, 1) fp32)``."""
+    B, _, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    nb = block_tables.shape[1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    n_splits, ppb = _split_blocks(nb, n_splits)
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, 1, D)
+    kt = k_pages.transpose(0, 2, 1, 3)           # (P, Hkv, ps, D)
+    vt = v_pages.transpose(0, 2, 1, 3)           # (P, Hkv, ps, Dv)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
+
+    kernel = functools.partial(
+        _paged_decode_partials_kernel, scale=scale, window=window,
+        logit_cap=logit_cap, page_size=ps, n_blocks=nb, ppb=ppb)
+
+    def kv_index(b, h, s, j, bt_ref, pos_ref, G=G, ppb=ppb, nb=nb):
+        return (bt_ref[b, jnp.minimum(s * ppb + j, nb - 1)], h // G, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block table + positions
+        grid=(B, Hq, n_splits, ppb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, s, j, bt_ref, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D), kv_index),
+            pl.BlockSpec((1, 1, ps, Dv), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, 1, Dv),
+                         lambda b, h, s, j, bt_ref, pos_ref: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda b, h, s, j, bt_ref, pos_ref: (b, h, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),       # running max m
+            pltpu.VMEM((1,), jnp.float32),       # running denom l
+            pltpu.VMEM((1, Dv), jnp.float32),    # running numerator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, n_splits, 1, Dv), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hq, n_splits, 1), jnp.float32)],
+        interpret=interpret,
+    )(bt, pos_arr, qt, kt, vt)
+
+
 def paged_decode_attention_pallas(
     q: jax.Array,                  # (B, 1, Hq, D)
     k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
@@ -466,7 +1049,7 @@ def paged_decode_attention_pallas(
     pos: jax.Array,                # (B,) per-request absolute position of q
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
-    interpret: bool = False,
+    n_splits: int = 1, interpret: bool = False,
 ) -> jax.Array:
     """Split-K decode attention over a paged KV cache.
 
@@ -476,7 +1059,16 @@ def paged_decode_attention_pallas(
     head ``h // G``.  The pool is shared across requests — a request's pages
     need not be contiguous, only its table row must list them in logical
     order.  ``pos`` is per-request (ragged batch), so validity masks are
-    per-row, unlike the ring kernel's single scalar."""
+    per-row, unlike the ring kernel's single scalar.  ``n_splits > 1`` runs
+    the two-stage pipeline; ``n_splits = 1`` is the original sweep."""
+    if n_splits > 1:
+        partial, lse = paged_decode_attention_pallas_partials(
+            q, k_pages, v_pages, block_tables, pos, n_splits=n_splits,
+            window=window, logit_cap=logit_cap, scale=scale,
+            interpret=interpret)
+        out = merge_kv_splits_pallas(partial, lse, out_dtype=q.dtype,
+                                     interpret=interpret)   # (B, Hq, 1, Dv)
+        return out.transpose(0, 2, 1, 3)                    # (B, 1, Hq, Dv)
     B, _, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     Dv = v_pages.shape[-1]

@@ -32,6 +32,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -51,9 +53,113 @@ class KernelPolicy:
     k_chunk: int = 1024
     ssd_chunk: int = 128
     decode_k_chunk: int = 256    # split-K block for the Pallas decode kernel
+    kv_splits: str | int = "auto"  # two-stage split count: "auto" | int (1 = single-stage)
 
 
 DEFAULT_POLICY = KernelPolicy()
+
+
+# ==========================================================================
+# Two-stage split-KV: occupancy heuristic + jnp partial/merge helpers
+# ==========================================================================
+def _sweep_executors() -> int:
+    """How many independent executors can run decode-sweep grid cells
+    concurrently.  On TPU the (b, h) cells map onto cores/devices; on the
+    CPU stand-in, host threads."""
+    if jax.default_backend() == "tpu":
+        return jax.local_device_count()
+    return os.cpu_count() or 1
+
+
+def choose_kv_splits(batch: int, kv_len: int, q_heads: int,
+                     n_cores: int | None = None, *,
+                     block: int = 256, max_splits: int = 16) -> int:
+    """Occupancy-model heuristic for the two-stage split-KV sweep.
+
+    The stage-1 grid has ``batch * q_heads * num_kv_splits`` independent
+    cells.  When ``batch * q_heads`` already oversubscribes the executors
+    (the common high-batch serving case), splitting only adds stage-2 merge
+    traffic — return 1, which is bit-for-bit today's single-stage sweep.
+    Only when the natural grid *underfills* the machine (deep cache, low
+    batch — exactly the power-capped latency-bound regime) do we split,
+    just enough to cover the executors (2x for load balance), never past
+    the number of k-blocks or ``max_splits`` (merge cost grows with S).
+    """
+    if n_cores is None:
+        n_cores = _sweep_executors()
+    cells = int(batch) * int(q_heads)
+    n_blocks = -(-int(kv_len) // max(1, int(block)))
+    if cells >= 2 * n_cores or n_blocks <= 1:
+        return 1
+    return max(1, min(-(-2 * n_cores // max(1, cells)), n_blocks, max_splits))
+
+
+def _resolve_kv_splits(policy: KernelPolicy, batch: int, kv_len: int,
+                       q_heads: int, *, block: int) -> int:
+    if policy.kv_splits == "auto":
+        return choose_kv_splits(batch, kv_len, q_heads, block=block)
+    return max(1, int(policy.kv_splits))
+
+
+def _lse_merge_jnp(partial: jax.Array, lse: jax.Array) -> jax.Array:
+    """Online-softmax merge over the split axis: ``partial (..., S, Dv)``
+    + ``lse (..., S)`` -> ``(..., Dv)``.  Exact: each split's normalized
+    partial re-weighted by ``exp(lse_s - max_s lse)`` reconstructs the
+    unsplit numerator/denominator pair."""
+    m = jnp.max(lse, axis=-1, keepdims=True)
+    w = jnp.exp(lse - m)                               # (..., S)
+    den = jnp.maximum(jnp.sum(w, axis=-1), 1e-30)
+    acc = jnp.sum(partial * w[..., None], axis=-2)     # (..., Dv)
+    return acc / den[..., None]
+
+
+def _split_attend_jnp(s: jax.Array, vf: jax.Array, n_splits: int) -> jax.Array:
+    """Two-stage softmax-weighted sum for the jnp backend: partition the
+    masked score axis into ``n_splits`` slices, emit per-split normalized
+    partials + LSE, then LSE-merge.  Mirrors the Pallas partial contract
+    (ragged last split padded with masked scores).
+
+    s:  (B, Hkv, G, R, K) fp32 masked scores (invalid entries = NEG_INF)
+    vf: (B, K, Hkv, Dv)   values in logical key order
+    -> (B, Hkv, G, R, Dv) fp32
+    """
+    B, Hkv, G, R, K = s.shape
+    Dv = vf.shape[-1]
+    S = max(1, min(int(n_splits), K))
+    kps = -(-K // S)
+    pad = S * kps - K
+    sp = jnp.pad(s, [(0, 0)] * 4 + [(0, pad)], constant_values=NEG_INF)
+    vp = jnp.pad(vf, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    sp = sp.reshape(B, Hkv, G, R, S, kps)
+    vp = vp.reshape(B, S, kps, Hkv, Dv)
+    m = jnp.max(sp, axis=-1)                           # (B,h,g,R,S)
+    p = jnp.exp(sp - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgrsk,bskhd->bhgrsd", p, vp,
+                     preferred_element_type=jnp.float32)
+    partial = acc / jnp.maximum(l, 1e-30)[..., None]
+    # fully-masked splits: every score is NEG_INF, so p = exp(0) = 1 and l
+    # counts the padding — the m-guard (not l > 0) is what zeroes their
+    # merge weight; the raw-l denominator above keeps partial finite.
+    lse = jnp.where(m > 0.5 * NEG_INF,
+                    m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+    return _lse_merge_jnp(partial, lse)
+
+
+_KPOS_FALLBACK_WARNED: set[str] = set()
+
+
+def _warn_k_pos_fallback(entry: str) -> None:
+    """One-time (per entry point) warning when a custom ``k_pos`` silently
+    costs the caller the Pallas fast path."""
+    if entry in _KPOS_FALLBACK_WARNED:
+        return
+    _KPOS_FALLBACK_WARNED.add(entry)
+    warnings.warn(
+        f"{entry}: custom k_pos slot layout disables the Pallas decode "
+        "kernel (it derives ring positions from pos, assuming the canonical "
+        "slot = p % C layout); falling back to the jnp backend for this "
+        "call", RuntimeWarning, stacklevel=3)
 
 
 # ==========================================================================
@@ -165,6 +271,7 @@ def decode_attention_jnp(
     k_pos: jax.Array,              # (C,) absolute position held by each slot (-1 invalid)
     pos: jax.Array,                # () current absolute position of q
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    n_splits: int = 1,
 ) -> jax.Array:
     """Single-token decode against a (ring-buffer) KV cache.
 
@@ -172,7 +279,8 @@ def decode_attention_jnp(
     accumulate in fp32 via ``preferred_element_type`` (same rationale as
     ``flash_attention_jnp``: decode streams the WHOLE cache per token, so a
     whole-cache fp32 pre-cast would triple the hot path's HBM traffic).
-    """
+    ``n_splits > 1`` runs the two-stage partial/merge path (exact; mirrors
+    the Pallas split contract); 1 is the plain softmax."""
     B, _, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
@@ -188,9 +296,12 @@ def decode_attention_jnp(
     if window > 0:
         valid &= k_pos > pos - window
     s = jnp.where(valid[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache,
-                   preferred_element_type=jnp.float32)
+    if n_splits > 1:
+        o = _split_attend_jnp(s[:, :, :, None, :], v_cache, n_splits)[..., 0, :]
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache,
+                       preferred_element_type=jnp.float32)
     return o.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
 
 
@@ -203,6 +314,7 @@ def verify_attention_jnp(
     k_pos: jax.Array,              # (C,) absolute position per slot (<0 invalid)
     pos: jax.Array,                # () absolute position of q[:, 0]
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    n_splits: int = 1,
 ) -> jax.Array:
     """Speculative multi-query decode (verify) against a ring-buffer cache.
 
@@ -240,10 +352,14 @@ def verify_attention_jnp(
         valid_n &= n_pos > q_pos - window
     valid = jnp.concatenate([valid_c, valid_n], axis=-1)     # (Q, C+Q)
     s = jnp.where(valid[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
     vf = jnp.concatenate([v_cache, v_new], axis=1)
-    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf,
-                   preferred_element_type=jnp.float32)
+    if n_splits > 1:
+        o = _split_attend_jnp(s, vf, n_splits)               # (B,h,g,Q,Dv)
+        o = o.transpose(0, 3, 1, 2, 4)                       # (B,Q,h,g,Dv)
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf,
+                       preferred_element_type=jnp.float32)
     return o.reshape(B, Q, Hq, Dv).astype(q.dtype)
 
 
@@ -256,6 +372,7 @@ def paged_verify_attention_jnp(
     block_tables: jax.Array,       # (B, nb) int32
     pos: jax.Array,                # (B,) absolute position of q[:, 0]
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    n_splits: int = 1,
 ) -> jax.Array:
     """Paged analogue of ``verify_attention_jnp``: the pool is committed
     through ``pos[b] - 1`` (linear layout, no eviction); ``pos`` is
@@ -289,10 +406,14 @@ def paged_verify_attention_jnp(
         valid_n &= n_pos > q_pos - window
     valid = jnp.concatenate([valid_c, valid_n], axis=-1)     # (B, Q, K+Q)
     s = jnp.where(valid[:, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
     vf = jnp.concatenate([vg, v_new], axis=1)
-    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf,
-                   preferred_element_type=jnp.float32)
+    if n_splits > 1:
+        o = _split_attend_jnp(s, vf, n_splits)               # (B,h,g,Q,Dv)
+        o = o.transpose(0, 3, 1, 2, 4)                       # (B,Q,h,g,Dv)
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf,
+                       preferred_element_type=jnp.float32)
     return o.reshape(B, Q, Hq, Dv).astype(q.dtype)
 
 
@@ -303,6 +424,7 @@ def paged_decode_attention_jnp(
     block_tables: jax.Array,       # (B, nb) int32
     pos: jax.Array,                # (B,) per-request absolute position of q
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    n_splits: int = 1,
 ) -> jax.Array:
     """Single-token decode against a paged KV cache, pure jnp.
 
@@ -332,9 +454,12 @@ def paged_decode_attention_jnp(
     if window > 0:
         valid &= k_pos > posb - window
     s = jnp.where(valid[:, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgk,bkhd->bhgd", p, vg,
-                   preferred_element_type=jnp.float32)
+    if n_splits > 1:
+        o = _split_attend_jnp(s[:, :, :, None, :], vg, n_splits)[..., 0, :]
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgk,bkhd->bhgd", p, vg,
+                       preferred_element_type=jnp.float32)
     return o.reshape(B, 1, Hq, Dv).astype(q.dtype)
 
 
@@ -356,11 +481,14 @@ def paged_decode_attention(
     backend = policy.decode
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    ps, nb = k_pages.shape[1], block_tables.shape[1]
+    n_splits = _resolve_kv_splits(policy, q.shape[0], nb * ps, q.shape[2],
+                                  block=ps)
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import decode_attention as da
         return da.paged_decode_attention_pallas(
             q, k_pages, v_pages, block_tables, pos, window=window,
-            logit_cap=logit_cap, scale=scale,
+            logit_cap=logit_cap, scale=scale, n_splits=n_splits,
             interpret=backend == "pallas_interpret")
     if backend == "ref":
         return _ref.paged_decode_attention_ref(
@@ -369,7 +497,7 @@ def paged_decode_attention(
     if backend == "jnp":
         return paged_decode_attention_jnp(
             q, k_pages, v_pages, block_tables, pos, window=window,
-            logit_cap=logit_cap, scale=scale)
+            logit_cap=logit_cap, scale=scale, n_splits=n_splits)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 
@@ -403,12 +531,15 @@ def decode_attention(
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend in ("pallas", "pallas_interpret") and k_pos is not None:
+        _warn_k_pos_fallback("decode_attention")
         backend = "jnp"            # custom slot layout: ring derivation invalid
+    n_splits = _resolve_kv_splits(policy, q.shape[0], k_cache.shape[1],
+                                  q.shape[2], block=policy.decode_k_chunk)
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import decode_attention as da
         return da.decode_attention_pallas(
             q, k_cache, v_cache, pos, window=window, logit_cap=logit_cap,
-            scale=scale, block_k=policy.decode_k_chunk,
+            scale=scale, block_k=policy.decode_k_chunk, n_splits=n_splits,
             interpret=backend == "pallas_interpret")
     if k_pos is None:
         k_pos = ring_positions(pos, k_cache.shape[1])
@@ -419,7 +550,7 @@ def decode_attention(
     if backend == "jnp":
         return decode_attention_jnp(q, k_cache, v_cache, k_pos, pos,
                                     window=window, logit_cap=logit_cap,
-                                    scale=scale)
+                                    scale=scale, n_splits=n_splits)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 
@@ -446,13 +577,16 @@ def verify_attention(
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend in ("pallas", "pallas_interpret") and k_pos is not None:
+        _warn_k_pos_fallback("verify_attention")
         backend = "jnp"            # custom slot layout: ring derivation invalid
+    n_splits = _resolve_kv_splits(policy, q.shape[0], k_cache.shape[1],
+                                  q.shape[2], block=policy.decode_k_chunk)
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import decode_attention as da
         return da.verify_attention_pallas(
             q, k_cache, v_cache, k_new, v_new, pos, window=window,
             logit_cap=logit_cap, scale=scale, block_k=policy.decode_k_chunk,
-            interpret=backend == "pallas_interpret")
+            n_splits=n_splits, interpret=backend == "pallas_interpret")
     if k_pos is None:
         # committed prefix ends at pos - 1: that is the ring reference
         k_pos = ring_positions(pos - 1, k_cache.shape[1])
@@ -463,7 +597,7 @@ def verify_attention(
     if backend == "jnp":
         return verify_attention_jnp(
             q, k_cache, v_cache, k_new, v_new, k_pos, pos, window=window,
-            logit_cap=logit_cap, scale=scale)
+            logit_cap=logit_cap, scale=scale, n_splits=n_splits)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 
@@ -488,12 +622,15 @@ def paged_verify_attention(
     backend = policy.decode
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    ps, nb = k_pages.shape[1], block_tables.shape[1]
+    n_splits = _resolve_kv_splits(policy, q.shape[0], nb * ps, q.shape[2],
+                                  block=ps)
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import decode_attention as da
         return da.paged_verify_attention_pallas(
             q, k_pages, v_pages, k_new, v_new, block_tables, pos,
             window=window, logit_cap=logit_cap, scale=scale,
-            interpret=backend == "pallas_interpret")
+            n_splits=n_splits, interpret=backend == "pallas_interpret")
     if backend == "ref":
         return _ref.paged_verify_attention_ref(
             q, k_pages, v_pages, k_new, v_new, block_tables, pos,
@@ -501,7 +638,8 @@ def paged_verify_attention(
     if backend == "jnp":
         return paged_verify_attention_jnp(
             q, k_pages, v_pages, k_new, v_new, block_tables, pos,
-            window=window, logit_cap=logit_cap, scale=scale)
+            window=window, logit_cap=logit_cap, scale=scale,
+            n_splits=n_splits)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 

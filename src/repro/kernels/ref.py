@@ -92,6 +92,126 @@ def decode_attention_ref(
 
 
 # --------------------------------------------------------------------------
+# two-stage split-KV oracles — stage-1 partial/LSE contract + stage-2 merge
+# --------------------------------------------------------------------------
+def merge_kv_splits_ref(partial: jax.Array, lse: jax.Array) -> jax.Array:
+    """Stage-2 oracle: merge per-split normalized partials by their
+    log-sum-exp weights.  ``partial (..., S, R, Dv)`` + ``lse (..., S, R)``
+    -> ``(..., R, Dv)``.  Splits with ``lse == NEG_INF`` (no valid key)
+    get weight ~0 and drop out."""
+    m = jnp.max(lse, axis=-2, keepdims=True)                  # (..., 1, R)
+    w = jnp.exp(lse - m)                                      # (..., S, R)
+    den = jnp.maximum(jnp.sum(w, axis=-2), 1e-30)             # (..., R)
+    acc = jnp.sum(partial * w[..., None], axis=-3)            # (..., R, Dv)
+    return acc / den[..., None]
+
+
+def _split_partials(s, vf, *, n_units, unit, n_splits):
+    """Shared stage-1 oracle body: masked scores ``s (B, Hkv, G, K)`` over
+    ``n_units`` blocks of ``unit`` keys each, values ``vf (B, K, Hkv, Dv)``.
+    Returns ``(partial (B, Hq, S, 1, Dv), lse (B, Hq, S, 1))`` in the
+    Pallas partials layout (head order = kv-head-major, as ``h // G``)."""
+    B, Hkv, G, _ = s.shape
+    Dv = vf.shape[-1]
+    S = max(1, min(int(n_splits), n_units))
+    upb = -(-n_units // S)                        # units per split (ceil)
+    parts, lses = [], []
+    for si in range(S):
+        lo = si * upb * unit
+        hi = min((si + 1) * upb, n_units) * unit
+        if lo >= hi:                              # ragged tail: empty split
+            parts.append(jnp.zeros((B, Hkv, G, Dv), jnp.float32))
+            lses.append(jnp.full((B, Hkv, G), NEG_INF, jnp.float32))
+            continue
+        ss = s[..., lo:hi]
+        m = jnp.max(ss, axis=-1)                  # (B, Hkv, G)
+        p = jnp.exp(ss - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("bhgk,bkhd->bhgd", p,
+                         vf[:, lo:hi].astype(jnp.float32))
+        # a split whose every key is masked never runs in the Pallas kernel
+        # (l stays 0 there): mirror its zero partial / NEG_INF lse here
+        empty = m <= 0.5 * NEG_INF
+        part = jnp.where(empty[..., None], 0.0,
+                         acc / jnp.maximum(l, 1e-30)[..., None])
+        lse = jnp.where(empty, NEG_INF,
+                        m + jnp.log(jnp.maximum(l, 1e-30)))
+        parts.append(part)
+        lses.append(lse)
+    Hq = Hkv * G
+    partial = jnp.stack(parts, axis=3).reshape(B, Hq, S, 1, Dv)
+    lse = jnp.stack(lses, axis=3).reshape(B, Hq, S, 1)
+    return partial, lse
+
+
+def decode_attention_split_ref(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_cache: jax.Array,            # (B, C, Hkv, D)
+    v_cache: jax.Array,            # (B, C, Hkv, Dv)
+    k_pos: jax.Array,              # (C,) absolute position per slot (<0 invalid)
+    pos: jax.Array,                # () absolute position of q
+    *, n_splits: int, block_k: int = 256,
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage-1 oracle for ``decode_attention_pallas_partials``: same
+    k-block partitioning (including the divisor-of-C ``block_k``
+    adjustment), whole-cache fp32 math per split.  Returns
+    ``(partial (B, Hq, S, 1, Dv), lse (B, Hq, S, 1))``."""
+    B, _, Hq, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    block_k = min(block_k, C)
+    if C % block_k:
+        block_k = next(b for b in range(block_k, 0, -1) if C % b == 0)
+    n_k = C // block_k
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if window > 0:
+        valid &= k_pos > pos - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    return _split_partials(s, v_cache, n_units=n_k, unit=block_k,
+                           n_splits=n_splits)
+
+
+def paged_decode_attention_split_ref(
+    q: jax.Array,                  # (B, 1, Hq, D)
+    k_pages: jax.Array,            # (P, ps, Hkv, D)   shared page pool
+    v_pages: jax.Array,            # (P, ps, Hkv, Dv)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *, n_splits: int,
+    window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage-1 oracle for ``paged_decode_attention_pallas_partials``: pages
+    gathered into logical order, split over pages (the DMA unit)."""
+    B, _, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    Dv = v_pages.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
+    vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, Dv)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kg.astype(jnp.float32)) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    k_pos = jnp.arange(nb * ps)[None, :]
+    posb = jnp.asarray(pos).reshape(B, 1)
+    valid = k_pos <= posb
+    if window > 0:
+        valid &= k_pos > posb - window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    return _split_partials(s, vg, n_units=nb, unit=ps, n_splits=n_splits)
+
+
+# --------------------------------------------------------------------------
 # verify-attention oracle — K+1 speculative queries vs a ring-buffer cache
 # --------------------------------------------------------------------------
 def verify_attention_ref(

@@ -77,12 +77,23 @@ from repro.runtime.sharding import build_rules
 from repro.runtime.speculate import get_drafter
 from repro.runtime.steps import (StepConfig, make_decode_loop,
                                  make_prefill_step,
-                                 make_speculative_decode_loop)
+                                 make_speculative_decode_loop,
+                                 with_decode_policy)
 from repro.models import transformer as tfm
 from repro.serving import (EnergyAwareAdmission, EngineConfig, EngineCrash,
                            ServeEngine, batch_trace, poisson_trace)
 from repro.telemetry.meters import AnalyticDeviceMeter, CpuProcessMeter, DramMeter
 from repro.telemetry.sampler import PowerSampler
+
+
+def _parse_kv_splits(value: str | int) -> str | int:
+    """CLI form of ``KernelPolicy.kv_splits``: 'auto' or a positive int."""
+    if value == "auto":
+        return "auto"
+    n = int(value)
+    if n < 1:
+        raise ValueError(f"--kv-splits must be 'auto' or >= 1, got {value!r}")
+    return n
 
 
 def decode_workload(cfg, requests: int,
@@ -296,10 +307,13 @@ def run_batch(args, cfg, step_cfg, rules, params, frost: FrostPlane | None) -> i
         acc = n_spec_accepted / (n_spec_steps * args.spec_k)
         spec_line = (f", spec K={args.spec_k} acceptance {acc:.0%} "
                      f"({1 + n_spec_accepted / n_spec_steps:.2f} tok/sweep)")
+    pol = step_cfg.kernel_policy
     print(f"[serve] prefill {args.requests}x{plen} in "
           f"{t_prefill*1e3:.0f} ms; decode {n_decoded} tokens in "
           f"{t_decode*1e3:.0f} ms ({tok_per_s:.0f} tok/s measured, "
-          f"fused chunks of {chunk}, one executable{spec_line}{j_line})")
+          f"fused chunks of {chunk}, kv_splits {pol.kv_splits}, "
+          f"decode_k_chunk {pol.decode_k_chunk}, "
+          f"one executable{spec_line}{j_line})")
     print(f"[serve] sample continuation: {toks_out[0].ravel()[:16].tolist()}")
     return 0
 
@@ -318,7 +332,9 @@ def run_engine(args, cfg, step_cfg, rules, params,
                         prefix_cache=not args.no_prefix_cache,
                         prefill_chunk=max(1, args.prefill_chunk),
                         preempt=not args.no_preempt,
-                        max_skip=max(0, args.max_skip))
+                        max_skip=max(0, args.max_skip),
+                        kv_splits=_parse_kv_splits(args.kv_splits),
+                        decode_k_chunk=max(1, args.decode_k_chunk))
     # effective tokens per slot-step: 1.0 plain; under speculation the
     # on_chunk hook keeps a running estimate (accepted + bonus per sweep) so
     # the admission policy prices occupancy at the throughput actually
@@ -423,7 +439,9 @@ def run_engine(args, cfg, step_cfg, rules, params,
     waits = [r.wait_steps for r in rep.results if r.admit_step >= 0]
     print(f"[serve] engine: {len(rep.results)} requests over {rep.n_chunks} "
           f"chunks of {ecfg.decode_chunk} ({args.n_slots} slots, "
-          f"page_size {args.page_size}, occupancy {rep.occupancy:.0%})")
+          f"page_size {args.page_size}, kv_splits {ecfg.kv_splits}, "
+          f"decode_k_chunk {ecfg.decode_k_chunk}, "
+          f"occupancy {rep.occupancy:.0%})")
     j_name = "J/accepted-token" if ecfg.spec_k else \
         "J/token (occupied slots only)"
     j_line = f", {rep.j_per_token:.3g} {j_name}" if frost is not None else ""
@@ -478,6 +496,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--decode-chunk", type=int, default=8,
                     help="tokens per fused lax.scan decode chunk")
+    ap.add_argument("--kv-splits", type=str, default="auto",
+                    help="two-stage split-KV decode sweep: 'auto' picks by "
+                         "the ops.choose_kv_splits occupancy model, an int "
+                         "forces that split count (1 = single-stage sweep)")
+    ap.add_argument("--decode-k-chunk", type=int, default=256,
+                    help="split-K block (keys per grid step) for the ring "
+                         "decode/verify kernels")
     ap.add_argument("--traffic", choices=("batch", "poisson"), default="batch",
                     help="batch: static fixed-batch baseline; poisson: "
                          "continuous-batching engine under Poisson arrivals")
@@ -541,7 +566,9 @@ def main():
 
     spec = get_arch(args.arch)
     cfg = spec.smoke if args.smoke else spec.config
-    step_cfg = StepConfig(remat="none")
+    step_cfg = with_decode_policy(StepConfig(remat="none"),
+                                  kv_splits=_parse_kv_splits(args.kv_splits),
+                                  decode_k_chunk=max(1, args.decode_k_chunk))
     mesh = make_host_mesh()
     rules = build_rules(cfg, mesh) if mesh.devices.size > 1 else None
     params, _ = tfm.init_lm(jax.random.PRNGKey(args.seed), cfg)

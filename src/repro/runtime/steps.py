@@ -38,6 +38,24 @@ class StepConfig:
     moe_strategy: str = "gather"       # gather | a2a (see models.layers)
 
 
+def with_decode_policy(step_cfg: StepConfig, *,
+                       kv_splits: str | int | None = None,
+                       decode_k_chunk: int | None = None) -> StepConfig:
+    """Return ``step_cfg`` with decode-sweep knobs swapped on its
+    ``KernelPolicy`` (both dataclasses are frozen, hence the replace
+    dance).  ``None`` leaves a knob at its current value — callers thread
+    CLI/engine config through without caring which knobs were set."""
+    repl: dict[str, Any] = {}
+    if kv_splits is not None:
+        repl["kv_splits"] = kv_splits
+    if decode_k_chunk is not None:
+        repl["decode_k_chunk"] = int(decode_k_chunk)
+    if not repl:
+        return step_cfg
+    policy = dataclasses.replace(step_cfg.kernel_policy, **repl)
+    return dataclasses.replace(step_cfg, kernel_policy=policy)
+
+
 def make_run_ctx(cfg: ModelConfig, rules: ShardingRules | None,
                  step_cfg: StepConfig) -> RunCtx:
     if rules is None:

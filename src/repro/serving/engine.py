@@ -53,7 +53,8 @@ from repro.runtime.chaos import FaultInjector, corrupt_paged_kv
 from repro.runtime.speculate import get_drafter
 from repro.runtime.steps import (StepConfig, make_paged_decode_loop,
                                  make_paged_speculative_decode_loop,
-                                 make_prefill_suffix_step, make_run_ctx)
+                                 make_prefill_suffix_step, make_run_ctx,
+                                 with_decode_policy)
 from repro.serving.paged_kv import PagedKVCache
 from repro.serving.request import Request, RequestResult
 from repro.serving.scheduler import RequestQueue, Scheduler
@@ -103,6 +104,11 @@ class EngineConfig:
     # this many ready requests behind it (admitted order stays FIFO
     # otherwise)
     max_skip: int = 2
+    # decode-sweep operating point: two-stage split-KV count ("auto" = the
+    # ops.choose_kv_splits occupancy heuristic; 1 = single-stage sweep) and
+    # the split-K block for the ring kernels / page-sized DMA elsewhere
+    kv_splits: str | int = "auto"
+    decode_k_chunk: int = 256
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,7 +246,13 @@ class ServeEngine:
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.params = params
-        self.step_cfg = step_cfg or StepConfig(remat="none")
+        # engine config owns the decode-sweep operating point: fold it onto
+        # the kernel policy so every compiled loop (decode, verify, suffix
+        # prefill) sees the same kv_splits / block choice
+        self.step_cfg = with_decode_policy(
+            step_cfg or StepConfig(remat="none"),
+            kv_splits=engine_cfg.kv_splits,
+            decode_k_chunk=engine_cfg.decode_k_chunk)
         self.rules = rules
         self.on_chunk = on_chunk
         # on_prefill(n_computed, n_saved) -> J for one join's prefill (or

@@ -67,6 +67,55 @@ def test_window_equals_truncated_context(window, seed):
     np.testing.assert_allclose(o_sw[:, -1:], o_trunc, atol=1e-5, rtol=1e-5)
 
 
+@_settings
+@given(st.integers(2, 8), st.integers(0, 1000))
+def test_split_merge_any_order_and_grouping_exact(S, seed):
+    """Two-stage split-KV soundness: LSE-merging per-split partials is
+    permutation- AND grouping-invariant — any merge order or tree shape
+    reproduces the full softmax output (so greedy argmax through a
+    projection head can never flip with the split schedule), including in
+    the presence of an empty split (zero partial, NEG_INF lse)."""
+    K, Dv = 40, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    s = 3.0 * jax.random.normal(ks[0], (K,))
+    v = jax.random.normal(ks[1], (K, Dv))
+    head = jax.random.normal(ks[2], (Dv, 32))
+    oracle = jax.nn.softmax(s) @ v
+
+    # stage 1: ragged contiguous slices + one deliberately empty split
+    rng = np.random.default_rng(seed)
+    bounds = [0] + sorted(set(rng.integers(1, K, size=S - 1).tolist())) + [K]
+    splits = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        m = jnp.max(s[lo:hi])
+        w = jnp.exp(s[lo:hi] - m)
+        l = jnp.sum(w)
+        splits.append(((w @ v[lo:hi]) / l, m + jnp.log(l)))
+    splits.append((jnp.zeros(Dv), jnp.asarray(ref.NEG_INF)))
+    order = rng.permutation(len(splits))
+
+    def _flat(items):
+        partial = jnp.stack([p for p, _ in items])[:, None, :]  # (n, 1, Dv)
+        lse = jnp.stack([l for _, l in items])[:, None]         # (n, 1)
+        m = jnp.max(lse)
+        return (ref.merge_kv_splits_ref(partial, lse)[0],
+                m + jnp.log(jnp.sum(jnp.exp(lse - m))))
+
+    permuted = [splits[i] for i in order]
+    flat, _ = _flat(permuted)                      # one n-way merge
+    tree = permuted[0]
+    for item in permuted[1:]:                      # left-deep pairwise merges
+        tree = _flat([tree, item])
+    cut = int(rng.integers(1, len(permuted)))      # two-group merge
+    grouped, _ = _flat([_flat(permuted[:cut]), _flat(permuted[cut:])])
+
+    want = jnp.argmax(oracle @ head)
+    for got in (flat, tree[0], grouped):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                                   atol=1e-5, rtol=1e-5)
+        assert int(jnp.argmax(got @ head)) == int(want)
+
+
 # --------------------------------------------------------------------------
 # SSD invariants
 # --------------------------------------------------------------------------

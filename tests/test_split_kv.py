@@ -1,0 +1,288 @@
+"""Two-stage split-KV contract tests (interpret-mode parity sweeps).
+
+Every case runs the stage-1 partial sweep + stage-2 LSE merge against BOTH
+the single-split kernel (``n_splits=1``, today's bit-exact path) and the
+whole-cache ``ref.py`` oracle, across GQA/MQA x ring wrap-around x partial
+occupancy x ragged paged ``pos`` x non-divisible split counts.  Greedy
+argmax through a projection head must be identical — that is what keeps
+the PR 4/5 exactness canaries green when the engine turns splits on.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import decode_attention as da
+from repro.kernels import ops, ref
+
+C = 80                 # ring capacity: 5 blocks of 16
+BLOCK_K = 16
+PS, NB = 16, 5         # paged: 5 pages of 16
+D = DV = 16
+Q = 4                  # verify block (K+1)
+SPLITS = [1, 2, 5]     # 2 does not divide 5 blocks; 5 = one block per split
+TOL = 5e-6
+
+_HEADS = [(4, 2), (4, 1)]          # (Hq, Hkv): GQA and MQA
+_POS = {"wrap": C + 15, "partial": 10}   # wrapped ring / mostly-empty cache
+
+
+def _rng_arrays(B, Hq, Hkv, *, seed=0):
+    rng = np.random.default_rng(seed)
+    r = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    return {
+        "q1": r(B, 1, Hq, D), "qv": r(B, Q, Hq, D),
+        "k": r(B, C, Hkv, D), "v": r(B, C, Hkv, DV),
+        "kn": r(B, Q, Hkv, D), "vn": r(B, Q, Hkv, DV),
+        "kp": r(16, PS, Hkv, D), "vp": r(16, PS, Hkv, DV),
+        "bt": jnp.asarray(rng.permutation(16)[:B * NB].reshape(B, NB),
+                          jnp.int32),
+        "head": r(Hq * DV, 64),
+    }
+
+
+def _argmax(out, head):
+    return jnp.argmax(out.reshape(out.shape[0], -1, out.shape[2] * out.shape[3])
+                      .sum(axis=1) @ head, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# ring decode
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("Hq,Hkv", _HEADS)
+@pytest.mark.parametrize("pos_kind", ["wrap", "partial"])
+@pytest.mark.parametrize("n_splits", SPLITS)
+def test_ring_decode_two_stage_parity(Hq, Hkv, pos_kind, n_splits):
+    a = _rng_arrays(2, Hq, Hkv, seed=Hq * 10 + n_splits)
+    pos = jnp.int32(_POS[pos_kind])
+    k_pos = ops.ring_positions(pos, C)
+    oracle = ref.decode_attention_ref(a["q1"], a["k"], a["v"], k_pos, pos)
+    single = da.decode_attention_pallas(a["q1"], a["k"], a["v"], pos,
+                                        block_k=BLOCK_K, interpret=True)
+    two = da.decode_attention_pallas(a["q1"], a["k"], a["v"], pos,
+                                     block_k=BLOCK_K, n_splits=n_splits,
+                                     interpret=True)
+    assert float(jnp.max(jnp.abs(two - oracle))) < TOL
+    assert float(jnp.max(jnp.abs(two - single))) < TOL
+    assert bool(jnp.all(_argmax(two, a["head"]) == _argmax(oracle, a["head"])))
+    if n_splits == 1:              # splits=1 must be bit-for-bit the old path
+        assert bool(jnp.all(two == single))
+
+
+@pytest.mark.parametrize("n_splits", [2, 5])
+def test_ring_decode_stage1_matches_split_ref(n_splits):
+    """Stage-1 contract: Pallas partials/LSE == the split oracle, including
+    empty splits (partial-occupancy cache leaves whole splits without a
+    single valid key -> zero partial, NEG_INF lse)."""
+    a = _rng_arrays(2, 4, 2, seed=3)
+    for pos_v in _POS.values():
+        pos = jnp.int32(pos_v)
+        k_pos = ops.ring_positions(pos, C)
+        pr, lr = ref.decode_attention_split_ref(
+            a["q1"], a["k"], a["v"], k_pos, pos, n_splits=n_splits,
+            block_k=BLOCK_K)
+        pp, lp = da.decode_attention_pallas_partials(
+            a["q1"], a["k"], a["v"], pos, n_splits=n_splits,
+            block_k=BLOCK_K, interpret=True)
+        assert pr.shape == pp.shape and lr.shape == lp.shape
+        assert float(jnp.max(jnp.abs(pr - pp))) < TOL
+        assert float(jnp.max(jnp.abs(lr - lp))) < 1e-5
+        merged = ref.merge_kv_splits_ref(pr, lr)
+        oracle = ref.decode_attention_ref(a["q1"], a["k"], a["v"], k_pos, pos)
+        assert float(jnp.max(jnp.abs(
+            merged[:, :, 0] - oracle[:, 0]))) < TOL
+
+
+def test_ring_decode_window_and_softcap():
+    a = _rng_arrays(2, 4, 2, seed=5)
+    pos = jnp.int32(_POS["wrap"])
+    k_pos = ops.ring_positions(pos, C)
+    for kw in ({"window": 24}, {"logit_cap": 30.0}):
+        oracle = ref.decode_attention_ref(a["q1"], a["k"], a["v"], k_pos,
+                                          pos, **kw)
+        two = da.decode_attention_pallas(a["q1"], a["k"], a["v"], pos,
+                                         block_k=BLOCK_K, n_splits=2,
+                                         interpret=True, **kw)
+        assert float(jnp.max(jnp.abs(two - oracle))) < TOL
+
+
+# --------------------------------------------------------------------------
+# ring verify (candidates fold into the last split)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("Hq,Hkv", _HEADS)
+@pytest.mark.parametrize("pos_kind", ["wrap", "partial"])
+@pytest.mark.parametrize("n_splits", SPLITS)
+def test_ring_verify_two_stage_parity(Hq, Hkv, pos_kind, n_splits):
+    a = _rng_arrays(2, Hq, Hkv, seed=Hq * 20 + n_splits)
+    pos = jnp.int32(_POS[pos_kind])
+    k_pos = ops.ring_positions(pos - 1, C)
+    oracle = ref.verify_attention_ref(a["qv"], a["k"], a["v"], a["kn"],
+                                      a["vn"], k_pos, pos)
+    single = da.verify_attention_pallas(a["qv"], a["k"], a["v"], a["kn"],
+                                        a["vn"], pos, block_k=BLOCK_K,
+                                        interpret=True)
+    two = da.verify_attention_pallas(a["qv"], a["k"], a["v"], a["kn"],
+                                     a["vn"], pos, block_k=BLOCK_K,
+                                     n_splits=n_splits, interpret=True)
+    assert float(jnp.max(jnp.abs(two - oracle))) < TOL
+    assert float(jnp.max(jnp.abs(two - single))) < TOL
+    assert bool(jnp.all(_argmax(two, a["head"]) == _argmax(oracle, a["head"])))
+    if n_splits == 1:
+        assert bool(jnp.all(two == single))
+
+
+# --------------------------------------------------------------------------
+# paged decode / paged verify (ragged per-request pos)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("Hq,Hkv", _HEADS)
+@pytest.mark.parametrize("n_splits", SPLITS)
+def test_paged_decode_two_stage_parity(Hq, Hkv, n_splits):
+    a = _rng_arrays(3, Hq, Hkv, seed=Hq * 30 + n_splits)
+    pos = jnp.asarray([3, 37, 79], jnp.int32)      # ragged occupancy
+    oracle = ref.paged_decode_attention_ref(a["q1"][:3], a["kp"], a["vp"],
+                                            a["bt"], pos)
+    single = da.paged_decode_attention_pallas(a["q1"][:3], a["kp"], a["vp"],
+                                              a["bt"], pos, interpret=True)
+    two = da.paged_decode_attention_pallas(a["q1"][:3], a["kp"], a["vp"],
+                                           a["bt"], pos, n_splits=n_splits,
+                                           interpret=True)
+    assert float(jnp.max(jnp.abs(two - oracle))) < TOL
+    assert float(jnp.max(jnp.abs(two - single))) < TOL
+    assert bool(jnp.all(_argmax(two, a["head"]) == _argmax(oracle, a["head"])))
+    if n_splits == 1:
+        assert bool(jnp.all(two == single))
+
+
+@pytest.mark.parametrize("n_splits", [2, 5])
+def test_paged_decode_stage1_matches_split_ref(n_splits):
+    a = _rng_arrays(3, 4, 2, seed=7)
+    pos = jnp.asarray([3, 37, 79], jnp.int32)
+    pr, lr = ref.paged_decode_attention_split_ref(
+        a["q1"][:3], a["kp"], a["vp"], a["bt"], pos, n_splits=n_splits)
+    pp, lp = da.paged_decode_attention_pallas_partials(
+        a["q1"][:3], a["kp"], a["vp"], a["bt"], pos, n_splits=n_splits,
+        interpret=True)
+    assert pr.shape == pp.shape and lr.shape == lp.shape
+    assert float(jnp.max(jnp.abs(pr - pp))) < TOL
+    assert float(jnp.max(jnp.abs(lr - lp))) < 1e-5
+
+
+@pytest.mark.parametrize("Hq,Hkv", _HEADS)
+@pytest.mark.parametrize("n_splits", SPLITS)
+def test_paged_verify_two_stage_parity(Hq, Hkv, n_splits):
+    a = _rng_arrays(3, Hq, Hkv, seed=Hq * 40 + n_splits)
+    pos = jnp.asarray([5, 41, 76], jnp.int32)
+    oracle = ref.paged_verify_attention_ref(a["qv"][:3], a["kp"], a["vp"],
+                                            a["kn"][:3], a["vn"][:3],
+                                            a["bt"], pos)
+    single = da.paged_verify_attention_pallas(a["qv"][:3], a["kp"], a["vp"],
+                                              a["kn"][:3], a["vn"][:3],
+                                              a["bt"], pos, interpret=True)
+    two = da.paged_verify_attention_pallas(a["qv"][:3], a["kp"], a["vp"],
+                                           a["kn"][:3], a["vn"][:3],
+                                           a["bt"], pos, n_splits=n_splits,
+                                           interpret=True)
+    assert float(jnp.max(jnp.abs(two - oracle))) < TOL
+    assert float(jnp.max(jnp.abs(two - single))) < TOL
+    assert bool(jnp.all(_argmax(two, a["head"]) == _argmax(oracle, a["head"])))
+    if n_splits == 1:
+        assert bool(jnp.all(two == single))
+
+
+# --------------------------------------------------------------------------
+# jnp backend split path + policy dispatch + heuristic + fallback warning
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n_splits", [2, 3, 5])
+def test_jnp_split_paths_match_single(n_splits):
+    a = _rng_arrays(2, 4, 2, seed=11)
+    pos = jnp.int32(_POS["wrap"])
+    k_pos = ops.ring_positions(pos, C)
+    pairs = [
+        (ops.decode_attention_jnp(a["q1"], a["k"], a["v"], k_pos, pos),
+         ops.decode_attention_jnp(a["q1"], a["k"], a["v"], k_pos, pos,
+                                  n_splits=n_splits)),
+        (ops.verify_attention_jnp(a["qv"], a["k"], a["v"], a["kn"], a["vn"],
+                                  ops.ring_positions(pos - 1, C), pos),
+         ops.verify_attention_jnp(a["qv"], a["k"], a["v"], a["kn"], a["vn"],
+                                  ops.ring_positions(pos - 1, C), pos,
+                                  n_splits=n_splits)),
+    ]
+    ppos = jnp.asarray([3, 79], jnp.int32)
+    bt2 = a["bt"][:2]
+    pairs += [
+        (ops.paged_decode_attention_jnp(a["q1"], a["kp"], a["vp"], bt2, ppos),
+         ops.paged_decode_attention_jnp(a["q1"], a["kp"], a["vp"], bt2, ppos,
+                                        n_splits=n_splits)),
+        (ops.paged_verify_attention_jnp(a["qv"], a["kp"], a["vp"], a["kn"],
+                                        a["vn"], bt2, ppos),
+         ops.paged_verify_attention_jnp(a["qv"], a["kp"], a["vp"], a["kn"],
+                                        a["vn"], bt2, ppos,
+                                        n_splits=n_splits)),
+    ]
+    for one, many in pairs:
+        assert float(jnp.max(jnp.abs(one - many))) < TOL
+
+
+def test_policy_kv_splits_dispatch():
+    """``kv_splits`` on the policy reaches every backend and changes no
+    output; ``auto`` equals an explicit 1 on an oversubscribed host."""
+    a = _rng_arrays(2, 4, 2, seed=13)
+    pos = jnp.int32(_POS["wrap"])
+    outs = []
+    for kv_splits in ("auto", 1, 4):
+        for decode in ("jnp", "pallas_interpret"):
+            pol = ops.KernelPolicy(decode=decode, kv_splits=kv_splits,
+                                   decode_k_chunk=BLOCK_K)
+            outs.append(ops.decode_attention(a["q1"], a["k"], a["v"], pos,
+                                             policy=pol))
+    base = outs[0]
+    for o in outs[1:]:
+        assert float(jnp.max(jnp.abs(o - base))) < TOL
+
+
+def test_choose_kv_splits_occupancy_model():
+    # oversubscribed grid: never split (1 = today's behaviour, exactly)
+    assert ops.choose_kv_splits(8, 32768, 4, 4) == 1
+    # single block: nothing to split
+    assert ops.choose_kv_splits(1, 256, 4, 64) == 1
+    # deep cache, low batch, idle cores: split to ~2x coverage
+    assert ops.choose_kv_splits(1, 32768, 4, 8) == 4
+    # never more splits than blocks
+    assert ops.choose_kv_splits(1, 512, 1, 64, block=256) <= 2
+    # cap at max_splits
+    assert ops.choose_kv_splits(1, 10 ** 6, 1, 512) == 16
+
+
+def test_k_pos_fallback_warns_once():
+    a = _rng_arrays(1, 4, 2, seed=17)
+    pos = jnp.int32(30)
+    k_pos = ops.ring_positions(pos, C)
+    pol = ops.KernelPolicy(decode="pallas_interpret", decode_k_chunk=BLOCK_K)
+    ops._KPOS_FALLBACK_WARNED.discard("decode_attention")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ops.decode_attention(a["q1"], a["k"], a["v"], pos, k_pos=k_pos,
+                             policy=pol)
+        ops.decode_attention(a["q1"], a["k"], a["v"], pos, k_pos=k_pos,
+                             policy=pol)
+    hits = [w for w in rec if "Pallas decode" in str(w.message)]
+    assert len(hits) == 1 and issubclass(hits[0].category, RuntimeWarning)
+
+
+# --------------------------------------------------------------------------
+# merge kernel in isolation
+# --------------------------------------------------------------------------
+def test_merge_kernel_matches_ref():
+    rng = np.random.default_rng(23)
+    partial = jnp.asarray(rng.standard_normal((2, 4, 3, Q, DV)), jnp.float32)
+    lse = jnp.asarray(rng.standard_normal((2, 4, 3, Q)), jnp.float32)
+    # one split per row empty, as a ragged stage-1 would leave it
+    lse = lse.at[:, :, 2, :].set(ref.NEG_INF)
+    partial = partial.at[:, :, 2].set(0.0)
+    got = da.merge_kv_splits_pallas(partial, lse, out_dtype=jnp.float32,
+                                    interpret=True)
+    want = ref.merge_kv_splits_ref(partial, lse)
+    assert got.shape == (2, 4, Q, DV)
+    assert float(jnp.max(jnp.abs(got - want))) < TOL
