@@ -6,7 +6,10 @@ Prints ``name,value,derived`` CSV lines and saves JSON artifacts.  The
 serving-path jobs (decode / serve / spec) additionally write compact
 machine-readable ``BENCH_<name>.json`` trajectory files at the repo root
 (tok/s, J/token, acceptance) so the perf trajectory is tracked across PRs
-— diff them in review like any other artifact.
+— diff them in review like any other artifact, or print the full
+git-SHA-stamped history table with::
+
+    PYTHONPATH=src python -m benchmarks.run trajectory [bench ...]
 """
 from __future__ import annotations
 
@@ -66,6 +69,17 @@ TRAJECTORY = {
         "shallow_auto_ratio": r["shallow_auto_ratio"],
         "max_exactness_err": r["max_exactness_err"],
     },
+    "kvtier": lambda r: {
+        "tok_per_s": r["tok_per_s"],
+        "logical_pool_ratio": r["logical_pool_ratio"],
+        "effective_hit_rate": r["effective_hit_rate"],
+        "n_preemptions": r["n_preemptions"],
+        "n_demotions": r["n_demotions"],
+        "n_promotions": r["n_promotions"],
+        "transfer_j": r["transfer_j"],
+        "j_per_token_ratio_vs_evict": r["j_per_token_ratio"],
+        "int8_oracle_max_err": r["int8_oracle_max_err"],
+    },
 }
 
 # one human-readable headline CSV line per trajectory job (printed for CI
@@ -96,6 +110,12 @@ HEADLINE = {
                          f"(S={r['deep_best_splits']}); shallow auto ratio "
                          f"{r['shallow_auto_ratio']:.2f}x, exactness "
                          f"{r['max_exactness_err']:.1e}"),
+    "kvtier": lambda r: (f"kvtier.j_per_token_ratio,"
+                         f"{r['j_per_token_ratio']:.2f}x,"
+                         f"{r['logical_pool_ratio']:.1f}x logical pool "
+                         f"(int8 + host tier) vs evict-and-recompute; "
+                         f"{r['n_demotions']} paged out, "
+                         f"{r['n_preemptions']} preemptions"),
 }
 
 
@@ -125,7 +145,81 @@ def _write_trajectory(name: str, res: dict, quick: bool) -> None:
     print(f"{name}.trajectory,{path.name},machine-readable perf artifact")
 
 
+def _bench_versions(path: pathlib.Path) -> list[dict]:
+    """Every committed version of one BENCH_*.json, oldest first, plus the
+    working-tree copy when it differs from HEAD's.  Each version carries
+    the artifact's own ``git_sha`` stamp (the commit it was *generated*
+    at), which is what the table keys on."""
+    versions: list[dict] = []
+    seen: set[str] = set()
+    try:
+        commits = subprocess.check_output(
+            ["git", "log", "--reverse", "--format=%H", "--", path.name],
+            cwd=ROOT, stderr=subprocess.DEVNULL).decode().split()
+    except Exception:
+        commits = []
+    for commit in commits:
+        try:
+            blob = subprocess.check_output(
+                ["git", "show", f"{commit}:{path.name}"], cwd=ROOT,
+                stderr=subprocess.DEVNULL)
+            rec = json.loads(blob)
+        except Exception:
+            continue
+        sha = rec.get("git_sha", commit)
+        if sha not in seen:
+            seen.add(sha)
+            versions.append(rec)
+    try:
+        rec = json.loads(path.read_text())
+        if rec.get("git_sha") not in seen:
+            versions.append(rec)
+    except Exception:
+        pass
+    return versions
+
+
+def trajectory_main(argv) -> int:
+    """``benchmarks.run trajectory [bench ...]`` — print the perf history
+    recorded by the BENCH_*.json artifacts as one table per bench: a row
+    per generating commit (git-SHA-stamped), a column per metric.  The
+    artifacts are committed with the code, so the table is exactly the
+    cross-PR diff review sees, assembled from git history."""
+    names = set(argv)
+    files = sorted(ROOT.glob("BENCH_*.json"))
+    if names:
+        files = [f for f in files if f.stem[len("BENCH_"):] in names]
+    if not files:
+        print("no BENCH_*.json artifacts"
+              + (f" matching {sorted(names)}" if names else "")
+              + " — run the serving-path benchmarks first")
+        return 1
+    for path in files:
+        bench = path.stem[len("BENCH_"):]
+        versions = _bench_versions(path)
+        if not versions:
+            continue
+        metrics = [k for k in versions[-1] if k not in ("bench", "git_sha")]
+        print(f"# ---- {bench} trajectory ({len(versions)} recorded runs) "
+              "----")
+        head = "  ".join(f"{m:>24}" for m in metrics)
+        print(f"{'git_sha':>10}  {head}")
+        for rec in versions:
+            row = "  ".join(
+                f"{rec[m]:>24.6g}" if isinstance(rec.get(m), (int, float))
+                else f"{str(rec.get(m, '-')):>24}" for m in metrics)
+            print(f"{str(rec.get('git_sha', '?'))[:10]:>10}  {row}")
+    return 0
+
+
 def main(argv=None) -> int:
+    if argv is None:
+        import sys
+        argv = sys.argv[1:]
+    if argv and argv[0] == "trajectory":
+        # subcommand, dispatched before the flat argparse: reads the
+        # committed BENCH_*.json history instead of running anything
+        return trajectory_main(argv[1:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced model set / steps (CI mode)")
@@ -136,7 +230,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (chaos_serve, ctrl_overhead, decode_kernel,
                             decode_throughput, fig2_energy, fig3_overhead,
-                            fig4_capping, fig5_edxp, fig6_tradeoff,
+                            fig4_capping, fig5_edxp, fig6_tradeoff, kv_tier,
                             prefix_cache, roofline, serve_engine, spec_decode)
     ART.mkdir(parents=True, exist_ok=True)
     jobs = {
@@ -150,6 +244,7 @@ def main(argv=None) -> int:
         "serve": lambda: serve_engine.main(quick=args.quick),
         "spec": lambda: spec_decode.main(quick=args.quick),
         "prefix": lambda: prefix_cache.main(quick=args.quick),
+        "kvtier": lambda: kv_tier.main(quick=args.quick),
         "chaos": lambda: chaos_serve.main(quick=args.quick),
         "kernel": lambda: decode_kernel.main(quick=args.quick),
         "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],

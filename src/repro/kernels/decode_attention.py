@@ -91,6 +91,20 @@ def _online_softmax_update(q, k, v, valid, m_ref, l_ref, acc_ref, *,
     m_ref[...] = m_new
 
 
+def _load_kv(ref, scale_ref):
+    """Fused-dequant block load — the ONLY place quantization touches the
+    sweep's critical path.  The k/v block is cast to fp32 inside VMEM
+    (block-local, as always); for int8 pools the per-row fp32 scale block
+    ``(bk, 1)`` rides the same index_map as its pool and multiplies in,
+    broadcasting over head_dim.  ``scale_ref is None`` is a Python-level
+    branch resolved at trace time: the unquantized kernels' traces are
+    byte-for-byte what they were before int8 support existed."""
+    blk = ref[0, 0].astype(jnp.float32)
+    if scale_ref is not None:
+        blk = blk * scale_ref[0, 0]
+    return blk
+
+
 def _fold_candidates(q_ref, kn_ref, vn_ref, m_ref, l_ref, acc_ref, *,
                      scale: float, window: int, logit_cap: float, q_len: int):
     """Fold the in-flight candidate block into the online-softmax scratch
@@ -190,9 +204,15 @@ def _split_blocks(n_blocks: int, n_splits: int) -> tuple[int, int]:
     return s, -(-n_blocks // s)
 
 
-def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                   *, scale: float, window: int, logit_cap: float,
-                   block_k: int, n_k: int, cache_len: int):
+def _decode_kernel(pos_ref, *refs, scale: float, window: int,
+                   logit_cap: float, block_k: int, n_k: int, cache_len: int,
+                   quantized: bool = False):
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -216,8 +236,8 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     def _compute():
         _online_softmax_update(
             q_ref[0, 0].astype(jnp.float32),                 # (1, D)
-            k_ref[0, 0].astype(jnp.float32),                 # (bk, D)
-            v_ref[0, 0].astype(jnp.float32),                 # (bk, Dv)
+            _load_kv(k_ref, ks_ref),                         # (bk, D)
+            _load_kv(v_ref, vs_ref),                         # (bk, Dv)
             valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when(ik == n_k - 1)
@@ -226,10 +246,10 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def _decode_partials_kernel(pos_ref, q_ref, k_ref, v_ref, part_ref, lse_ref,
-                            m_ref, l_ref, acc_ref, *, scale: float,
+def _decode_partials_kernel(pos_ref, *refs, scale: float,
                             window: int, logit_cap: float, block_k: int,
-                            n_k: int, kpb: int, cache_len: int):
+                            n_k: int, kpb: int, cache_len: int,
+                            quantized: bool = False):
     """Stage 1 of the two-stage ring decode sweep: grid
     ``(B, Hq, n_splits, kpb)``.  Split ``s`` owns global k-blocks
     ``[s*kpb, (s+1)*kpb)``; its scratch is private (init at local block 0,
@@ -237,6 +257,13 @@ def _decode_partials_kernel(pos_ref, q_ref, k_ref, v_ref, part_ref, lse_ref,
     cross-split dependency.  Blocks past ``n_k`` (non-divisible split
     counts — the index_map clamps their DMA to the last real block) mask
     off wholly."""
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref,
+         part_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref,
+         part_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     isp, ik = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ik == 0)
@@ -257,8 +284,8 @@ def _decode_partials_kernel(pos_ref, q_ref, k_ref, v_ref, part_ref, lse_ref,
     def _compute():
         _online_softmax_update(
             q_ref[0, 0].astype(jnp.float32),
-            k_ref[0, 0].astype(jnp.float32),
-            v_ref[0, 0].astype(jnp.float32),
+            _load_kv(k_ref, ks_ref),
+            _load_kv(v_ref, vs_ref),
             valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when(ik == kpb - 1)
@@ -274,12 +301,17 @@ def decode_attention_pallas_partials(
     *,
     n_splits: int, window: int = 0, logit_cap: float = 0.0,
     scale: float | None = None, block_k: int = 256, interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32; int8 caches only
+    v_scale: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stage 1 only: per-split partial sweep over the ring cache.
 
     Returns ``(partial (B, Hq, S, 1, Dv) fp32, lse (B, Hq, S, 1) fp32)``
     — the two-stage contract validated against
     ``ref.decode_attention_split_ref``."""
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), \
+        "k_scale and v_scale must be given together"
     B, _, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
@@ -299,22 +331,31 @@ def decode_attention_pallas_partials(
 
     kernel = functools.partial(
         _decode_partials_kernel, scale=scale, window=window,
-        logit_cap=logit_cap, block_k=block_k, n_k=n_k, kpb=kpb, cache_len=C)
+        logit_cap=logit_cap, block_k=block_k, n_k=n_k, kpb=kpb, cache_len=C,
+        quantized=quantized)
 
     def kv_index(b, h, s, ik, pos_ref, G=G, kpb=kpb, n_k=n_k):
         # clamp out-of-range blocks of the ragged last split to a real
         # block: its DMA lands somewhere valid and the kernel masks it off
         return (b, h // G, jnp.minimum(s * kpb + ik, n_k - 1), 0)
 
+    in_specs = [pl.BlockSpec((1, 1, 1, D),
+                             lambda b, h, s, ik, pos_ref: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, D), kv_index)]
+    inputs = [qt, kt]
+    if quantized:              # scale blocks ride the k/v index_map
+        in_specs.append(pl.BlockSpec((1, 1, block_k, 1), kv_index))
+        inputs.append(k_scale.transpose(0, 2, 1, 3))     # (B, Hkv, C, 1)
+    in_specs.append(pl.BlockSpec((1, 1, block_k, Dv), kv_index))
+    inputs.append(vt)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, block_k, 1), kv_index))
+        inputs.append(v_scale.transpose(0, 2, 1, 3))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hq, n_splits, kpb),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, D),
-                         lambda b, h, s, ik, pos_ref: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, D), kv_index),
-            pl.BlockSpec((1, 1, block_k, Dv), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, 1, Dv),
                          lambda b, h, s, ik, pos_ref: (b, h, s, 0, 0)),
@@ -333,7 +374,7 @@ def decode_attention_pallas_partials(
         out_shape=[jax.ShapeDtypeStruct((B, Hq, n_splits, 1, Dv), jnp.float32),
                    jax.ShapeDtypeStruct((B, Hq, n_splits, 1), jnp.float32)],
         interpret=interpret,
-    )(pos_arr, qt, kt, vt)
+    )(pos_arr, *inputs)
 
 
 def decode_attention_pallas(
@@ -344,20 +385,27 @@ def decode_attention_pallas(
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     block_k: int = 256, n_splits: int = 1, interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32; int8 caches only
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Split-K decode attention against the canonical ring-buffer cache
     (slot = p % C).  Assumes that invariant — callers with an arbitrary
     ``k_pos`` layout must use the jnp/ref paths.  ``n_splits > 1`` runs
     the two-stage pipeline (parallel partial sweeps + LSE merge);
-    ``n_splits = 1`` is the original single-kernel sweep, unchanged."""
+    ``n_splits = 1`` is the original single-kernel sweep, unchanged.
+    ``k_scale``/``v_scale`` (per-row fp32) flag an int8 cache: the dequant
+    fuses into the block load (``_load_kv``), nothing else changes."""
     if n_splits > 1:
         partial, lse = decode_attention_pallas_partials(
             q, k_cache, v_cache, pos, n_splits=n_splits, window=window,
             logit_cap=logit_cap, scale=scale, block_k=block_k,
-            interpret=interpret)
+            k_scale=k_scale, v_scale=v_scale, interpret=interpret)
         out = merge_kv_splits_pallas(partial, lse, out_dtype=q.dtype,
                                      interpret=interpret)   # (B, Hq, 1, Dv)
         return out.transpose(0, 2, 1, 3)                    # (B, 1, Hq, Dv)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), \
+        "k_scale and v_scale must be given together"
     B, _, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
@@ -379,19 +427,28 @@ def decode_attention_pallas(
 
     kernel = functools.partial(
         _decode_kernel, scale=scale, window=window, logit_cap=logit_cap,
-        block_k=block_k, n_k=n_k, cache_len=C)
+        block_k=block_k, n_k=n_k, cache_len=C, quantized=quantized)
+
+    def kv_index(b, h, ik, pos_ref, G=G):
+        return (b, h // G, ik, 0)
+
+    in_specs = [pl.BlockSpec((1, 1, 1, D),
+                             lambda b, h, ik, pos_ref: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, D), kv_index)]
+    inputs = [qt, kt]
+    if quantized:              # scale blocks ride the k/v index_map
+        in_specs.append(pl.BlockSpec((1, 1, block_k, 1), kv_index))
+        inputs.append(k_scale.transpose(0, 2, 1, 3))     # (B, Hkv, C, 1)
+    in_specs.append(pl.BlockSpec((1, 1, block_k, Dv), kv_index))
+    inputs.append(vt)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, block_k, 1), kv_index))
+        inputs.append(v_scale.transpose(0, 2, 1, 3))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hq, n_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, D),
-                         lambda b, h, ik, pos_ref: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, D),
-                         lambda b, h, ik, pos_ref, G=G: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, Dv),
-                         lambda b, h, ik, pos_ref, G=G: (b, h // G, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, 1, Dv),
                                lambda b, h, ik, pos_ref: (b, h, 0, 0)),
         scratch_shapes=[
@@ -405,14 +462,13 @@ def decode_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, 1, Dv), q.dtype),
         interpret=interpret,
-    )(pos_arr, qt, kt, vt)
+    )(pos_arr, *inputs)
     return out.transpose(0, 2, 1, 3)             # (B, 1, Hq, Dv)
 
 
-def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, scale: float, window: int,
+def _verify_kernel(pos_ref, *refs, scale: float, window: int,
                    logit_cap: float, block_k: int, n_k: int, cache_len: int,
-                   q_len: int):
+                   q_len: int, quantized: bool = False):
     """Multi-query speculative verify against the ring cache.
 
     Same split-K streaming as ``_decode_kernel`` but with ``q_len = K+1``
@@ -422,7 +478,15 @@ def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, o_ref,
     arrive as a separate in-flight input (``kn/vn``) folded in at the last
     grid step, so nothing speculative ever lands in HBM.  Ring-eviction
     semantics (``k_pos > q_pos - C``) mask the entries the sequential loop
-    would already have overwritten by query i."""
+    would already have overwritten by query i.  In quantized mode only the
+    CACHE carries scales — the in-flight candidates stay unquantized."""
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref, kn_ref, vn_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, kn_ref, vn_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -446,8 +510,8 @@ def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, o_ref,
     def _compute():
         _online_softmax_update(
             q_ref[0, 0].astype(jnp.float32),                 # (Q, D)
-            k_ref[0, 0].astype(jnp.float32),
-            v_ref[0, 0].astype(jnp.float32),
+            _load_kv(k_ref, ks_ref),
+            _load_kv(v_ref, vs_ref),
             valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when(ik == n_k - 1)
@@ -457,15 +521,22 @@ def _verify_kernel(pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, o_ref,
             scale=scale, window=window, logit_cap=logit_cap, q_len=q_len)
 
 
-def _verify_partials_kernel(pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
-                            part_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+def _verify_partials_kernel(pos_ref, *refs,
                             scale: float, window: int, logit_cap: float,
                             block_k: int, n_k: int, kpb: int, n_splits: int,
-                            cache_len: int, q_len: int):
+                            cache_len: int, q_len: int,
+                            quantized: bool = False):
     """Stage 1 of the two-stage ring verify sweep.  Same masks as
     ``_verify_kernel``; the in-flight candidate block folds into the LAST
     split's scratch just before its flush, so stage 2 stays the generic
     LSE merge (no candidate-aware merge variant needed)."""
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref, kn_ref, vn_ref,
+         part_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, kn_ref, vn_ref,
+         part_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     isp, ik = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ik == 0)
@@ -490,8 +561,8 @@ def _verify_partials_kernel(pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
     def _compute():
         _online_softmax_update(
             q_ref[0, 0].astype(jnp.float32),                 # (Q, D)
-            k_ref[0, 0].astype(jnp.float32),
-            v_ref[0, 0].astype(jnp.float32),
+            _load_kv(k_ref, ks_ref),
+            _load_kv(v_ref, vs_ref),
             valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when((ik == kpb - 1) & (isp == n_splits - 1))
@@ -515,10 +586,15 @@ def verify_attention_pallas_partials(
     *,
     n_splits: int, window: int = 0, logit_cap: float = 0.0,
     scale: float | None = None, block_k: int = 256, interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32; int8 caches only
+    v_scale: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stage 1 only: per-split verify sweep over the ring cache, candidates
     folded into the last split.  Returns ``(partial (B, Hq, S, Q, Dv) fp32,
     lse (B, Hq, S, Q) fp32)``."""
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), \
+        "k_scale and v_scale must be given together"
     B, Q, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
@@ -543,24 +619,35 @@ def verify_attention_pallas_partials(
     kernel = functools.partial(
         _verify_partials_kernel, scale=scale, window=window,
         logit_cap=logit_cap, block_k=block_k, n_k=n_k, kpb=kpb,
-        n_splits=n_splits, cache_len=C, q_len=Q)
+        n_splits=n_splits, cache_len=C, q_len=Q, quantized=quantized)
 
     def kv_index(b, h, s, ik, pos_ref, G=G, kpb=kpb, n_k=n_k):
         return (b, h // G, jnp.minimum(s * kpb + ik, n_k - 1), 0)
 
+    in_specs = [pl.BlockSpec((1, 1, Q, D),
+                             lambda b, h, s, ik, pos_ref: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, D), kv_index)]
+    inputs = [qt, kt]
+    if quantized:              # scale blocks ride the k/v index_map
+        in_specs.append(pl.BlockSpec((1, 1, block_k, 1), kv_index))
+        inputs.append(k_scale.transpose(0, 2, 1, 3))     # (B, Hkv, C, 1)
+    in_specs.append(pl.BlockSpec((1, 1, block_k, Dv), kv_index))
+    inputs.append(vt)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, block_k, 1), kv_index))
+        inputs.append(v_scale.transpose(0, 2, 1, 3))
+    in_specs += [
+        pl.BlockSpec((1, 1, Q, D),
+                     lambda b, h, s, ik, pos_ref, G=G: (b, h // G, 0, 0)),
+        pl.BlockSpec((1, 1, Q, Dv),
+                     lambda b, h, s, ik, pos_ref, G=G: (b, h // G, 0, 0)),
+    ]
+    inputs += [knt, vnt]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hq, n_splits, kpb),
-        in_specs=[
-            pl.BlockSpec((1, 1, Q, D),
-                         lambda b, h, s, ik, pos_ref: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, D), kv_index),
-            pl.BlockSpec((1, 1, block_k, Dv), kv_index),
-            pl.BlockSpec((1, 1, Q, D),
-                         lambda b, h, s, ik, pos_ref, G=G: (b, h // G, 0, 0)),
-            pl.BlockSpec((1, 1, Q, Dv),
-                         lambda b, h, s, ik, pos_ref, G=G: (b, h // G, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, Q, Dv),
                          lambda b, h, s, ik, pos_ref: (b, h, s, 0, 0)),
@@ -579,7 +666,7 @@ def verify_attention_pallas_partials(
         out_shape=[jax.ShapeDtypeStruct((B, Hq, n_splits, Q, Dv), jnp.float32),
                    jax.ShapeDtypeStruct((B, Hq, n_splits, Q), jnp.float32)],
         interpret=interpret,
-    )(pos_arr, qt, kt, vt, knt, vnt)
+    )(pos_arr, *inputs)
 
 
 def verify_attention_pallas(
@@ -592,20 +679,27 @@ def verify_attention_pallas(
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     block_k: int = 256, n_splits: int = 1, interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32; int8 caches only
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Split-K speculative verify attention against the canonical ring
     cache.  Assumes the ring invariant for the *committed* prefix (last
     write at ``(pos - 1) % C``); the fed block's candidates never touch the
     cache — rejection therefore needs no rollback.  ``n_splits > 1`` runs
-    the two-stage pipeline; ``n_splits = 1`` is the original sweep."""
+    the two-stage pipeline; ``n_splits = 1`` is the original sweep.
+    ``k_scale``/``v_scale`` flag an int8 cache (fused dequant in the block
+    load); candidates are never quantized."""
     if n_splits > 1:
         partial, lse = verify_attention_pallas_partials(
             q, k_cache, v_cache, k_new, v_new, pos, n_splits=n_splits,
             window=window, logit_cap=logit_cap, scale=scale, block_k=block_k,
-            interpret=interpret)
+            k_scale=k_scale, v_scale=v_scale, interpret=interpret)
         out = merge_kv_splits_pallas(partial, lse, out_dtype=q.dtype,
                                      interpret=interpret)   # (B, Hq, Q, Dv)
         return out.transpose(0, 2, 1, 3)                    # (B, Q, Hq, Dv)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), \
+        "k_scale and v_scale must be given together"
     B, Q, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
@@ -628,23 +722,35 @@ def verify_attention_pallas(
 
     kernel = functools.partial(
         _verify_kernel, scale=scale, window=window, logit_cap=logit_cap,
-        block_k=block_k, n_k=n_k, cache_len=C, q_len=Q)
+        block_k=block_k, n_k=n_k, cache_len=C, q_len=Q, quantized=quantized)
+
+    def kv_index(b, h, ik, pos_ref, G=G):
+        return (b, h // G, ik, 0)
+
+    in_specs = [pl.BlockSpec((1, 1, Q, D),
+                             lambda b, h, ik, pos_ref: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, D), kv_index)]
+    inputs = [qt, kt]
+    if quantized:              # scale blocks ride the k/v index_map
+        in_specs.append(pl.BlockSpec((1, 1, block_k, 1), kv_index))
+        inputs.append(k_scale.transpose(0, 2, 1, 3))     # (B, Hkv, C, 1)
+    in_specs.append(pl.BlockSpec((1, 1, block_k, Dv), kv_index))
+    inputs.append(vt)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, block_k, 1), kv_index))
+        inputs.append(v_scale.transpose(0, 2, 1, 3))
+    in_specs += [
+        pl.BlockSpec((1, 1, Q, D),
+                     lambda b, h, ik, pos_ref, G=G: (b, h // G, 0, 0)),
+        pl.BlockSpec((1, 1, Q, Dv),
+                     lambda b, h, ik, pos_ref, G=G: (b, h // G, 0, 0)),
+    ]
+    inputs += [knt, vnt]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hq, n_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, Q, D),
-                         lambda b, h, ik, pos_ref: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, D),
-                         lambda b, h, ik, pos_ref, G=G: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, Dv),
-                         lambda b, h, ik, pos_ref, G=G: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, Q, D),
-                         lambda b, h, ik, pos_ref, G=G: (b, h // G, 0, 0)),
-            pl.BlockSpec((1, 1, Q, Dv),
-                         lambda b, h, ik, pos_ref, G=G: (b, h // G, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, Q, Dv),
                                lambda b, h, ik, pos_ref: (b, h, 0, 0)),
         scratch_shapes=[
@@ -658,16 +764,22 @@ def verify_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, Q, Dv), q.dtype),
         interpret=interpret,
-    )(pos_arr, qt, kt, vt, knt, vnt)
+    )(pos_arr, *inputs)
     return out.transpose(0, 2, 1, 3)             # (B, Q, Hq, Dv)
 
 
-def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
-                         o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+def _paged_verify_kernel(bt_ref, pos_ref, *refs, scale: float,
                          window: int, logit_cap: float, page_size: int,
-                         n_blocks: int, q_len: int):
+                         n_blocks: int, q_len: int, quantized: bool = False):
     """Paged analogue of ``_verify_kernel``: linear layout (no eviction
     mask), per-request ``pos``, block-table gather in the k/v index_map."""
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref, kn_ref, vn_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, kn_ref, vn_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     ib, ij = pl.program_id(0), pl.program_id(2)
 
     @pl.when(ij == 0)
@@ -689,8 +801,8 @@ def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
     def _compute():
         _online_softmax_update(
             q_ref[0, 0].astype(jnp.float32),                 # (Q, D)
-            k_ref[0, 0].astype(jnp.float32),
-            v_ref[0, 0].astype(jnp.float32),
+            _load_kv(k_ref, ks_ref),
+            _load_kv(v_ref, vs_ref),
             valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when(ij == n_blocks - 1)
@@ -700,14 +812,20 @@ def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
             scale=scale, window=window, logit_cap=logit_cap, q_len=q_len)
 
 
-def _paged_verify_partials_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref,
-                                  kn_ref, vn_ref, part_ref, lse_ref,
-                                  m_ref, l_ref, acc_ref, *, scale: float,
+def _paged_verify_partials_kernel(bt_ref, pos_ref, *refs, scale: float,
                                   window: int, logit_cap: float,
                                   page_size: int, n_blocks: int, ppb: int,
-                                  n_splits: int, q_len: int):
+                                  n_splits: int, q_len: int,
+                                  quantized: bool = False):
     """Stage 1 of the two-stage paged verify sweep.  Same masks as
     ``_paged_verify_kernel``; candidates fold into the LAST split only."""
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref, kn_ref, vn_ref,
+         part_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, kn_ref, vn_ref,
+         part_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     ib = pl.program_id(0)
     isp, ij = pl.program_id(2), pl.program_id(3)
 
@@ -731,8 +849,8 @@ def _paged_verify_partials_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref,
     def _compute():
         _online_softmax_update(
             q_ref[0, 0].astype(jnp.float32),                 # (Q, D)
-            k_ref[0, 0].astype(jnp.float32),
-            v_ref[0, 0].astype(jnp.float32),
+            _load_kv(k_ref, ks_ref),
+            _load_kv(v_ref, vs_ref),
             valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when((ij == ppb - 1) & (isp == n_splits - 1))
@@ -757,10 +875,15 @@ def paged_verify_attention_pallas_partials(
     *,
     n_splits: int, window: int = 0, logit_cap: float = 0.0,
     scale: float | None = None, interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32; int8 pools only
+    v_scale: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stage 1 only: per-split paged verify sweep, candidates folded into
     the last split.  Returns ``(partial (B, Hq, S, Q, Dv) fp32,
     lse (B, Hq, S, Q) fp32)``."""
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), \
+        "k_scale and v_scale must be given together"
     B, Q, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     Dv = v_pages.shape[-1]
@@ -781,26 +904,38 @@ def paged_verify_attention_pallas_partials(
     kernel = functools.partial(
         _paged_verify_partials_kernel, scale=scale, window=window,
         logit_cap=logit_cap, page_size=ps, n_blocks=nb, ppb=ppb,
-        n_splits=n_splits, q_len=Q)
+        n_splits=n_splits, q_len=Q, quantized=quantized)
 
     def kv_index(b, h, s, j, bt_ref, pos_ref, G=G, ppb=ppb, nb=nb):
         return (bt_ref[b, jnp.minimum(s * ppb + j, nb - 1)], h // G, 0, 0)
 
+    in_specs = [pl.BlockSpec((1, 1, Q, D),
+                             lambda b, h, s, j, bt_ref, pos_ref:
+                             (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, ps, D), kv_index)]
+    inputs = [qt, kt]
+    if quantized:              # scale blocks ride the k/v index_map
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), kv_index))
+        inputs.append(k_scale.transpose(0, 2, 1, 3))     # (P, Hkv, ps, 1)
+    in_specs.append(pl.BlockSpec((1, 1, ps, Dv), kv_index))
+    inputs.append(vt)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), kv_index))
+        inputs.append(v_scale.transpose(0, 2, 1, 3))
+    in_specs += [
+        pl.BlockSpec((1, 1, Q, D),
+                     lambda b, h, s, j, bt_ref, pos_ref, G=G:
+                     (b, h // G, 0, 0)),
+        pl.BlockSpec((1, 1, Q, Dv),
+                     lambda b, h, s, j, bt_ref, pos_ref, G=G:
+                     (b, h // G, 0, 0)),
+    ]
+    inputs += [knt, vnt]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                   # block table + positions
         grid=(B, Hq, n_splits, ppb),
-        in_specs=[
-            pl.BlockSpec((1, 1, Q, D),
-                         lambda b, h, s, j, bt_ref, pos_ref: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, ps, D), kv_index),
-            pl.BlockSpec((1, 1, ps, Dv), kv_index),
-            pl.BlockSpec((1, 1, Q, D),
-                         lambda b, h, s, j, bt_ref, pos_ref, G=G:
-                         (b, h // G, 0, 0)),
-            pl.BlockSpec((1, 1, Q, Dv),
-                         lambda b, h, s, j, bt_ref, pos_ref, G=G:
-                         (b, h // G, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, Q, Dv),
                          lambda b, h, s, j, bt_ref, pos_ref: (b, h, s, 0, 0)),
@@ -819,7 +954,7 @@ def paged_verify_attention_pallas_partials(
         out_shape=[jax.ShapeDtypeStruct((B, Hq, n_splits, Q, Dv), jnp.float32),
                    jax.ShapeDtypeStruct((B, Hq, n_splits, Q), jnp.float32)],
         interpret=interpret,
-    )(bt, pos_arr, qt, kt, vt, knt, vnt)
+    )(bt, pos_arr, *inputs)
 
 
 def paged_verify_attention_pallas(
@@ -833,20 +968,28 @@ def paged_verify_attention_pallas(
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     n_splits: int = 1, interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32; int8 pools only
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Split-K speculative verify attention over a paged KV cache: same
     block-table gather as ``paged_decode_attention_pallas``, ``q_len = K+1``
     query rows per (b, h) tile, in-flight candidates folded at the last
     grid step.  ``pos`` is per-request (ragged batch).  ``n_splits > 1``
-    runs the two-stage pipeline; ``n_splits = 1`` is the original sweep."""
+    runs the two-stage pipeline; ``n_splits = 1`` is the original sweep.
+    ``k_scale``/``v_scale`` flag an int8 pool (fused dequant in the block
+    load); candidates are never quantized."""
     if n_splits > 1:
         partial, lse = paged_verify_attention_pallas_partials(
             q, k_pages, v_pages, k_new, v_new, block_tables, pos,
             n_splits=n_splits, window=window, logit_cap=logit_cap,
-            scale=scale, interpret=interpret)
+            scale=scale, k_scale=k_scale, v_scale=v_scale,
+            interpret=interpret)
         out = merge_kv_splits_pallas(partial, lse, out_dtype=q.dtype,
                                      interpret=interpret)   # (B, Hq, Q, Dv)
         return out.transpose(0, 2, 1, 3)                    # (B, Q, Hq, Dv)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), \
+        "k_scale and v_scale must be given together"
     B, Q, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     Dv = v_pages.shape[-1]
@@ -865,27 +1008,35 @@ def paged_verify_attention_pallas(
 
     kernel = functools.partial(
         _paged_verify_kernel, scale=scale, window=window, logit_cap=logit_cap,
-        page_size=ps, n_blocks=nb, q_len=Q)
+        page_size=ps, n_blocks=nb, q_len=Q, quantized=quantized)
+
+    def kv_index(b, h, j, bt_ref, pos_ref, G=G):
+        return (bt_ref[b, j], h // G, 0, 0)
+
+    in_specs = [pl.BlockSpec((1, 1, Q, D),
+                             lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, ps, D), kv_index)]
+    inputs = [qt, kt]
+    if quantized:              # scale blocks ride the k/v index_map
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), kv_index))
+        inputs.append(k_scale.transpose(0, 2, 1, 3))     # (P, Hkv, ps, 1)
+    in_specs.append(pl.BlockSpec((1, 1, ps, Dv), kv_index))
+    inputs.append(vt)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), kv_index))
+        inputs.append(v_scale.transpose(0, 2, 1, 3))
+    in_specs += [
+        pl.BlockSpec((1, 1, Q, D),
+                     lambda b, h, j, bt_ref, pos_ref, G=G: (b, h // G, 0, 0)),
+        pl.BlockSpec((1, 1, Q, Dv),
+                     lambda b, h, j, bt_ref, pos_ref, G=G: (b, h // G, 0, 0)),
+    ]
+    inputs += [knt, vnt]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                   # block table + positions
         grid=(B, Hq, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, Q, D),
-                         lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, ps, D),
-                         lambda b, h, j, bt_ref, pos_ref, G=G:
-                         (bt_ref[b, j], h // G, 0, 0)),
-            pl.BlockSpec((1, 1, ps, Dv),
-                         lambda b, h, j, bt_ref, pos_ref, G=G:
-                         (bt_ref[b, j], h // G, 0, 0)),
-            pl.BlockSpec((1, 1, Q, D),
-                         lambda b, h, j, bt_ref, pos_ref, G=G:
-                         (b, h // G, 0, 0)),
-            pl.BlockSpec((1, 1, Q, Dv),
-                         lambda b, h, j, bt_ref, pos_ref, G=G:
-                         (b, h // G, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, Q, Dv),
                                lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
         scratch_shapes=[
@@ -899,13 +1050,19 @@ def paged_verify_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, Q, Dv), q.dtype),
         interpret=interpret,
-    )(bt, pos_arr, qt, kt, vt, knt, vnt)
+    )(bt, pos_arr, *inputs)
     return out.transpose(0, 2, 1, 3)             # (B, Q, Hq, Dv)
 
 
-def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, scale: float, window: int,
-                         logit_cap: float, page_size: int, n_blocks: int):
+def _paged_decode_kernel(bt_ref, pos_ref, *refs, scale: float, window: int,
+                         logit_cap: float, page_size: int, n_blocks: int,
+                         quantized: bool = False):
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     ib, ij = pl.program_id(0), pl.program_id(2)
 
     @pl.when(ij == 0)
@@ -930,8 +1087,8 @@ def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         _online_softmax_update(
             q_ref[0, 0].astype(jnp.float32),                 # (1, D)
-            k_ref[0, 0].astype(jnp.float32),                 # (ps, D)
-            v_ref[0, 0].astype(jnp.float32),                 # (ps, Dv)
+            _load_kv(k_ref, ks_ref),                         # (ps, D)
+            _load_kv(v_ref, vs_ref),                         # (ps, Dv)
             valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when(ij == n_blocks - 1)
@@ -940,13 +1097,20 @@ def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def _paged_decode_partials_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref,
-                                  part_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+def _paged_decode_partials_kernel(bt_ref, pos_ref, *refs,
                                   scale: float, window: int, logit_cap: float,
-                                  page_size: int, n_blocks: int, ppb: int):
+                                  page_size: int, n_blocks: int, ppb: int,
+                                  quantized: bool = False):
     """Stage 1 of the two-stage paged decode sweep: identical masks to
     ``_paged_decode_kernel``, but each split flushes normalized partials +
     LSE instead of chaining scratch across every page."""
+    if quantized:
+        (q_ref, k_ref, ks_ref, v_ref, vs_ref,
+         part_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref,
+         part_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     ib = pl.program_id(0)
     isp, ij = pl.program_id(2), pl.program_id(3)
 
@@ -968,8 +1132,8 @@ def _paged_decode_partials_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref,
     def _compute():
         _online_softmax_update(
             q_ref[0, 0].astype(jnp.float32),                 # (1, D)
-            k_ref[0, 0].astype(jnp.float32),                 # (ps, D)
-            v_ref[0, 0].astype(jnp.float32),                 # (ps, Dv)
+            _load_kv(k_ref, ks_ref),                         # (ps, D)
+            _load_kv(v_ref, vs_ref),                         # (ps, Dv)
             valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
 
     @pl.when(ij == ppb - 1)
@@ -986,9 +1150,14 @@ def paged_decode_attention_pallas_partials(
     *,
     n_splits: int, window: int = 0, logit_cap: float = 0.0,
     scale: float | None = None, interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32; int8 pools only
+    v_scale: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stage 1 only: per-split paged decode sweep.  Returns
     ``(partial (B, Hq, S, 1, Dv) fp32, lse (B, Hq, S, 1) fp32)``."""
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), \
+        "k_scale and v_scale must be given together"
     B, _, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     Dv = v_pages.shape[-1]
@@ -1006,20 +1175,29 @@ def paged_decode_attention_pallas_partials(
 
     kernel = functools.partial(
         _paged_decode_partials_kernel, scale=scale, window=window,
-        logit_cap=logit_cap, page_size=ps, n_blocks=nb, ppb=ppb)
+        logit_cap=logit_cap, page_size=ps, n_blocks=nb, ppb=ppb,
+        quantized=quantized)
 
     def kv_index(b, h, s, j, bt_ref, pos_ref, G=G, ppb=ppb, nb=nb):
         return (bt_ref[b, jnp.minimum(s * ppb + j, nb - 1)], h // G, 0, 0)
 
+    in_specs = [pl.BlockSpec((1, 1, 1, D),
+                             lambda b, h, s, j, bt_ref, pos_ref: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, ps, D), kv_index)]
+    inputs = [qt, kt]
+    if quantized:              # scale blocks ride the k/v index_map
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), kv_index))
+        inputs.append(k_scale.transpose(0, 2, 1, 3))     # (P, Hkv, ps, 1)
+    in_specs.append(pl.BlockSpec((1, 1, ps, Dv), kv_index))
+    inputs.append(vt)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), kv_index))
+        inputs.append(v_scale.transpose(0, 2, 1, 3))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                   # block table + positions
         grid=(B, Hq, n_splits, ppb),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, D),
-                         lambda b, h, s, j, bt_ref, pos_ref: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, ps, D), kv_index),
-            pl.BlockSpec((1, 1, ps, Dv), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, 1, Dv),
                          lambda b, h, s, j, bt_ref, pos_ref: (b, h, s, 0, 0)),
@@ -1038,7 +1216,7 @@ def paged_decode_attention_pallas_partials(
         out_shape=[jax.ShapeDtypeStruct((B, Hq, n_splits, 1, Dv), jnp.float32),
                    jax.ShapeDtypeStruct((B, Hq, n_splits, 1), jnp.float32)],
         interpret=interpret,
-    )(bt, pos_arr, qt, kt, vt)
+    )(bt, pos_arr, *inputs)
 
 
 def paged_decode_attention_pallas(
@@ -1050,6 +1228,8 @@ def paged_decode_attention_pallas(
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     n_splits: int = 1, interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32; int8 pools only
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Split-K decode attention over a paged KV cache.
 
@@ -1060,15 +1240,21 @@ def paged_decode_attention_pallas(
     need not be contiguous, only its table row must list them in logical
     order.  ``pos`` is per-request (ragged batch), so validity masks are
     per-row, unlike the ring kernel's single scalar.  ``n_splits > 1`` runs
-    the two-stage pipeline; ``n_splits = 1`` is the original sweep."""
+    the two-stage pipeline; ``n_splits = 1`` is the original sweep.
+    ``k_scale``/``v_scale`` flag an int8 pool: per-row fp32 scale blocks
+    ride the same block-table gather and the dequant multiply is fused
+    into the block load (int8 -> fp32 cast is free on the DMA'd tile)."""
     if n_splits > 1:
         partial, lse = paged_decode_attention_pallas_partials(
             q, k_pages, v_pages, block_tables, pos, n_splits=n_splits,
             window=window, logit_cap=logit_cap, scale=scale,
-            interpret=interpret)
+            k_scale=k_scale, v_scale=v_scale, interpret=interpret)
         out = merge_kv_splits_pallas(partial, lse, out_dtype=q.dtype,
                                      interpret=interpret)   # (B, Hq, 1, Dv)
         return out.transpose(0, 2, 1, 3)                    # (B, 1, Hq, Dv)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), \
+        "k_scale and v_scale must be given together"
     B, _, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     Dv = v_pages.shape[-1]
@@ -1085,21 +1271,28 @@ def paged_decode_attention_pallas(
 
     kernel = functools.partial(
         _paged_decode_kernel, scale=scale, window=window, logit_cap=logit_cap,
-        page_size=ps, n_blocks=nb)
+        page_size=ps, n_blocks=nb, quantized=quantized)
+
+    def kv_index(b, h, j, bt_ref, pos_ref, G=G):
+        return (bt_ref[b, j], h // G, 0, 0)
+
+    in_specs = [pl.BlockSpec((1, 1, 1, D),
+                             lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, ps, D), kv_index)]
+    inputs = [qt, kt]
+    if quantized:              # scale blocks ride the k/v index_map
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), kv_index))
+        inputs.append(k_scale.transpose(0, 2, 1, 3))     # (P, Hkv, ps, 1)
+    in_specs.append(pl.BlockSpec((1, 1, ps, Dv), kv_index))
+    inputs.append(vt)
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1, ps, 1), kv_index))
+        inputs.append(v_scale.transpose(0, 2, 1, 3))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                   # block table + positions
         grid=(B, Hq, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, D),
-                         lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, ps, D),
-                         lambda b, h, j, bt_ref, pos_ref, G=G:
-                         (bt_ref[b, j], h // G, 0, 0)),
-            pl.BlockSpec((1, 1, ps, Dv),
-                         lambda b, h, j, bt_ref, pos_ref, G=G:
-                         (bt_ref[b, j], h // G, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, 1, Dv),
                                lambda b, h, j, bt_ref, pos_ref: (b, h, 0, 0)),
         scratch_shapes=[
@@ -1113,5 +1306,5 @@ def paged_decode_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, 1, Dv), q.dtype),
         interpret=interpret,
-    )(bt, pos_arr, qt, kt, vt)
+    )(bt, pos_arr, *inputs)
     return out.transpose(0, 2, 1, 3)             # (B, 1, Hq, Dv)

@@ -54,6 +54,7 @@ class KernelPolicy:
     ssd_chunk: int = 128
     decode_k_chunk: int = 256    # split-K block for the Pallas decode kernel
     kv_splits: str | int = "auto"  # two-stage split count: "auto" | int (1 = single-stage)
+    kv_dtype: str = "bfloat16"   # KV-pool storage: "bfloat16" | "int8" (per-row fp32 scales)
 
 
 DEFAULT_POLICY = KernelPolicy()
@@ -160,6 +161,22 @@ def _warn_k_pos_fallback(entry: str) -> None:
         "kernel (it derives ring positions from pos, assuming the canonical "
         "slot = p % C layout); falling back to the jnp backend for this "
         "call", RuntimeWarning, stacklevel=3)
+
+
+_KV_DTYPE_FALLBACK_WARNED: set[str] = set()
+
+
+def warn_kv_dtype_fallback(family: str, reason: str) -> None:
+    """One-time (per model family) warning when ``kv_dtype=int8`` was
+    requested but the family's verify/commit path cannot run quantized and
+    silently falls back to the unquantized pools."""
+    if family in _KV_DTYPE_FALLBACK_WARNED:
+        return
+    _KV_DTYPE_FALLBACK_WARNED.add(family)
+    warnings.warn(
+        f"kv_dtype=int8 requested for model family {family!r} but {reason}; "
+        "falling back to unquantized (bfloat16) KV pools for this engine",
+        RuntimeWarning, stacklevel=3)
 
 
 # ==========================================================================
@@ -272,6 +289,8 @@ def decode_attention_jnp(
     pos: jax.Array,                # () current absolute position of q
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     n_splits: int = 1,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32 per-row scales
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Single-token decode against a (ring-buffer) KV cache.
 
@@ -280,12 +299,19 @@ def decode_attention_jnp(
     ``flash_attention_jnp``: decode streams the WHOLE cache per token, so a
     whole-cache fp32 pre-cast would triple the hot path's HBM traffic).
     ``n_splits > 1`` runs the two-stage partial/merge path (exact; mirrors
-    the Pallas split contract); 1 is the plain softmax."""
+    the Pallas split contract); 1 is the plain softmax.  When ``k_scale`` /
+    ``v_scale`` are given the cache is int8 and is dequantized (cast * scale,
+    fp32) before the einsums — the jnp mirror of the fused-dequant block
+    load in the Pallas sweep."""
     B, _, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
+    if k_scale is not None:
+        k_cache = k_cache.astype(jnp.float32) * k_scale
+    if v_scale is not None:
+        v_cache = v_cache.astype(jnp.float32) * v_scale
     qf = q.reshape(B, Hkv, G, D)
     s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache,
                    preferred_element_type=jnp.float32) * scale
@@ -315,6 +341,8 @@ def verify_attention_jnp(
     pos: jax.Array,                # () absolute position of q[:, 0]
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     n_splits: int = 1,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32 per-row scales
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Speculative multi-query decode (verify) against a ring-buffer cache.
 
@@ -325,13 +353,19 @@ def verify_attention_jnp(
     loop would already have overwritten are masked.  Storage dtype is kept
     end to end; einsums accumulate in fp32 (same discipline as
     ``decode_attention_jnp`` — one cache sweep amortised over K+1 queries
-    is the whole J/token win)."""
+    is the whole J/token win).  With ``k_scale``/``v_scale`` the cache is
+    int8 and dequantized before use; the in-flight candidates are always
+    unquantized (they are transient activations, never pool rows)."""
     B, Q, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
     G = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
+    if k_scale is not None:
+        k_cache = k_cache.astype(jnp.float32) * k_scale
+    if v_scale is not None:
+        v_cache = v_cache.astype(jnp.float32) * v_scale
     qf = q.reshape(B, Q, Hkv, G, D)
     q_pos = pos + jnp.arange(Q)[:, None]                     # (Q, 1)
 
@@ -373,10 +407,14 @@ def paged_verify_attention_jnp(
     pos: jax.Array,                # (B,) absolute position of q[:, 0]
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     n_splits: int = 1,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32 per-row scales
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Paged analogue of ``verify_attention_jnp``: the pool is committed
     through ``pos[b] - 1`` (linear layout, no eviction); ``pos`` is
-    per-request so validity is per-row."""
+    per-request so validity is per-row.  With ``k_scale``/``v_scale`` the
+    pool is int8: scale rows are gathered through the same block tables and
+    the gathered cache is dequantized before the einsums."""
     B, Q, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     nb = block_tables.shape[1]
@@ -386,6 +424,12 @@ def paged_verify_attention_jnp(
         scale = D ** -0.5
     kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
     vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, Dv)
+    if k_scale is not None:
+        kg = kg.astype(jnp.float32) \
+            * k_scale[block_tables].reshape(B, nb * ps, Hkv, 1)
+    if v_scale is not None:
+        vg = vg.astype(jnp.float32) \
+            * v_scale[block_tables].reshape(B, nb * ps, Hkv, 1)
     qf = q.reshape(B, Q, Hkv, G, D)
     q_pos = pos.reshape(B, 1, 1) + jnp.arange(Q)[None, :, None]  # (B, Q, 1)
 
@@ -425,6 +469,8 @@ def paged_decode_attention_jnp(
     pos: jax.Array,                # (B,) per-request absolute position of q
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     n_splits: int = 1,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32 per-row scales
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Single-token decode against a paged KV cache, pure jnp.
 
@@ -432,7 +478,9 @@ def paged_decode_attention_jnp(
     [j*ps, (j+1)*ps)) and keeps the pool in its storage dtype — the einsums
     accumulate in fp32 via ``preferred_element_type``, same discipline as
     ``decode_attention_jnp``.  ``pos`` is per-request: the batch is ragged,
-    so validity is a (B, K) mask rather than the ring path's shared (C,)."""
+    so validity is a (B, K) mask rather than the ring path's shared (C,).
+    With ``k_scale``/``v_scale`` the pool is int8: scale rows are gathered
+    through the same block tables and dequantized before the einsums."""
     B, _, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     nb = block_tables.shape[1]
@@ -442,6 +490,12 @@ def paged_decode_attention_jnp(
         scale = D ** -0.5
     kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
     vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, Dv)
+    if k_scale is not None:
+        kg = kg.astype(jnp.float32) \
+            * k_scale[block_tables].reshape(B, nb * ps, Hkv, 1)
+    if v_scale is not None:
+        vg = vg.astype(jnp.float32) \
+            * v_scale[block_tables].reshape(B, nb * ps, Hkv, 1)
     qf = q.reshape(B, Hkv, G, D)
     s = jnp.einsum("bhgd,bkhd->bhgk", qf, kg,
                    preferred_element_type=jnp.float32) * scale
@@ -471,13 +525,17 @@ def paged_decode_attention(
     pos: jax.Array,                # (B,) per-request absolute position of q
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32; int8 pools only
+    v_scale: jax.Array | None = None,
     policy: KernelPolicy = DEFAULT_POLICY,
 ) -> jax.Array:
     """Backend-dispatching paged decode attention (continuous-batching hot
     path).  Shares the ``decode`` backend axis with the ring entry point:
     ``auto`` resolves to the block-table-gather Pallas kernel on TPU and the
     gather-then-attend jnp path elsewhere.  The split-K block is the page
-    size — pages are the DMA unit, so ``decode_k_chunk`` does not apply."""
+    size — pages are the DMA unit, so ``decode_k_chunk`` does not apply.
+    ``k_scale``/``v_scale`` (per-row fp32, int8 pools) flow to every backend:
+    the Pallas kernel fuses the dequant into the stage-1 block load."""
     backend = policy.decode
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
@@ -489,15 +547,18 @@ def paged_decode_attention(
         return da.paged_decode_attention_pallas(
             q, k_pages, v_pages, block_tables, pos, window=window,
             logit_cap=logit_cap, scale=scale, n_splits=n_splits,
+            k_scale=k_scale, v_scale=v_scale,
             interpret=backend == "pallas_interpret")
     if backend == "ref":
         return _ref.paged_decode_attention_ref(
             q, k_pages, v_pages, block_tables, pos, window=window,
-            logit_cap=logit_cap, scale=scale)
+            logit_cap=logit_cap, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
     if backend == "jnp":
         return paged_decode_attention_jnp(
             q, k_pages, v_pages, block_tables, pos, window=window,
-            logit_cap=logit_cap, scale=scale, n_splits=n_splits)
+            logit_cap=logit_cap, scale=scale, n_splits=n_splits,
+            k_scale=k_scale, v_scale=v_scale)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 
@@ -517,6 +578,8 @@ def decode_attention(
     *,
     k_pos: jax.Array | None = None,   # (C,) slot positions; None -> canonical ring
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32; int8 caches only
+    v_scale: jax.Array | None = None,
     policy: KernelPolicy = DEFAULT_POLICY,
 ) -> jax.Array:
     """Backend-dispatching decode-attention entry point (serving hot path).
@@ -525,7 +588,9 @@ def decode_attention(
     jnp path elsewhere (CPU stand-ins cannot lower Pallas TPU kernels).  The
     Pallas path derives slot positions from ``pos`` inside the kernel and
     therefore requires the canonical ring layout — callers passing a custom
-    ``k_pos`` are routed to the jnp path instead.
+    ``k_pos`` are routed to the jnp path instead.  ``k_scale``/``v_scale``
+    (per-row fp32, int8 caches) flow to every backend; the Pallas kernel
+    fuses the dequant into the stage-1 block load.
     """
     backend = policy.decode
     if backend == "auto":
@@ -540,17 +605,20 @@ def decode_attention(
         return da.decode_attention_pallas(
             q, k_cache, v_cache, pos, window=window, logit_cap=logit_cap,
             scale=scale, block_k=policy.decode_k_chunk, n_splits=n_splits,
+            k_scale=k_scale, v_scale=v_scale,
             interpret=backend == "pallas_interpret")
     if k_pos is None:
         k_pos = ring_positions(pos, k_cache.shape[1])
     if backend == "ref":
         return _ref.decode_attention_ref(q, k_cache, v_cache, k_pos, pos,
                                          window=window, logit_cap=logit_cap,
-                                         scale=scale)
+                                         scale=scale,
+                                         k_scale=k_scale, v_scale=v_scale)
     if backend == "jnp":
         return decode_attention_jnp(q, k_cache, v_cache, k_pos, pos,
                                     window=window, logit_cap=logit_cap,
-                                    scale=scale, n_splits=n_splits)
+                                    scale=scale, n_splits=n_splits,
+                                    k_scale=k_scale, v_scale=v_scale)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 
@@ -564,6 +632,8 @@ def verify_attention(
     *,
     k_pos: jax.Array | None = None,   # (C,) slot positions; None -> canonical ring
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32; int8 caches only
+    v_scale: jax.Array | None = None,
     policy: KernelPolicy = DEFAULT_POLICY,
 ) -> jax.Array:
     """Backend-dispatching speculative verify attention (ring layout).
@@ -572,7 +642,9 @@ def verify_attention(
     sweep — the decode hot path's bytes-per-token lever: the whole KV cache
     streams HBM once for K+1 candidate tokens instead of once per token.
     Shares the ``decode`` backend axis; the candidates' k/v ride along as a
-    separate in-flight block so rejection never needs a cache rollback."""
+    separate in-flight block so rejection never needs a cache rollback.
+    ``k_scale``/``v_scale`` dequantize an int8 cache (candidates always stay
+    unquantized)."""
     backend = policy.decode
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
@@ -586,18 +658,21 @@ def verify_attention(
         return da.verify_attention_pallas(
             q, k_cache, v_cache, k_new, v_new, pos, window=window,
             logit_cap=logit_cap, scale=scale, block_k=policy.decode_k_chunk,
-            n_splits=n_splits, interpret=backend == "pallas_interpret")
+            n_splits=n_splits, k_scale=k_scale, v_scale=v_scale,
+            interpret=backend == "pallas_interpret")
     if k_pos is None:
         # committed prefix ends at pos - 1: that is the ring reference
         k_pos = ring_positions(pos - 1, k_cache.shape[1])
     if backend == "ref":
         return _ref.verify_attention_ref(
             q, k_cache, v_cache, k_new, v_new, k_pos, pos, window=window,
-            logit_cap=logit_cap, scale=scale)
+            logit_cap=logit_cap, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
     if backend == "jnp":
         return verify_attention_jnp(
             q, k_cache, v_cache, k_new, v_new, k_pos, pos, window=window,
-            logit_cap=logit_cap, scale=scale, n_splits=n_splits)
+            logit_cap=logit_cap, scale=scale, n_splits=n_splits,
+            k_scale=k_scale, v_scale=v_scale)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 
@@ -611,6 +686,8 @@ def paged_verify_attention(
     pos: jax.Array,                # (B,) absolute position of q[:, 0]
     *,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32; int8 pools only
+    v_scale: jax.Array | None = None,
     policy: KernelPolicy = DEFAULT_POLICY,
 ) -> jax.Array:
     """Backend-dispatching multi-query attention over the paged KV cache
@@ -618,7 +695,9 @@ def paged_verify_attention(
     every slot scores its own Q in-flight tokens at its own depth.  Two
     callers share this entry: speculative verify (Q = K+1 candidates) and
     chunked paged prefill (Q = prompt-suffix chunk against a shared cached
-    prefix; the commit side differs, the sweep is identical)."""
+    prefix; the commit side differs, the sweep is identical).
+    ``k_scale``/``v_scale`` dequantize an int8 pool (candidates always stay
+    unquantized)."""
     backend = policy.decode
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
@@ -630,16 +709,18 @@ def paged_verify_attention(
         return da.paged_verify_attention_pallas(
             q, k_pages, v_pages, k_new, v_new, block_tables, pos,
             window=window, logit_cap=logit_cap, scale=scale,
-            n_splits=n_splits, interpret=backend == "pallas_interpret")
+            n_splits=n_splits, k_scale=k_scale, v_scale=v_scale,
+            interpret=backend == "pallas_interpret")
     if backend == "ref":
         return _ref.paged_verify_attention_ref(
             q, k_pages, v_pages, k_new, v_new, block_tables, pos,
-            window=window, logit_cap=logit_cap, scale=scale)
+            window=window, logit_cap=logit_cap, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
     if backend == "jnp":
         return paged_verify_attention_jnp(
             q, k_pages, v_pages, k_new, v_new, block_tables, pos,
             window=window, logit_cap=logit_cap, scale=scale,
-            n_splits=n_splits)
+            n_splits=n_splits, k_scale=k_scale, v_scale=v_scale)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 

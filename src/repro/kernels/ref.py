@@ -13,6 +13,15 @@ import jax.numpy as jnp
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
+def _dequant(cache: jax.Array, scale: jax.Array | None) -> jax.Array:
+    """Whole-pool dequant for the quantized oracles: the oracle pays
+    O(pool) fp32 memory anyway, so int8 storage simply dequantizes up front
+    (``q.astype(f32) * scale`` with the (..., 1) per-row scale broadcasting
+    over head_dim) and the unquantized body is reused verbatim."""
+    cf = cache.astype(jnp.float32)
+    return cf if scale is None else cf * scale
+
+
 # --------------------------------------------------------------------------
 # attention oracle
 # --------------------------------------------------------------------------
@@ -70,16 +79,20 @@ def decode_attention_ref(
     k_pos: jax.Array,              # (C,) absolute position per slot (<0 invalid)
     pos: jax.Array,                # () absolute position of q
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32; int8 caches only
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Naive decode oracle: whole-cache fp32 math, explicit slot positions.
-    Ground truth for the chunked-jnp path and the split-K Pallas kernel."""
+    Ground truth for the chunked-jnp path and the split-K Pallas kernel.
+    ``k_scale``/``v_scale`` make it the QUANTIZED oracle: the int8 cache is
+    dequantized up front and the identical fp32 body runs."""
     B, _, Hq, D = q.shape
     C, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
     qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, _dequant(k_cache, k_scale)) * scale
     if logit_cap > 0.0:
         s = logit_cap * jnp.tanh(s / logit_cap)
     valid = (k_pos >= 0) & (k_pos <= pos)
@@ -87,7 +100,7 @@ def decode_attention_ref(
         valid &= k_pos > pos - window
     s = jnp.where(valid[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, _dequant(v_cache, v_scale))
     return o.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
 
 
@@ -152,6 +165,8 @@ def decode_attention_split_ref(
     pos: jax.Array,                # () absolute position of q
     *, n_splits: int, block_k: int = 256,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32; int8 caches only
+    v_scale: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stage-1 oracle for ``decode_attention_pallas_partials``: same
     k-block partitioning (including the divisor-of-C ``block_k``
@@ -167,15 +182,15 @@ def decode_attention_split_ref(
         block_k = next(b for b in range(block_k, 0, -1) if C % b == 0)
     n_k = C // block_k
     qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, _dequant(k_cache, k_scale)) * scale
     if logit_cap > 0.0:
         s = logit_cap * jnp.tanh(s / logit_cap)
     valid = (k_pos >= 0) & (k_pos <= pos)
     if window > 0:
         valid &= k_pos > pos - window
     s = jnp.where(valid[None, None, None], s, NEG_INF)
-    return _split_partials(s, v_cache, n_units=n_k, unit=block_k,
-                           n_splits=n_splits)
+    return _split_partials(s, _dequant(v_cache, v_scale), n_units=n_k,
+                           unit=block_k, n_splits=n_splits)
 
 
 def paged_decode_attention_split_ref(
@@ -186,6 +201,8 @@ def paged_decode_attention_split_ref(
     pos: jax.Array,                # (B,) per-request absolute position of q
     *, n_splits: int,
     window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32; int8 pools only
+    v_scale: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stage-1 oracle for ``paged_decode_attention_pallas_partials``: pages
     gathered into logical order, split over pages (the DMA unit)."""
@@ -196,10 +213,10 @@ def paged_decode_attention_split_ref(
     G = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
-    kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
-    vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, Dv)
+    kg = _dequant(k_pages, k_scale)[block_tables].reshape(B, nb * ps, Hkv, D)
+    vg = _dequant(v_pages, v_scale)[block_tables].reshape(B, nb * ps, Hkv, Dv)
     qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kg.astype(jnp.float32)) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kg) * scale
     if logit_cap > 0.0:
         s = logit_cap * jnp.tanh(s / logit_cap)
     k_pos = jnp.arange(nb * ps)[None, :]
@@ -223,11 +240,14 @@ def verify_attention_ref(
     k_pos: jax.Array,              # (C,) absolute position per slot (<0 invalid)
     pos: jax.Array,                # () absolute position of q[:, 0]
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32; int8 caches only
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Speculative verify oracle: query i sits at absolute position pos + i
     and attends to (a) the committed cache and (b) candidates j <= i of the
     in-flight block — the candidates' k/v never touch the cache, so a
-    rejected suffix needs no rollback.
+    rejected suffix needs no rollback.  ``k_scale``/``v_scale`` dequantize
+    an int8 cache up front (candidates always stay unquantized).
 
     Ring-eviction semantics: the sequential decode loop would have
     *overwritten* slots holding positions <= (pos + i) - C by the time it
@@ -246,7 +266,7 @@ def verify_attention_ref(
 
     # (a) committed cache: (B, Hkv, G, Q, C)
     s_c = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
-                     k_cache.astype(jnp.float32)) * scale
+                     _dequant(k_cache, k_scale)) * scale
     valid_c = (k_pos[None, :] >= 0) & (k_pos[None, :] <= q_pos) \
         & (k_pos[None, :] > q_pos - C)
     if window > 0:
@@ -266,7 +286,7 @@ def verify_attention_ref(
     valid = jnp.concatenate([valid_c, valid_n], axis=-1)
     s = jnp.where(valid[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    vf = jnp.concatenate([v_cache.astype(jnp.float32),
+    vf = jnp.concatenate([_dequant(v_cache, v_scale),
                           v_new.astype(jnp.float32)], axis=1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
     return o.reshape(B, Q, Hq, Dv).astype(q.dtype)
@@ -284,10 +304,13 @@ def paged_verify_attention_ref(
     block_tables: jax.Array,       # (B, nb) int32
     pos: jax.Array,                # (B,) absolute position of q[:, 0]
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32; int8 pools only
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Paged analogue of :func:`verify_attention_ref`: the pool is committed
     through ``pos[b] - 1`` (linear layout, no eviction), candidates stay
-    in-flight.  ``pos`` is per-request — the batch is ragged."""
+    in-flight.  ``pos`` is per-request — the batch is ragged.
+    ``k_scale``/``v_scale`` dequantize an int8 pool up front."""
     B, Q, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     nb = block_tables.shape[1]
@@ -295,12 +318,12 @@ def paged_verify_attention_ref(
     G = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
-    kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
-    vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, Dv)
+    kg = _dequant(k_pages, k_scale)[block_tables].reshape(B, nb * ps, Hkv, D)
+    vg = _dequant(v_pages, v_scale)[block_tables].reshape(B, nb * ps, Hkv, Dv)
     qf = q.astype(jnp.float32).reshape(B, Q, Hkv, G, D)
     q_pos = pos.reshape(B, 1, 1) + jnp.arange(Q)[None, :, None]  # (B, Q, 1)
 
-    s_c = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kg.astype(jnp.float32)) * scale
+    s_c = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kg) * scale
     k_pos = jnp.arange(nb * ps)[None, None, :]               # (1, 1, K)
     valid_c = k_pos < pos.reshape(B, 1, 1)                   # committed only
     if window > 0:
@@ -320,8 +343,7 @@ def paged_verify_attention_ref(
     valid = jnp.concatenate([valid_c, valid_n], axis=-1)     # (B, Q, K+Q)
     s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    vf = jnp.concatenate([vg.astype(jnp.float32),
-                          jnp.asarray(v_new, jnp.float32)], axis=1)
+    vf = jnp.concatenate([vg, jnp.asarray(v_new, jnp.float32)], axis=1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
     return o.reshape(B, Q, Hq, Dv).astype(q.dtype)
 
@@ -336,22 +358,27 @@ def paged_decode_attention_ref(
     block_tables: jax.Array,       # (B, nb) int32 page index per logical block
     pos: jax.Array,                # (B,) per-request absolute position of q
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (P, ps, Hkv, 1) fp32; int8 pools only
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Naive paged decode oracle: gather every request's pages into a
     contiguous (B, nb*ps, Hkv, *) view, then whole-cache fp32 math.  Pages
     are laid out linearly (logical block j holds positions [j*ps, (j+1)*ps)),
     so validity is simply k_pos <= pos[b] (+ sliding window).  Ground truth
-    for the chunked-jnp path and the block-table-gather Pallas kernel."""
+    for the chunked-jnp path and the block-table-gather Pallas kernel.
+    ``k_scale``/``v_scale`` make it the quantized oracle (dequant up front,
+    identical body)."""
     B, _, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     nb = block_tables.shape[1]
     G = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
-    kg = k_pages[block_tables].reshape(B, nb * ps, Hkv, D)
-    vg = v_pages[block_tables].reshape(B, nb * ps, Hkv, v_pages.shape[-1])
+    kg = _dequant(k_pages, k_scale)[block_tables].reshape(B, nb * ps, Hkv, D)
+    vg = _dequant(v_pages, v_scale)[block_tables].reshape(
+        B, nb * ps, Hkv, v_pages.shape[-1])
     qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kg.astype(jnp.float32)) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kg) * scale
     if logit_cap > 0.0:
         s = logit_cap * jnp.tanh(s / logit_cap)
     k_pos = jnp.arange(nb * ps)[None, :]                     # (1, K)
@@ -361,7 +388,7 @@ def paged_decode_attention_ref(
         valid &= k_pos > posb - window
     s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgk,bkhd->bhgd", p, vg.astype(jnp.float32))
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, vg)
     return o.reshape(B, 1, Hq, v_pages.shape[-1]).astype(q.dtype)
 
 

@@ -323,6 +323,13 @@ def run_engine(args, cfg, step_cfg, rules, params,
     """Continuous batching: Poisson arrivals into the paged-KV engine."""
     greedy = args.temperature <= 0.0
     max_len = args.shared_prefix_len + args.prompt_len + args.gen
+    recompute_j = None
+    if args.host_tier and frost is not None:
+        # price page recompute at the analytic one-sequence sweep cost per
+        # token under full power — the demote-vs-evict rule then compares a
+        # page's D2H+H2D round trip against re-prefilling its rows
+        recompute_j = frost.device.estimate(
+            decode_workload(cfg, 1), 1.0).energy_j
     ecfg = EngineConfig(n_slots=args.n_slots, page_size=args.page_size,
                         max_len=max_len, decode_chunk=max(1, args.decode_chunk),
                         n_pages=args.n_pages, greedy=greedy,
@@ -334,7 +341,12 @@ def run_engine(args, cfg, step_cfg, rules, params,
                         preempt=not args.no_preempt,
                         max_skip=max(0, args.max_skip),
                         kv_splits=_parse_kv_splits(args.kv_splits),
-                        decode_k_chunk=max(1, args.decode_k_chunk))
+                        decode_k_chunk=max(1, args.decode_k_chunk),
+                        kv_dtype=args.kv_dtype,
+                        host_tier=args.host_tier,
+                        host_pages=args.host_pages,
+                        transfer_j_per_byte=args.transfer_j_per_byte,
+                        recompute_j_per_token=recompute_j)
     # effective tokens per slot-step: 1.0 plain; under speculation the
     # on_chunk hook keeps a running estimate (accepted + bonus per sweep) so
     # the admission policy prices occupancy at the throughput actually
@@ -462,6 +474,10 @@ def run_engine(args, cfg, step_cfg, rules, params,
               f"{rep.prompt_tokens} prompt tokens restored "
               f"({rep.prefill_tokens_saved} saved), "
               f"{rep.n_preemptions} preemptions{j_avoid}")
+    if ecfg.host_tier:
+        print(f"[serve] kv tier: {engine.kv_dtype} pages, "
+              f"{rep.n_demotions} paged out / {rep.n_promotions} paged in, "
+              f"transfer {rep.transfer_j:.3g} J (in the J/token ledger)")
     print(f"[serve] latency p50 {lat[50]:.0f} / p95 {lat[95]:.0f} steps; "
           f"queue wait mean {np.mean(waits):.1f} steps"
           if waits else "[serve] nothing admitted")
@@ -515,6 +531,19 @@ def main():
     ap.add_argument("--n-pages", type=int, default=None,
                     help="KV page pool size (default: fully provisioned; "
                          "smaller pools exercise preemption/requeue)")
+    ap.add_argument("--kv-dtype", choices=("bfloat16", "int8"),
+                    default="bfloat16",
+                    help="KV page storage: int8 packs pages with per-row "
+                         "fp32 scales, dequant fused into the decode sweeps "
+                         "(dense-GQA families; others warn and fall back)")
+    ap.add_argument("--host-tier", action="store_true",
+                    help="page cold prefix-cache pages out to a host-memory "
+                         "tier instead of dropping them (poisson mode)")
+    ap.add_argument("--host-pages", type=int, default=None,
+                    help="host-tier page budget (default: unbounded)")
+    ap.add_argument("--transfer-j-per-byte", type=float, default=1e-9,
+                    help="modelled D2H/H2D transfer energy, J per byte, "
+                         "charged into the serving J/token ledger")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help=">0: every prompt = pooled shared head of this "
                          "length + unique suffix (both traffic modes)")

@@ -13,6 +13,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.kernels import ops
 from repro.models import common
 from repro.models.config import ModelConfig
@@ -169,9 +170,19 @@ def gqa_decode_paged(params, x, pos, cache_kv, block_tables, cfg: ModelConfig,
     The new k/v row is scattered into physical row
     ``block_tables[b, pos[b] // ps] * ps + pos[b] % ps`` of the flattened
     pool — slots parked on their scratch page by the engine overwrite that
-    scratch harmlessly."""
+    scratch harmlessly.
+
+    ``cache_kv`` may also be a 4-tuple ``(k_pages, v_pages, k_scales,
+    v_scales)`` (int8 pools, per-row fp32 scales): the new row is
+    quantized per (kv-head) row before the scatter, its scale lands at
+    the same physical row, and the scales ride into the attention sweep
+    for fused dequant.  Returns the cache in the same arity it came."""
     adt = x.dtype
-    k_pages, v_pages = cache_kv
+    if len(cache_kv) == 4:
+        k_pages, v_pages, k_scales, v_scales = cache_kv
+    else:
+        k_pages, v_pages = cache_kv
+        k_scales = v_scales = None
     P, ps = k_pages.shape[0], k_pages.shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(adt))
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(adt))
@@ -181,19 +192,30 @@ def gqa_decode_paged(params, x, pos, cache_kv, block_tables, cfg: ModelConfig,
     k = common.apply_rope_partial(k, posb, cfg.rope_theta, cfg.rope_fraction)
     page = jnp.take_along_axis(block_tables, pos[:, None] // ps, axis=1)[:, 0]
     row = page * ps + pos % ps                             # (B,)
+    k_row, v_row = k[:, 0], v[:, 0]                        # (B, Hkv, hd)
+    if k_scales is not None:
+        k_row, ks_row = quant.quantize_int8_rows(k_row)
+        v_row, vs_row = quant.quantize_int8_rows(v_row)
+        ks_flat = k_scales.reshape(P * ps, *k_scales.shape[2:])
+        vs_flat = v_scales.reshape(P * ps, *v_scales.shape[2:])
+        k_scales = ks_flat.at[row].set(ks_row).reshape(k_scales.shape)
+        v_scales = vs_flat.at[row].set(vs_row).reshape(v_scales.shape)
     k_flat = k_pages.reshape(P * ps, *k_pages.shape[2:])
     v_flat = v_pages.reshape(P * ps, *v_pages.shape[2:])
-    k_flat = k_flat.at[row].set(k[:, 0].astype(k_flat.dtype))
-    v_flat = v_flat.at[row].set(v[:, 0].astype(v_flat.dtype))
+    k_flat = k_flat.at[row].set(k_row.astype(k_flat.dtype))
+    v_flat = v_flat.at[row].set(v_row.astype(v_flat.dtype))
     k_pages = k_flat.reshape(k_pages.shape)
     v_pages = v_flat.reshape(v_pages.shape)
     scale = cfg.query_scale or cfg.resolved_head_dim ** -0.5
     o = ops.paged_decode_attention(q, k_pages, v_pages, block_tables, pos,
                                    window=window,
                                    logit_cap=cfg.attn_logit_softcap,
-                                   scale=scale, policy=policy)
+                                   scale=scale, policy=policy,
+                                   k_scale=k_scales, v_scale=v_scales)
     o = _mask_padded_heads(o, cfg)
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
+    if k_scales is not None:
+        return out, (k_pages, v_pages, k_scales, v_scales)
     return out, (k_pages, v_pages)
 
 
@@ -237,9 +259,24 @@ def gqa_verify_paged(params, x, pos, cache_kv, block_tables, cfg: ModelConfig,
     prefill** (``transformer.prefill_suffix``): a prompt-suffix chunk at
     positions ``pos .. pos+Q-1`` attending to a prefix the cache already
     holds (possibly on pages shared read-only with other slots) is the
-    same computation with every row "accepted" at commit time."""
+    same computation with every row "accepted" at commit time.
+
+    ``cache_kv`` may be the 4-tuple int8 form (see ``gqa_decode_paged``);
+    the scales are read-only here — pending rows stay unquantized and are
+    quantized (if at all) by ``commit_spec_paged``.  The SWEEP, however,
+    must see the in-flight rows at cache precision: a decode step commits
+    its row before attending (so it reads the dequantized value), and a
+    chunk boundary moves rows between "committed" and "in-flight" — if
+    the in-flight side rode through raw, logits would depend on where the
+    chunk boundary fell and requeue replay would not be bit-exact.  So the
+    candidates are round-tripped through the row quantizer here, exactly
+    the (q, scale) pair the commit will write."""
     adt = x.dtype
-    k_pages, v_pages = cache_kv
+    if len(cache_kv) == 4:
+        k_pages, v_pages, k_scales, v_scales = cache_kv
+    else:
+        k_pages, v_pages = cache_kv
+        k_scales = v_scales = None
     Q = x.shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(adt))
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(adt))
@@ -248,10 +285,17 @@ def gqa_verify_paged(params, x, pos, cache_kv, block_tables, cfg: ModelConfig,
     q = common.apply_rope_partial(q, posq, cfg.rope_theta, cfg.rope_fraction)
     k = common.apply_rope_partial(k, posq, cfg.rope_theta, cfg.rope_fraction)
     scale = cfg.query_scale or cfg.resolved_head_dim ** -0.5
-    o = ops.paged_verify_attention(q, k_pages, v_pages, k, v, block_tables,
+    if k_scales is not None:
+        k_sweep = quant.dequantize_int8_rows(*quant.quantize_int8_rows(k))
+        v_sweep = quant.dequantize_int8_rows(*quant.quantize_int8_rows(v))
+    else:
+        k_sweep, v_sweep = k, v
+    o = ops.paged_verify_attention(q, k_pages, v_pages, k_sweep, v_sweep,
+                                   block_tables,
                                    pos, window=window,
                                    logit_cap=cfg.attn_logit_softcap,
-                                   scale=scale, policy=policy)
+                                   scale=scale, policy=policy,
+                                   k_scale=k_scales, v_scale=v_scales)
     o = _mask_padded_heads(o, cfg)
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
     return out, (k, v)

@@ -25,6 +25,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.kernels import ops
 from repro.models import attention as attn
 from repro.models import common, ssm
@@ -414,11 +415,21 @@ def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
     hd).  ``block_tables[s, j]`` is the physical page holding slot s's
     logical block j (positions [j*ps, (j+1)*ps)); the engine parks free
     slots on a reserved per-slot scratch page so decode needs no validity
-    branch.  ``pos`` is per-slot — the batch is ragged by construction."""
+    branch.  ``pos`` is per-slot — the batch is ragged by construction.
+
+    ``dtype="int8"`` selects the quantized storage mode: int8 pools plus
+    per-ROW-per-kv-head fp32 scale leaves ``k_scale``/``v_scale`` of shape
+    (n_units, n_pages, page_size, Hkv, 1).  Rows are quantized at write
+    time (decode scatter / speculative commit) and dequantized inside the
+    attention sweep; a row, once written, never rescales, so page-level
+    sharing and snapshots stay bit-stable.  The cache *structure* carries
+    the mode — downstream seams discriminate on ``"k_scale" in unit``,
+    which is static under jit."""
     if not supports_paged_cache(cfg):
         raise ValueError(f"{cfg.name}: paged KV cache supports dense GQA "
                          "families only (no ssm/mla/window/hybrid)")
-    adt = common.dt(dtype)
+    quantized = dtype == "int8"
+    adt = jnp.int8 if quantized else common.dt(dtype)
     hd = cfg.resolved_head_dim
     nu, u = n_units(cfg), unit_size(cfg)
     hkv = cfg.padded_kv_heads
@@ -428,6 +439,12 @@ def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
             "v": jnp.zeros((nu, n_pages, page_size, hkv, hd), adt)}
         for i in range(u)
     }
+    if quantized:
+        for sub in units.values():
+            sub["k_scale"] = jnp.zeros((nu, n_pages, page_size, hkv, 1),
+                                       jnp.float32)
+            sub["v_scale"] = jnp.zeros((nu, n_pages, page_size, hkv, 1),
+                                       jnp.float32)
     return {"pos": jnp.zeros((n_slots,), jnp.int32),
             "block_tables": jnp.zeros((n_slots, max_blocks), jnp.int32),
             "units": units}
@@ -539,12 +556,21 @@ def _block_decode(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *,
                                  constrain=ctx.constrain)
         c = {"lat": lat}
     elif block_tables is not None:
-        a, (k, v) = attn.gqa_decode_paged(blk["attn"], h, pos,
-                                          (c["k"], c["v"]), block_tables,
-                                          cfg, window=window,
-                                          policy=ctx.kernel_policy,
-                                          constrain=ctx.constrain)
-        c = {"k": k, "v": v}
+        if "k_scale" in c:       # int8 pools: thread the scale leaves
+            kv_in = (c["k"], c["v"], c["k_scale"], c["v_scale"])
+            a, kv_out = attn.gqa_decode_paged(blk["attn"], h, pos, kv_in,
+                                              block_tables, cfg,
+                                              window=window,
+                                              policy=ctx.kernel_policy,
+                                              constrain=ctx.constrain)
+            c = dict(zip(("k", "v", "k_scale", "v_scale"), kv_out))
+        else:
+            a, (k, v) = attn.gqa_decode_paged(blk["attn"], h, pos,
+                                              (c["k"], c["v"]), block_tables,
+                                              cfg, window=window,
+                                              policy=ctx.kernel_policy,
+                                              constrain=ctx.constrain)
+            c = {"k": k, "v": v}
     else:
         a, (k, v) = attn.gqa_decode(blk["attn"], h, pos, (c["k"], c["v"]),
                                     cfg, window=window,
@@ -614,8 +640,10 @@ def _block_verify(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *,
     writing the cache."""
     h = _norm(x, blk["norm1"], cfg)
     if block_tables is not None:
-        a, kv_new = attn.gqa_verify_paged(blk["attn"], h, pos,
-                                          (c["k"], c["v"]), block_tables,
+        kv_in = ((c["k"], c["v"], c["k_scale"], c["v_scale"])
+                 if "k_scale" in c else (c["k"], c["v"]))
+        a, kv_new = attn.gqa_verify_paged(blk["attn"], h, pos, kv_in,
+                                          block_tables,
                                           cfg, window=window,
                                           policy=ctx.kernel_policy,
                                           constrain=ctx.constrain)
@@ -731,12 +759,18 @@ def commit_spec_paged(cache, pending, n_accept, active, cfg: ModelConfig):
     """Paged commit: per-slot accepted counts (B,) — every engine slot
     keeps its own prefix.  Accepted rows scatter through the block table
     into the shared pools; rejected or inactive rows route out of bounds
-    and drop.  Parked slots neither write nor advance."""
+    and drop.  Parked slots neither write nor advance.
+
+    Quantized caches (``"k_scale" in unit``) quantize the pending rows
+    per-row at commit time and scatter the int8 rows plus their fp32
+    scales through the same index — dropped rows drop both halves, so a
+    row's (q, scale) pair is always written atomically."""
     pos = cache["pos"]                                       # (B,)
     bt = cache["block_tables"]
     new_units = {}
     for name, c in cache["units"].items():
         pend = pending[name]
+        quantized = "k_scale" in c
         nu, B, Q = pend["k"].shape[0], pend["k"].shape[1], pend["k"].shape[2]
         P, ps = c["k"].shape[1], c["k"].shape[2]
         i = jnp.arange(Q)[None, :]                           # (1, Q)
@@ -746,14 +780,22 @@ def commit_spec_paged(cache, pending, n_accept, active, cfg: ModelConfig):
         row = page * ps + posq % ps
         ok = (i <= n_accept[:, None]) & (active[:, None] > 0)
         rows = jnp.where(ok, row, P * ps).reshape(-1)        # OOB dropped
-        new = {}
-        for key in ("k", "v"):
-            pool = c[key]                                    # (nu, P, ps, h, d)
+
+        def scatter(pool, vals, rows=rows, nu=nu, B=B, Q=Q, P=P, ps=ps):
             flat = pool.reshape(nu, P * ps, *pool.shape[3:])
             flat = flat.at[:, rows].set(
-                pend[key].astype(flat.dtype).reshape(
-                    nu, B * Q, *pend[key].shape[3:]), mode="drop")
-            new[key] = flat.reshape(pool.shape)
+                vals.astype(flat.dtype).reshape(nu, B * Q, *vals.shape[3:]),
+                mode="drop")
+            return flat.reshape(pool.shape)
+
+        new = {}
+        for key in ("k", "v"):
+            if quantized:
+                qrows, srows = quant.quantize_int8_rows(pend[key])
+                new[key] = scatter(c[key], qrows)
+                new[key + "_scale"] = scatter(c[key + "_scale"], srows)
+            else:
+                new[key] = scatter(c[key], pend[key])
         new_units[name] = new
     adv = jnp.where(active > 0, n_accept + 1, 0)
     return {"pos": pos + adv, "block_tables": bt, "units": new_units}

@@ -1,0 +1,57 @@
+"""Shared int8 quantization helpers.
+
+One implementation serves two very different consumers:
+
+  * the gradient-compression path (``runtime/compress.py``): per-TENSOR
+    symmetric scales — a whole gradient tensor shares one fp32 scale, the
+    error-feedback loop telescopes the bias away.
+  * the quantized KV-cache path (``serving`` + ``kernels``): per-ROW
+    symmetric scales — each (token, kv-head) row of a page pool carries
+    its own fp32 scale over head_dim.  Per-row (not per-page) matters
+    because decode appends ONE row at a time: a page-granular scale would
+    have to re-quantize every committed row in the page whenever a new
+    outlier row lands, breaking the bit-stability the prefix cache and
+    snapshot/restore rely on.  A row, once written, never rescales.
+
+Both are symmetric (no zero point): ``q = round(x / scale)`` clipped to
+[-127, 127], ``scale = max|x| / 127``.  Dequant is ``q * scale`` in fp32 —
+exactly the multiply the fused-dequant decode kernels perform on each
+block after the int8 -> fp32 cast (see kernels/decode_attention.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8: returns (q, scale) with scalar scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_int8_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 over the LAST axis.
+
+    Returns ``(q, scale)`` with ``q`` shaped like ``x`` (int8) and
+    ``scale`` shaped ``x.shape[:-1] + (1,)`` (fp32) — the KV-pool layout,
+    where the last axis is head_dim and every leading index is one
+    (page, row, kv-head) cache row.  All-zero rows get scale 1e-12/127
+    and quantize to exact zeros, so untouched pool rows stay bit-stable."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_int8_rows` (broadcasts the (..., 1)
+    scale over head_dim)."""
+    return q.astype(jnp.float32) * scale

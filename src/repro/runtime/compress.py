@@ -18,17 +18,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# the int8 codec lives in repro.quant (shared with the quantized-KV-cache
+# path); re-exported here so existing callers keep importing from compress
+from repro.quant import dequantize_int8, quantize_int8
 
-def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Per-tensor symmetric int8: returns (q, scale)."""
-    xf = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+__all__ = ["quantize_int8", "dequantize_int8", "compress_residual",
+           "compressed_psum", "init_error_state",
+           "make_compressed_dp_allreduce"]
 
 
 def compress_residual(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:

@@ -40,7 +40,8 @@ class StepConfig:
 
 def with_decode_policy(step_cfg: StepConfig, *,
                        kv_splits: str | int | None = None,
-                       decode_k_chunk: int | None = None) -> StepConfig:
+                       decode_k_chunk: int | None = None,
+                       kv_dtype: str | None = None) -> StepConfig:
     """Return ``step_cfg`` with decode-sweep knobs swapped on its
     ``KernelPolicy`` (both dataclasses are frozen, hence the replace
     dance).  ``None`` leaves a knob at its current value — callers thread
@@ -50,6 +51,8 @@ def with_decode_policy(step_cfg: StepConfig, *,
         repl["kv_splits"] = kv_splits
     if decode_k_chunk is not None:
         repl["decode_k_chunk"] = int(decode_k_chunk)
+    if kv_dtype is not None:
+        repl["kv_dtype"] = str(kv_dtype)
     if not repl:
         return step_cfg
     policy = dataclasses.replace(step_cfg.kernel_policy, **repl)

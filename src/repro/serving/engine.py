@@ -28,6 +28,13 @@ chunk's energy in joules (or ``None``).  Energy is attributed to requests
 in proportion to their *kept* tokens, so J/token charges only occupied
 slots — utilisation-honest under partial occupancy.
 
+KV storage is tiered (``EngineConfig.kv_dtype`` / ``host_tier``): int8
+pages with per-row fp32 scales quarter the device footprint of a page
+(dequant fused into the decode sweeps), and cold prefix-cache pages can
+demote to a host-memory pool instead of being dropped — paged back in on
+the next prefix hit, with the modelled D2H/H2D energy charged into the
+same J/token ledger (see docs/prefix_cache.md, "KV memory hierarchy").
+
 Speculative mode (``EngineConfig.spec_k > 0``): each chunk iteration
 becomes a K+1-token verify step (draft -> verify -> accept -> commit,
 in-scan, per-slot accepted counts — see docs/speculative_decoding.md), the
@@ -47,7 +54,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import quant
 from repro.checkpoint.store import CheckpointManager, restore_pytree
+from repro.kernels import ops
 from repro.models import transformer as tfm
 from repro.runtime.chaos import FaultInjector, corrupt_paged_kv
 from repro.runtime.speculate import get_drafter
@@ -109,6 +118,22 @@ class EngineConfig:
     # the split-K block for the ring kernels / page-sized DMA elsewhere
     kv_splits: str | int = "auto"
     decode_k_chunk: int = 256
+    # quantized KV pages: "int8" stores every page pool as int8 with
+    # per-row fp32 scales and the dequant fused into the split-KV sweeps
+    # (see docs/prefix_cache.md, "KV memory hierarchy").  Dense-GQA
+    # families only — elsewhere the engine warns once (RuntimeWarning) and
+    # keeps cache_dtype.  The default leaves the decode path byte-identical
+    # to unquantized serving.
+    kv_dtype: str = "bfloat16"
+    # host-memory page-out: cold trie-held pages demote to a host pool
+    # instead of being dropped, and a later prefix hit pages them back in.
+    # Each direction is charged at transfer_j_per_byte into the energy
+    # ledger; with recompute_j_per_token set, a page is only demoted when
+    # the round trip is cheaper than re-prefilling its rows.
+    host_tier: bool = False
+    host_pages: int | None = None       # None: unbounded host pool
+    transfer_j_per_byte: float = 1e-9
+    recompute_j_per_token: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +178,11 @@ class EngineReport:
     degraded_steps: int = 0       # clock steps spent degraded (derate/cap)
     requeued_requests: int = 0    # in-flight requests recovered via requeue
     n_pages_quarantined: int = 0  # pages withheld after corruption repair
+    # two-tier KV hierarchy: modelled page-out/page-in energy (already
+    # included in energy_j; broken out so benchmarks can see the split)
+    transfer_j: float = 0.0
+    n_demotions: int = 0          # device pages paged out to the host tier
+    n_promotions: int = 0         # host pages paged back in on a prefix hit
 
     @property
     def tok_per_s(self) -> float:
@@ -246,13 +276,25 @@ class ServeEngine:
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.params = params
+        # quantized KV pages ride the paged dense-GQA verify/commit seam;
+        # other families warn once and keep the unquantized pools
+        kv_dtype = engine_cfg.cache_dtype
+        if engine_cfg.kv_dtype == "int8":
+            if tfm.supports_speculative(cfg):
+                kv_dtype = "int8"
+            else:
+                ops.warn_kv_dtype_fallback(
+                    cfg.name, "int8 pages ride the paged dense-GQA "
+                    "verify/commit seam")
+        self.kv_dtype = kv_dtype
         # engine config owns the decode-sweep operating point: fold it onto
         # the kernel policy so every compiled loop (decode, verify, suffix
-        # prefill) sees the same kv_splits / block choice
+        # prefill) sees the same kv_splits / block / storage-dtype choice
         self.step_cfg = with_decode_policy(
             step_cfg or StepConfig(remat="none"),
             kv_splits=engine_cfg.kv_splits,
-            decode_k_chunk=engine_cfg.decode_k_chunk)
+            decode_k_chunk=engine_cfg.decode_k_chunk,
+            kv_dtype=kv_dtype)
         self.rules = rules
         self.on_chunk = on_chunk
         # on_prefill(n_computed, n_saved) -> J for one join's prefill (or
@@ -274,7 +316,11 @@ class ServeEngine:
                                page_size=engine_cfg.page_size,
                                max_len=engine_cfg.max_len,
                                n_pages=engine_cfg.n_pages,
-                               dtype=engine_cfg.cache_dtype)
+                               dtype=kv_dtype,
+                               host_tier=engine_cfg.host_tier,
+                               host_pages=engine_cfg.host_pages,
+                               transfer_j_per_byte=engine_cfg.transfer_j_per_byte,
+                               recompute_j_per_token=engine_cfg.recompute_j_per_token)
         # prefix sharing rides the speculative verify seam (suffix chunks
         # are scored by paged_verify_attention), so it covers the same
         # dense-GQA families; multi-codebook et al. keep the legacy path
@@ -286,6 +332,11 @@ class ServeEngine:
                                    lazy=engine_cfg.preempt,
                                    prefix=self._use_prefix)
         self.cache = self.kv.make_cache()
+        self._tier_restore = None            # AOT page-in scatter (H2D)
+        self._transfer_seen = 0.0            # kv.transfer_j folded so far
+        if engine_cfg.host_tier:
+            self.kv.attach_tier(self._fetch_page, self._restore_page,
+                                self._cache_page_bytes())
         self._ctx = make_run_ctx(cfg, rules, self.step_cfg)
         # AOT-compiled paged chunk loops, keyed (chunk_len, speculative):
         # graceful degradation swaps in a shorter / non-speculative loop
@@ -345,22 +396,80 @@ class ServeEngine:
             self._prefills[bucket] = jax.jit(prefill)
         return self._prefills[bucket]
 
+    # -- host tier (two-tier KV hierarchy; docs/prefix_cache.md) -------------
+    def _cache_page_bytes(self) -> int:
+        """Device bytes of ONE page across every unit pool — scale pools
+        included in int8 mode — the unit the transfer-energy model charges
+        per page-out / page-in direction."""
+        total = 0
+        for c in self.cache["units"].values():
+            for pool in c.values():                # (nu, P, ps, hkv, w)
+                total += (pool.size // pool.shape[1]) * pool.dtype.itemsize
+        return total
+
+    def _fetch_page(self, page: int) -> dict:
+        """D2H: copy one device page's rows out of every unit pool into
+        host-memory numpy blobs (keys ``unit/pool``)."""
+        return {f"{name}/{key}": np.asarray(pool[:, page])
+                for name, c in self.cache["units"].items()
+                for key, pool in c.items()}
+
+    def _restore_page(self, page: int, blob: dict) -> None:
+        """H2D: scatter a fetched blob back into device page ``page``.
+        One donated executable (page is a traced scalar) serves every
+        promotion."""
+        if self._tier_restore is None:
+            def restore(cache, page, blob):
+                units = {name: {key: pool.at[:, page].set(
+                    blob[f"{name}/{key}"].astype(pool.dtype))
+                    for key, pool in c.items()}
+                    for name, c in cache["units"].items()}
+                return {**cache, "units": units}
+
+            self._tier_restore = jax.jit(restore, donate_argnums=(0,))
+        self.cache = self._tier_restore(
+            self.cache, jnp.asarray(page, jnp.int32),
+            {k: jnp.asarray(v) for k, v in blob.items()})
+
+    def _sync_transfer(self) -> None:
+        """Fold tier-transfer energy accrued in the paged-KV manager since
+        the last sync into the run ledger.  Modelled, not measured: the
+        manager charges bytes x J/byte as demotions/promotions happen; the
+        engine surfaces the delta in ``energy_j`` (and breaks it out as
+        ``transfer_j``) so J/token includes the cost of paging."""
+        delta = self.kv.transfer_j - self._transfer_seen
+        if delta > 0.0:
+            self._transfer_seen = self.kv.transfer_j
+            self._report.energy_j += delta
+            self._report.transfer_j += delta
+
     def _inject(self, bucket: int):
         """Scatter a (padded) prefill cache into a slot's pages: one fused
         donated update across every unit pool, keyed by flat row ids from
-        ``PagedKVCache.inject_rows`` (pad rows dropped)."""
+        ``PagedKVCache.inject_rows`` (pad rows dropped).  Quantized pools
+        ("k_scale" present) quantize the prefill rows on the way in — the
+        same per-row int8 packing ``commit_spec_paged`` applies on the
+        decode path, so cold-prefilled and decoded rows are
+        indistinguishable."""
         if bucket not in self._injects:
             def inject(cache, prefill_units, rows):
+                def scatter(pool, vals):
+                    nu = pool.shape[0]
+                    flat = pool.reshape(nu, -1, *pool.shape[3:])
+                    flat = flat.at[:, rows].set(
+                        vals.astype(flat.dtype), mode="drop")
+                    return flat.reshape(pool.shape)
+
                 units = {}
                 for name, c in cache["units"].items():
                     src, new = prefill_units[name], {}
                     for key in ("k", "v"):
-                        pool = c[key]                # (nu, P, ps, hkv, hd)
-                        nu = pool.shape[0]
-                        flat = pool.reshape(nu, -1, *pool.shape[3:])
-                        flat = flat.at[:, rows].set(
-                            src[key][:, 0].astype(flat.dtype), mode="drop")
-                        new[key] = flat.reshape(pool.shape)
+                        vals = src[key][:, 0]      # (nu, bucket, hkv, hd)
+                        if key + "_scale" in c:
+                            vals, scales = quant.quantize_int8_rows(vals)
+                            new[key + "_scale"] = scatter(
+                                c[key + "_scale"], scales)
+                        new[key] = scatter(c[key], vals)
                     units[name] = new
                 return {**cache, "units": units}
 
@@ -385,8 +494,7 @@ class ServeEngine:
                 units = {}
                 for name, c in cache["units"].items():
                     new = {}
-                    for key in ("k", "v"):
-                        pool = c[key]                # (nu, P, ps, hkv, hd)
+                    for key, pool in c.items():      # k/v (+ scales in int8)
                         nu, P = pool.shape[0], pool.shape[1]
                         flat = pool.reshape(nu, P * ps, *pool.shape[3:])
                         vals = flat[:, src * ps + i]
@@ -747,6 +855,9 @@ class ServeEngine:
         eng.cache = tree["cache"]
         eng.kv.load_state(meta["kv"])
         eng.kv.verify_invariants(repair=True)
+        # transfer energy accrued before the crash is already inside the
+        # restored report — only charge what happens from here on
+        eng._transfer_seen = eng.kv.transfer_j
         eng._results = {int(rid): RequestResult(**rec)
                         for rid, rec in meta["results"].items()}
         eng._req_order = [int(r) for r in meta["req_order"]]
@@ -813,6 +924,7 @@ class ServeEngine:
         self._chunk_idx = 0
         self._occ_sum = 0.0
         self._report = EngineReport(results=[], spec_k=self.ecfg.spec_k)
+        self._transfer_seen = self.kv.transfer_j
         self._degrade_level = 0
         self._degrade_until = -1
         self._cap_frac = 1.0
@@ -858,6 +970,10 @@ class ServeEngine:
                 # grows/preempts but always leaves >= 1 slot active (the
                 # last survivor raises rather than self-preempting)
                 self._grow_pages(t0, eff_chunk * (eff_k + 1))
+            # joins may have paged prefixes back in, growth may have paged
+            # cold pages out — fold the modelled transfer energy in now so
+            # every ChunkStats-adjacent ledger read sees it
+            self._sync_transfer()
             report.prefill_wall_s += time.perf_counter() - t_p
 
             if self.scheduler.n_active == 0:
@@ -964,6 +1080,9 @@ class ServeEngine:
         # still fire (an engine_crash here restores + replays the tail —
         # results are only authoritative once this returns)
         self._apply_faults(t0)
+        self._sync_transfer()
+        report.n_demotions = self.kv.n_demotions
+        report.n_promotions = self.kv.n_promotions
         report.occupancy = self._occ_sum / max(report.n_chunks, 1)
         report.results = [self._results[rid] for rid in self._req_order]
         return report

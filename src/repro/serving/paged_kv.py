@@ -34,6 +34,22 @@ trie leaves are evicted (leaf-first keeps the index prefix-closed); a page
 is returned to the free list exactly when its last holder — slot or trie —
 lets go.
 
+Host-memory tier (two-tier hierarchy)
+-------------------------------------
+With ``host_tier=True`` (and device callbacks attached via
+:meth:`attach_tier`), eviction of a trie-only page becomes *demotion*:
+the page's KV rows are fetched to a host-memory blob (numpy), the device
+page is freed, and the trie node survives with ``page = HOST_PAGE`` — a
+later prefix hit *promotes* it back onto a fresh device page instead of
+recomputing the prefill.  Transfers are charged into a modelled energy
+ledger (``bytes x transfer_j_per_byte``, read by the engine per chunk),
+and a page is only demoted when the round trip is cheaper than
+recomputing its rows (``_should_demote``); otherwise it is dropped as
+before.  A demoted page lives in exactly one tier: its node holds no
+device refcount, contributes nothing to ``n_evictable``, and costs one
+device page of *headroom* when a prefix match wants it back — which is
+exactly how ``can_admit_with_prefix`` accounts for it.
+
 Invariants the decode path relies on:
 
   * pages 0..n_slots-1 are reserved per-slot *scratch* pages; a free slot's
@@ -71,11 +87,41 @@ class CopySpec:
     n_rows: int
 
 
+# sentinel for a trie node whose KV lives in the host tier, not on device
+HOST_PAGE = -2
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """np.dtype by name, including the ml_dtypes extension types (numpy
+    does not know "bfloat16" natively)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _blob_to_json(arr: np.ndarray) -> dict:
+    a = np.asarray(arr)
+    # floats round-trip exactly through their bit pattern, not repr
+    bits = a.view(np.uint8)
+    return {"data": bits.ravel().tolist(), "dtype": str(a.dtype),
+            "shape": list(a.shape)}
+
+
+def _blob_from_json(blob: dict) -> np.ndarray:
+    dt = _np_dtype(blob["dtype"])
+    a = np.asarray(blob["data"], np.uint8).view(dt)
+    return a.reshape(blob["shape"])
+
+
 class _TrieNode:
     """One full page of cached prefix: ``tokens`` (page_size ids), the
     physical page holding their KV, and children keyed on the next page's
-    token bytes."""
-    __slots__ = ("key", "tokens", "page", "parent", "children", "last_used")
+    token bytes.  A demoted node has ``page == HOST_PAGE`` and carries the
+    page's rows in ``host_data`` (unit/key -> numpy blob) instead."""
+    __slots__ = ("key", "tokens", "page", "parent", "children", "last_used",
+                 "host_data")
 
     def __init__(self, key, tokens, page, parent):
         self.key = key
@@ -84,13 +130,17 @@ class _TrieNode:
         self.parent = parent
         self.children: dict[bytes, _TrieNode] = {}
         self.last_used = 0
+        self.host_data: dict | None = None
 
 
 class PagedKVCache:
     """Host-side page allocator for the paged decode cache."""
 
     def __init__(self, cfg, *, n_slots: int, page_size: int, max_len: int,
-                 n_pages: int | None = None, dtype: str = "bfloat16"):
+                 n_pages: int | None = None, dtype: str = "bfloat16",
+                 host_tier: bool = False, host_pages: int | None = None,
+                 transfer_j_per_byte: float = 1e-9,
+                 recompute_j_per_token: float | None = None):
         if not tfm.supports_paged_cache(cfg):
             raise ValueError(f"{cfg.name}: paged KV cache supports dense "
                              "GQA families only (no ssm/mla/window/hybrid)")
@@ -118,6 +168,23 @@ class PagedKVCache:
         # free list — capacity degrades gracefully instead of serving a
         # poisoned page.
         self.quarantined: set[int] = set()
+        # host tier: demote-instead-of-evict for trie-only pages.  The
+        # device transfer callbacks arrive via attach_tier (the manager is
+        # layout-agnostic); until then demotion silently degrades to plain
+        # eviction even with host_tier=True.
+        self.host_tier = bool(host_tier)
+        self.host_pages = None if host_pages is None else int(host_pages)
+        self.transfer_j_per_byte = float(transfer_j_per_byte)
+        self.recompute_j_per_token = recompute_j_per_token if \
+            recompute_j_per_token is None else float(recompute_j_per_token)
+        self._fetch_page = None       # page -> {unit/key: np blob}   (D2H)
+        self._restore_page = None     # (page, blob) -> None          (H2D)
+        self._page_bytes = 0          # device bytes of one page (all units)
+        self.transfer_bytes_d2h = 0
+        self.transfer_bytes_h2d = 0
+        self.transfer_j = 0.0
+        self.n_demotions = 0
+        self.n_promotions = 0
 
     # -- device side --------------------------------------------------------
     def make_cache(self):
@@ -125,6 +192,69 @@ class PagedKVCache:
         return tfm.init_paged_cache(self.cfg, self.n_slots, self.n_pages,
                                     self.page_size, self.max_blocks,
                                     dtype=self.dtype)
+
+    # -- host tier ----------------------------------------------------------
+    def attach_tier(self, fetch_page, restore_page, page_bytes: int) -> None:
+        """Wire the device transfer callbacks: ``fetch_page(page)`` returns
+        the page's rows as a host blob (D2H), ``restore_page(page, blob)``
+        writes a blob back into a device page (H2D), ``page_bytes`` is the
+        device footprint of one page across every unit/layer (the quantity
+        the transfer-energy model charges per direction)."""
+        self._fetch_page = fetch_page
+        self._restore_page = restore_page
+        self._page_bytes = int(page_bytes)
+
+    @property
+    def _tier_ready(self) -> bool:
+        return self.host_tier and self._fetch_page is not None
+
+    def n_host_used(self) -> int:
+        """Demoted pages currently parked in the host tier."""
+        return sum(1 for node in self._all_nodes()
+                   if node.host_data is not None)
+
+    def _should_demote(self) -> bool:
+        """Demote-vs-evict energy rule: page out only when the full round
+        trip (D2H now + H2D on the future hit) costs less than recomputing
+        the page's rows from tokens.  With no recompute price configured,
+        transfer is assumed cheap (PCIe ~GB/s vs a prefill sweep) and cold
+        pages always demote."""
+        if self.recompute_j_per_token is None:
+            return True
+        round_trip = 2 * self._page_bytes * self.transfer_j_per_byte
+        return round_trip <= self.page_size * self.recompute_j_per_token
+
+    def _charge_transfer(self, n_bytes: int, *, h2d: bool) -> None:
+        if h2d:
+            self.transfer_bytes_h2d += n_bytes
+        else:
+            self.transfer_bytes_d2h += n_bytes
+        self.transfer_j += n_bytes * self.transfer_j_per_byte
+
+    def _demote(self, node: _TrieNode) -> None:
+        """Page out a trie-only node: fetch its rows to host memory, free
+        the device page, keep the trie entry alive at ``HOST_PAGE``."""
+        node.host_data = self._fetch_page(node.page)
+        self._charge_transfer(self._page_bytes, h2d=False)
+        self._unhold(node.page)
+        node.page = HOST_PAGE
+        self.n_demotions += 1
+
+    def _promote(self, node: _TrieNode, protect: set[int] | None = None) \
+            -> bool:
+        """Page a demoted node back onto a fresh device page (reclaiming
+        one if the free list is dry — ``protect`` guards the other nodes
+        of an in-flight prefix match from being cannibalised).  Returns
+        False when no device page can be found; the node stays demoted."""
+        if not self.free and not self._reclaim(1, protect=protect):
+            return False
+        page = self._take_free()            # refcount 1 = the trie's hold
+        self._restore_page(page, node.host_data)
+        self._charge_transfer(self._page_bytes, h2d=True)
+        node.page = page
+        node.host_data = None
+        self.n_promotions += 1
+        return True
 
     # -- refcount plumbing --------------------------------------------------
     def _hold(self, page: int) -> None:
@@ -192,33 +322,67 @@ class PagedKVCache:
             stack.extend(node.children.values())
         return out
 
-    def _evict_one(self) -> bool:
-        """Drop a trie leaf (leaf-first keeps the index prefix-closed):
-        prefer leaves whose page the trie alone holds (evicting those
-        actually frees a page), least-recently-used among them.  Frees the
-        page iff the trie was the last holder."""
-        leaves = self._leaves()
-        if not leaves:
-            return False
-        victim = min(leaves,
-                     key=lambda n: (self.refcount[n.page] > 1, n.last_used))
-        del victim.parent.children[victim.key]
-        self._unhold(victim.page)
-        return True
+    def _evict_one(self, protect: set[int] | None = None) -> bool:
+        """Surrender one trie-held device page.
 
-    def _reclaim(self, n_pages: int) -> bool:
-        """Evict trie entries until at least ``n_pages`` are free."""
+        When the host tier is live and the energy rule favours transfer,
+        the LRU *trie-only* node anywhere in the trie — leaf or interior —
+        *demotes*: its rows page out, the device page frees, the node
+        survives at ``HOST_PAGE``.  Demotion keeps the trie structurally
+        intact, so leaf-first does not apply; residency of a prefix may be
+        a patchwork across tiers and promotion restores matched nodes one
+        by one.  Otherwise the classic path drops the LRU leaf (leaf-first
+        keeps the *index* prefix-closed), freeing its page iff the trie was
+        the last holder; and when only demoted leaves remain, the LRU one
+        is dropped outright if that can eventually expose a resident page
+        (its host blob dies — the tier is a cache, not an archive).
+        ``protect`` exempts nodes of an in-flight prefix match.  Returns
+        False when nothing can go."""
+        protect = protect or set()
+        if (self._tier_ready and self._should_demote()
+                and (self.host_pages is None
+                     or self.n_host_used() < self.host_pages)):
+            cands = [n for n in self._all_nodes()
+                     if id(n) not in protect and n.page >= 0
+                     and self.refcount[n.page] == 1]
+            if cands:
+                self._demote(min(cands, key=lambda n: n.last_used))
+                return True
+        leaves = [n for n in self._leaves() if id(n) not in protect]
+        resident = [n for n in leaves if n.page >= 0]
+        if resident:
+            victim = min(resident, key=lambda n:
+                         (self.refcount[n.page] > 1, n.last_used))
+            del victim.parent.children[victim.key]
+            self._unhold(victim.page)
+            return True
+        # no resident leaf: dropping a demoted leaf frees no device page
+        # directly, but may expose a resident interior node as a new leaf —
+        # worth it only if such a node exists at all
+        demoted = [n for n in leaves if n.host_data is not None]
+        if demoted and self.n_evictable() > 0:
+            victim = min(demoted, key=lambda n: n.last_used)
+            del victim.parent.children[victim.key]
+            victim.host_data = None
+            return True
+        return False
+
+    def _reclaim(self, n_pages: int,
+                 protect: set[int] | None = None) -> bool:
+        """Evict/demote trie entries until at least ``n_pages`` are free."""
         while len(self.free) < n_pages:
-            if not self._evict_one():
+            if not self._evict_one(protect=protect):
                 return False
         return True
 
     def n_evictable(self) -> int:
-        """Pages the trie could surrender (trie is their only holder)."""
+        """Pages the trie could surrender (trie is their only holder).
+        Demoted nodes hold no device page and count for nothing here."""
         count, stack = 0, [self._root]
         while stack:
             node = stack.pop()
-            if node is not self._root and self.refcount[node.page] == 1:
+            if node is not self._root and node.page >= 0 \
+                    and self.refcount[node.page] == 1:
                 count += 1
             stack.extend(node.children.values())
         return count
@@ -235,15 +399,23 @@ class PagedKVCache:
         """Like ``can_admit`` but crediting pages the prefix cache already
         holds for ``tokens`` — sharing raises admissible concurrency.
         Matched pages are about to be *held*, not freed, so they must not
-        double-count as evictable headroom."""
+        double-count as evictable headroom.  Two-tier accounting: a
+        matched *demoted* page saves the prefill but still needs a fresh
+        device page to promote onto (+1 to need, nothing reserved); a
+        matched resident page whose only holder is the trie would have
+        counted as evictable headroom, so it is subtracted back out."""
         full, partial = self._match(tokens)
         n_blocks = self.pages_for(n_tokens)
         full = full[:n_blocks]
         need = n_blocks - len(full)
-        reserved = sum(1 for node in full if self.refcount[node.page] == 1)
-        if partial is not None and len(full) < n_blocks \
-                and self.refcount[partial[0].page] == 1:
-            reserved += 1
+        need += sum(1 for node in full if node.page < 0)
+        reserved = sum(1 for node in full
+                       if node.page >= 0 and self.refcount[node.page] == 1)
+        if partial is not None and len(full) < n_blocks:
+            if partial[0].page < 0:
+                need += 1
+            elif self.refcount[partial[0].page] == 1:
+                reserved += 1
         return need <= len(self.free) + self.n_evictable() - reserved
 
     def admit(self, slot: int, n_tokens: int) -> list[int]:
@@ -271,6 +443,24 @@ class PagedKVCache:
             partial = None
         if partial is not None and len(full) >= n_blocks:
             partial = None
+        # promote demoted matches back onto device pages, in prefix order;
+        # the first failed promotion truncates the match there (the rest of
+        # the prefix is unreachable without it).  The whole match is
+        # protected from reclaim-eviction while promotions run.
+        protect = {id(n) for n in full}
+        if partial is not None:
+            protect.add(id(partial[0]))
+        usable = []
+        for node in full:
+            if node.page < 0 and not self._promote(node, protect=protect):
+                partial = None
+                break
+            usable.append(node)
+        else:
+            if partial is not None and partial[0].page < 0 \
+                    and not self._promote(partial[0], protect=protect):
+                partial = None
+        full = usable
         shared = []
         for node in full:
             self._hold(node.page)
@@ -438,18 +628,29 @@ class PagedKVCache:
         """
         violations: list[str] = []
         free_set = set(self.free)
-        # 1. trie pages must be real, non-scratch, and not on the free list
+        # 1. trie pages must be real, non-scratch, and not on the free
+        # list; a node lives in exactly one tier — demoted (HOST_PAGE +
+        # host blob) or resident (valid device page, no blob)
         bad_nodes = []
         for node in self._all_nodes():
-            if not (self.n_slots <= node.page < self.n_pages):
+            if node.page == HOST_PAGE and node.host_data is not None:
+                continue                             # healthy demoted node
+            if node.page == HOST_PAGE:
+                violations.append("tier: demoted node lost its host blob")
+                bad_nodes.append(node)
+            elif not (self.n_slots <= node.page < self.n_pages):
                 violations.append(f"trie: node holds invalid page "
                                   f"{node.page}")
+                bad_nodes.append(node)
+            elif node.host_data is not None:
+                violations.append(f"tier: page {node.page} present in both "
+                                  "tiers (resident with a host blob)")
                 bad_nodes.append(node)
             elif node.page in free_set:
                 violations.append(f"trie: node points at freed page "
                                   f"{node.page} (stale)")
                 bad_nodes.append(node)
-        implicated = {n.page for n in bad_nodes}
+        implicated = {n.page for n in bad_nodes if n.page >= 0}
         if repair:
             for node in bad_nodes:
                 # drop the whole subtree: children cached *behind* a bad
@@ -483,6 +684,12 @@ class PagedKVCache:
                 violations.append(f"scratch: page {p} leaked into "
                                   "circulation")
                 implicated.add(p)
+        # 4. host-tier budget
+        if self.host_pages is not None:
+            used = self.n_host_used()
+            if used > self.host_pages:
+                violations.append(f"tier: {used} demoted pages exceed the "
+                                  f"host pool budget {self.host_pages}")
         if repair and violations:
             for p in implicated:
                 if exp[p] > 0:
@@ -518,13 +725,17 @@ class PagedKVCache:
         while queue:
             node, parent = queue.popleft()
             if node is not self._root:
-                nodes.append({
+                rec = {
                     "parent": parent,
                     "page": int(node.page),
                     "tokens": np.asarray(node.tokens).ravel().tolist(),
                     "dtype": str(np.asarray(node.tokens).dtype),
                     "last_used": int(node.last_used),
-                })
+                }
+                if node.host_data is not None:
+                    rec["host"] = {name: _blob_to_json(arr)
+                                   for name, arr in node.host_data.items()}
+                nodes.append(rec)
                 parent_idx = len(nodes) - 1
             else:
                 parent_idx = -1
@@ -541,6 +752,13 @@ class PagedKVCache:
             "quarantined": sorted(self.quarantined),
             "clock": self._clock,
             "trie": nodes,
+            "transfer": {
+                "bytes_d2h": self.transfer_bytes_d2h,
+                "bytes_h2d": self.transfer_bytes_h2d,
+                "transfer_j": self.transfer_j,
+                "n_demotions": self.n_demotions,
+                "n_promotions": self.n_promotions,
+            },
         }
 
     def load_state(self, state: dict) -> None:
@@ -567,8 +785,17 @@ class PagedKVCache:
                 else rebuilt[rec["parent"]]
             node = _TrieNode(key, tokens, int(rec["page"]), parent)
             node.last_used = int(rec["last_used"])
+            if "host" in rec:
+                node.host_data = {name: _blob_from_json(blob)
+                                  for name, blob in rec["host"].items()}
             parent.children[key] = node
             rebuilt.append(node)
+        xfer = state.get("transfer", {})
+        self.transfer_bytes_d2h = int(xfer.get("bytes_d2h", 0))
+        self.transfer_bytes_h2d = int(xfer.get("bytes_h2d", 0))
+        self.transfer_j = float(xfer.get("transfer_j", 0.0))
+        self.n_demotions = int(xfer.get("n_demotions", 0))
+        self.n_promotions = int(xfer.get("n_promotions", 0))
 
     @property
     def n_free(self) -> int:

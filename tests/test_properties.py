@@ -209,13 +209,22 @@ def _kv_check(kv):
         # tail rows beyond the allocation are parked on the slot's scratch
         assert (kv.tables[slot, len(pages):] == slot).all()
         assert (kv.tables[slot, :len(pages)] == pages).all()
+    from repro.serving.paged_kv import HOST_PAGE
+    n_host = 0
     stack = [kv._root]
     while stack:
         node = stack.pop()
         if node is not kv._root:
-            assert node.page >= kv.n_slots, "scratch page in the trie"
-            holders[node.page] += 1
+            if node.page == HOST_PAGE:        # demoted: host tier only
+                assert node.host_data is not None, "demoted node lost blob"
+                n_host += 1
+            else:
+                assert node.page >= kv.n_slots, "scratch page in the trie"
+                assert node.host_data is None, "page resident in both tiers"
+                holders[node.page] += 1
         stack.extend(node.children.values())
+    if kv.host_pages is not None:
+        assert n_host <= kv.host_pages, "host pool budget exceeded"
     for page, n in kv._copy_holds.items():
         assert n > 0
         holders[page] += n
@@ -289,6 +298,87 @@ def test_paged_kv_invariants_under_random_ops(seed):
         _kv_check(kv)
     # with every slot gone, only the trie holds pages — all evictable
     assert int((kv.refcount > 0).sum()) == kv.n_evictable()
+
+
+@_settings
+@given(st.integers(0, 10_000))
+def test_two_tier_invariants_under_random_ops(seed):
+    """Host-tier variant: the same random traffic against a two-tier pool
+    keeps both tiers sound — ``verify_invariants`` stays clean after every
+    op (no page in both tiers, refcounts exact, host budget respected),
+    ``can_admit_with_prefix`` returning True means the admission cannot
+    fail, every demotion fetches exactly one host blob, and a snapshot
+    round-trips both tiers bit-exactly (host blobs included)."""
+    from repro.configs import get_arch
+    from repro.serving import PagedKVCache
+    cfg = get_arch("smollm-135m").smoke
+    rng = np.random.default_rng(seed)
+    host_pages = int(rng.integers(0, 7)) or None
+    kv = PagedKVCache(cfg, n_slots=3, page_size=4, max_len=32,
+                      n_pages=3 + int(rng.integers(4, 12)),
+                      host_tier=True, host_pages=host_pages)
+    fetched = {"n": 0}
+    restored: list[int] = []
+
+    def fetch(page):                       # fake D2H: content tags the page
+        fetched["n"] += 1
+        return {"blk/k": np.full((4,), page, np.int32),
+                "stamp": np.asarray([fetched["n"]])}
+
+    def restore(page, blob):               # fake H2D
+        assert set(blob) == {"blk/k", "stamp"}
+        restored.append(int(page))
+
+    kv.attach_tier(fetch, restore, page_bytes=256)
+    prompts: dict[int, np.ndarray] = {}
+    for _ in range(40):
+        op = int(rng.integers(0, 5))
+        free_slots = [s for s in range(kv.n_slots) if s not in kv.allocated]
+        live = list(kv.allocated)
+        if op == 0 and free_slots:                   # admit (maybe promote)
+            slot = int(rng.choice(free_slots))
+            tokens = rng.integers(0, 3, size=int(rng.integers(1, 21)))
+            tokens = tokens.astype(np.int32)
+            n_alloc = min(len(tokens) + int(rng.integers(0, 8)), kv.max_len)
+            if kv.can_admit_with_prefix(tokens, n_alloc):
+                m, copy = kv.admit_with_prefix(slot, tokens, n_alloc)
+                assert 0 <= m <= len(tokens) - 1
+                prompts[slot] = tokens
+                if copy is not None:
+                    kv.copy_done(copy.src_page)
+        elif op == 1 and live:                       # ensure (grow)
+            slot = int(rng.choice(live))
+            kv.ensure(slot, int(rng.integers(1, kv.max_len + 1)))
+        elif op == 2 and live:                       # register prefix
+            slot = int(rng.choice(live))
+            t = prompts[slot]
+            kv.register_prefix(slot, t[:int(rng.integers(0, len(t) + 1))])
+        elif op == 3 and live:                       # release
+            slot = int(rng.choice(live))
+            kv.release(slot)
+            prompts.pop(slot, None)
+        elif op == 4 and live:                       # preempt = reg + rel
+            slot = int(rng.choice(live))
+            kv.register_prefix(slot, prompts[slot])
+            kv.release(slot)
+            prompts.pop(slot, None)
+        _kv_check(kv)
+        assert kv.verify_invariants() == []
+    assert kv.n_demotions == fetched["n"]
+    assert kv.n_promotions == len(restored)
+    assert kv.transfer_j == pytest.approx(
+        (kv.transfer_bytes_d2h + kv.transfer_bytes_h2d)
+        * kv.transfer_j_per_byte)
+    # snapshot/restore round-trips both tiers (host blobs included)
+    state = kv.state_dict()
+    kv2 = PagedKVCache(cfg, n_slots=3, page_size=4, max_len=32,
+                       n_pages=kv.n_pages, host_tier=True,
+                       host_pages=host_pages)
+    kv2.attach_tier(fetch, restore, page_bytes=256)
+    kv2.load_state(state)
+    assert kv2.verify_invariants() == []
+    assert kv2.n_host_used() == kv.n_host_used()
+    assert kv2.state_dict() == state
 
 
 # --------------------------------------------------------------------------
