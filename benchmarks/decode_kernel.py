@@ -25,6 +25,15 @@ RAISES (CI smoke runs this via ``benchmarks.run --only kernel``):
 
 Emits ``kernel.*`` CSV lines and a git-SHA-stamped ``BENCH_kernel.json``
 trajectory artifact (via benchmarks.run).
+
+``main_mla`` (the ``mla`` job in benchmarks.run, also in the CI bench
+smoke) runs the same harness over the compressed-latent MLA paged sweep:
+the occupancy model at the MLA grid shape (128 q heads sharing ONE latent
+row, so cells = batch x splits), real-array exactness of the jnp and
+interpret-mode Pallas backends against the ``ref.mla_decode_paged_ref`` /
+``ref.mla_decode_split_ref`` oracles (RAISES on drift), and the
+KV-bytes/token compression ratio vs a GQA-equivalent layout — the ratio
+every host-tier transfer joule scales by.  Emits ``BENCH_mla.json``.
 """
 from __future__ import annotations
 
@@ -195,6 +204,200 @@ def run(quick: bool = False) -> dict:
         "measured_wall_s_single": wall_single,
         "measured_wall_s_auto": wall_split,
     }
+
+
+# --------------------------------------------------------------------------
+# mla mode — compressed-latent paged decode (the model-zoo headline sweep)
+# --------------------------------------------------------------------------
+# paper-scale MLA geometry (deepseek-v2): 128 q heads share ONE latent row
+# of R = kv_lora_rank + rope_head_dim floats per token
+HQ_MLA, R_KV, D_ROPE = 128, 512, 64
+R_LAT = R_KV + D_ROPE
+MLA_SCALE = (128 + 64) ** -0.5    # decompressed head dim (nope + rope)
+# GQA-equivalent serving layout at the same model scale: 8 kv-head groups,
+# K rows carry nope+rope (192) lanes and V rows 128 — the cache the engine
+# would page for a 128-head model without latent compression
+HKV_EQ, DK_EQ, DV_EQ = 8, 192, 128
+MIN_KV_BYTES_RATIO = 4.0          # acceptance floor on the ~5x compression
+
+
+def model_mla_sweep_time(batch: int, kv_len: int, n_splits: int) -> float:
+    """Roofline time for one MLA latent sweep.  The natural grid is
+    ``(batch, splits, pages)`` — every q head reads the SAME latent row, so
+    the page DMA is shared across all 128 heads and the occupancy cell
+    count is ``batch * splits`` (q_heads = 1), the deepest occupancy
+    deficit in the zoo at low batch."""
+    n_blocks = -(-kv_len // BLOCK)
+    s = max(1, min(n_splits, n_blocks))
+    cells = batch * s
+    util = min(1.0, cells / N_EXEC)
+    kv_bytes = batch * kv_len * R_LAT * KV_BYTES
+    # scores dot q_lat (R lanes) against the row, value reduces r_kv lanes
+    flops = 2.0 * batch * HQ_MLA * kv_len * (R_LAT + R_KV)
+    t1 = max(kv_bytes / (TPU_V5E.hbm_bw * util),
+             flops / (TPU_V5E.peak_flops * TPU_V5E.matmul_efficiency * util))
+    t = t1 + LAUNCH_S
+    if s > 1:
+        merge_bytes = batch * HQ_MLA * (s * (R_KV + 1) + R_KV) * 4
+        t += merge_bytes / TPU_V5E.hbm_bw + LAUNCH_S
+    return t
+
+
+def modelled_mla_tok_per_s(batch: int, kv_len: int, n_splits: int) -> float:
+    return batch / model_mla_sweep_time(batch, kv_len, n_splits)
+
+
+def _measure_mla_exactness() -> dict:
+    """Real-array parity of every MLA paged backend vs the naive oracle:
+    jnp split sweep, interpret-mode Pallas (single and two-stage), and the
+    stage-1 partial/LSE contract vs ``ref.mla_decode_split_ref``."""
+    from repro.kernels import decode_attention as da
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(2)
+    B, Hq, r_kv, dr, ps, nb = 2, 8, 32, 16, 4, 8
+    R = r_kv + dr
+    n_pages = nb * B + 3
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, R)), jnp.float32)
+    pages = jnp.asarray(rng.standard_normal((n_pages, ps, R)), jnp.float32)
+    tables = jnp.asarray(
+        rng.permutation(n_pages)[:B * nb].reshape(B, nb), jnp.int32)
+    pos = jnp.asarray([nb * ps - 1, 9], jnp.int32)     # full + ragged
+    head = jnp.asarray(rng.standard_normal((Hq * r_kv, 128)), jnp.float32)
+    scale = (2 * r_kv / Hq) ** -0.5
+
+    ref_out = ref.mla_decode_paged_ref(q, pages, tables, pos, r_kv=r_kv,
+                                       scale=scale)
+    ref_arg = jnp.argmax(ref_out.reshape(B, -1) @ head, axis=-1)
+    max_err, argmax_ok = 0.0, True
+
+    def check(out):
+        nonlocal max_err, argmax_ok
+        max_err = max(max_err, float(jnp.max(jnp.abs(out - ref_out))))
+        argmax_ok &= bool(jnp.all(
+            jnp.argmax(out.reshape(B, -1) @ head, axis=-1) == ref_arg))
+
+    for s in (1, 2, 5):
+        check(ops.mla_decode_paged_jnp(q, pages, tables, pos, r_kv=r_kv,
+                                       scale=scale, n_splits=s))
+    for s in (1, 4):
+        check(da.mla_paged_decode_attention_pallas(
+            q, pages, tables, pos, r_kv=r_kv, scale=scale, n_splits=s,
+            interpret=True))
+    # stage-1 contract: Pallas partials vs the split oracle, split by split
+    p_ref, l_ref = ref.mla_decode_split_ref(q, pages, tables, pos,
+                                            r_kv=r_kv, n_splits=4,
+                                            scale=scale)
+    p_pal, l_pal = da.mla_paged_decode_attention_pallas_partials(
+        q, pages, tables, pos, r_kv=r_kv, n_splits=4, scale=scale,
+        interpret=True)
+    stage1_err = max(float(jnp.max(jnp.abs(p_ref - p_pal))),
+                     float(jnp.max(jnp.abs(l_ref - l_pal))))
+    max_err = max(max_err, stage1_err)
+    return {"max_exactness_err": max_err, "argmax_ok": argmax_ok,
+            "stage1_err": stage1_err}
+
+
+def run_mla(quick: bool = False) -> dict:
+    kv_lens = [256, 4096] if quick else [256, 2048, 8192, 32768]
+    batches = [1, 4]
+    split_grid = [1, 2, 4, 8, 16]
+
+    rows = []
+    shallow_auto_ratio = float("inf")
+    for b in batches:
+        for kv in kv_lens:
+            base = modelled_mla_tok_per_s(b, kv, 1)
+            by_split = {s: modelled_mla_tok_per_s(b, kv, s)
+                        for s in split_grid}
+            # q_heads = 1: all heads ride one page DMA (see mla_decode_paged)
+            auto_s = choose_kv_splits(b, kv, 1, N_EXEC, block=BLOCK)
+            auto = modelled_mla_tok_per_s(b, kv, auto_s)
+            best_s = max(by_split, key=by_split.get)
+            rows.append({
+                "batch": b, "kv_len": kv, "auto_splits": auto_s,
+                "modelled_tok_per_s_single": base,
+                "modelled_tok_per_s_auto": auto,
+                "modelled_auto_ratio": auto / base,
+                "modelled_best_splits": best_s,
+                "modelled_best_ratio": by_split[best_s] / base,
+                "modelled_tok_per_s_by_splits": by_split,
+            })
+            shallow_auto_ratio = min(shallow_auto_ratio, auto / base)
+
+    for r in rows:
+        if r["modelled_auto_ratio"] < 1.0 - 1e-9:
+            raise AssertionError(
+                f"mla two-stage regression: auto splits={r['auto_splits']} "
+                f"gives {r['modelled_auto_ratio']:.3f}x single-split tok/s "
+                f"at B={r['batch']} KV={r['kv_len']}")
+
+    deep = next(r for r in rows
+                if r["batch"] == min(batches) and r["kv_len"] == kv_lens[-1])
+    deep_speedup = deep["modelled_auto_ratio"]
+    if deep_speedup < MIN_DEEP_SPEEDUP:
+        raise AssertionError(
+            f"mla split sweep does not scale: {deep_speedup:.2f}x < "
+            f"{MIN_DEEP_SPEEDUP}x at B={deep['batch']} KV={deep['kv_len']}")
+
+    # KV compression: bytes per token the page pool (and thus every host-tier
+    # transfer and CoW copy) carries, latent layout vs the GQA-equivalent —
+    # this ratio IS the transfer-energy ratio at fixed J/byte
+    mla_bytes = R_LAT * KV_BYTES
+    gqa_bytes = HKV_EQ * (DK_EQ + DV_EQ) * KV_BYTES
+    kv_ratio = gqa_bytes / mla_bytes
+    if kv_ratio < MIN_KV_BYTES_RATIO:
+        raise AssertionError(
+            f"latent compression regressed: {kv_ratio:.2f}x < "
+            f"{MIN_KV_BYTES_RATIO}x KV bytes/token vs GQA-equivalent")
+    transfer_j_per_byte = 1e-9          # EngineConfig default
+    exact = _measure_mla_exactness()
+    if exact["max_exactness_err"] > EXACT_TOL or not exact["argmax_ok"]:
+        raise AssertionError(
+            f"mla paged exactness failure vs ref oracle: max |err| "
+            f"{exact['max_exactness_err']:.2e} (tol {EXACT_TOL:.0e}), "
+            f"greedy argmax ok={exact['argmax_ok']}")
+
+    return {
+        "n_exec": N_EXEC,
+        "geometry": {"q_heads": HQ_MLA, "r_kv": R_KV, "d_rope": D_ROPE,
+                     "gqa_eq": {"kv_heads": HKV_EQ, "dk": DK_EQ,
+                                "dv": DV_EQ}},
+        "block": BLOCK,
+        "rows": rows,
+        "deep_kv_len": deep["kv_len"],
+        "deep_speedup": deep_speedup,
+        "deep_best_splits": deep["auto_splits"],
+        "shallow_auto_ratio": shallow_auto_ratio,
+        "kv_bytes_per_token": mla_bytes,
+        "kv_bytes_per_token_gqa_eq": gqa_bytes,
+        "kv_bytes_ratio": kv_ratio,
+        "transfer_j_per_token": mla_bytes * 2 * transfer_j_per_byte,
+        "transfer_j_per_token_gqa_eq": gqa_bytes * 2 * transfer_j_per_byte,
+        "max_exactness_err": exact["max_exactness_err"],
+        "stage1_err": exact["stage1_err"],
+        "argmax_ok": exact["argmax_ok"],
+    }
+
+
+def main_mla(quick: bool = False) -> dict:
+    res = run_mla(quick=quick)
+    for r in res["rows"]:
+        print(f"mla.modelled_tok_per_s,{r['modelled_tok_per_s_auto']:.0f},"
+              f"B={r['batch']} KV={r['kv_len']} auto splits="
+              f"{r['auto_splits']} ({r['modelled_auto_ratio']:.2f}x single)")
+    print(f"mla.deep_speedup,{res['deep_speedup']:.2f}x,"
+          f"modelled latent sweep vs single-split at KV={res['deep_kv_len']} "
+          f"(S={res['deep_best_splits']}, {res['n_exec']} executors, "
+          f"{HQ_MLA} heads / 1 latent row)")
+    print(f"mla.kv_bytes_ratio,{res['kv_bytes_ratio']:.2f}x,"
+          f"{res['kv_bytes_per_token']} B/token latent vs "
+          f"{res['kv_bytes_per_token_gqa_eq']} B GQA-equivalent — same "
+          "ratio on every host-tier transfer joule at fixed J/byte")
+    print(f"mla.max_exactness_err,{res['max_exactness_err']:.2e},"
+          f"jnp+Pallas-interpret vs ref oracle (stage-1 partial/LSE err "
+          f"{res['stage1_err']:.2e}; greedy argmax ok={res['argmax_ok']})")
+    return res
 
 
 def main(quick: bool = False) -> dict:

@@ -69,6 +69,15 @@ TRAJECTORY = {
         "shallow_auto_ratio": r["shallow_auto_ratio"],
         "max_exactness_err": r["max_exactness_err"],
     },
+    "mla": lambda r: {
+        "deep_speedup_vs_single_split": r["deep_speedup"],
+        "deep_kv_len": r["deep_kv_len"],
+        "deep_best_splits": r["deep_best_splits"],
+        "kv_bytes_per_token": r["kv_bytes_per_token"],
+        "kv_bytes_ratio_vs_gqa_eq": r["kv_bytes_ratio"],
+        "transfer_j_per_token": r["transfer_j_per_token"],
+        "max_exactness_err": r["max_exactness_err"],
+    },
     "kvtier": lambda r: {
         "tok_per_s": r["tok_per_s"],
         "logical_pool_ratio": r["logical_pool_ratio"],
@@ -110,6 +119,12 @@ HEADLINE = {
                          f"(S={r['deep_best_splits']}); shallow auto ratio "
                          f"{r['shallow_auto_ratio']:.2f}x, exactness "
                          f"{r['max_exactness_err']:.1e}"),
+    "mla": lambda r: (f"mla.deep_speedup,{r['deep_speedup']:.2f},"
+                      f"latent split sweep at KV={r['deep_kv_len']} "
+                      f"(S={r['deep_best_splits']}); "
+                      f"{r['kv_bytes_ratio']:.1f}x KV bytes/token vs "
+                      f"GQA-equivalent, exactness "
+                      f"{r['max_exactness_err']:.1e}"),
     "kvtier": lambda r: (f"kvtier.j_per_token_ratio,"
                          f"{r['j_per_token_ratio']:.2f}x,"
                          f"{r['logical_pool_ratio']:.1f}x logical pool "
@@ -247,6 +262,7 @@ def main(argv=None) -> int:
         "kvtier": lambda: kv_tier.main(quick=args.quick),
         "chaos": lambda: chaos_serve.main(quick=args.quick),
         "kernel": lambda: decode_kernel.main(quick=args.quick),
+        "mla": lambda: decode_kernel.main_mla(quick=args.quick),
         "roofline": lambda: [roofline.main(m) for m in ("single", "multi")],
     }
     failures = 0

@@ -206,7 +206,7 @@ def _split_blocks(n_blocks: int, n_splits: int) -> tuple[int, int]:
 
 def _decode_kernel(pos_ref, *refs, scale: float, window: int,
                    logit_cap: float, block_k: int, n_k: int, cache_len: int,
-                   quantized: bool = False):
+                   quantized: bool = False, batch_pos: bool = False):
     if quantized:
         (q_ref, k_ref, ks_ref, v_ref, vs_ref,
          o_ref, m_ref, l_ref, acc_ref) = refs
@@ -221,7 +221,9 @@ def _decode_kernel(pos_ref, *refs, scale: float, window: int,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[0]
+    # batch_pos: ragged batch of private ring buffers (windowed paged
+    # layers) — each batch row decodes at its own position
+    pos = pos_ref[pl.program_id(0)] if batch_pos else pos_ref[0]
     # ring invariant: slot s holds absolute position pos - ((pos - s) mod C);
     # slots not yet written resolve to negative positions and mask off.
     slot = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
@@ -249,7 +251,7 @@ def _decode_kernel(pos_ref, *refs, scale: float, window: int,
 def _decode_partials_kernel(pos_ref, *refs, scale: float,
                             window: int, logit_cap: float, block_k: int,
                             n_k: int, kpb: int, cache_len: int,
-                            quantized: bool = False):
+                            quantized: bool = False, batch_pos: bool = False):
     """Stage 1 of the two-stage ring decode sweep: grid
     ``(B, Hq, n_splits, kpb)``.  Split ``s`` owns global k-blocks
     ``[s*kpb, (s+1)*kpb)``; its scratch is private (init at local block 0,
@@ -272,7 +274,7 @@ def _decode_partials_kernel(pos_ref, *refs, scale: float,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[0]
+    pos = pos_ref[pl.program_id(0)] if batch_pos else pos_ref[0]
     g = isp * kpb + ik                       # global k-block index
     slot = g * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
     k_pos = pos - jnp.remainder(pos - slot, cache_len)
@@ -327,12 +329,14 @@ def decode_attention_pallas_partials(
     qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, 1, D)
     kt = k_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, D)
     vt = v_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, Dv)
-    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(-1)
+    if pos_arr.shape[0] not in (1, B):
+        raise ValueError(f"pos must be scalar or ({B},), got {pos_arr.shape}")
 
     kernel = functools.partial(
         _decode_partials_kernel, scale=scale, window=window,
         logit_cap=logit_cap, block_k=block_k, n_k=n_k, kpb=kpb, cache_len=C,
-        quantized=quantized)
+        quantized=quantized, batch_pos=pos_arr.shape[0] > 1)
 
     def kv_index(b, h, s, ik, pos_ref, G=G, kpb=kpb, n_k=n_k):
         # clamp out-of-range blocks of the ragged last split to a real
@@ -394,7 +398,10 @@ def decode_attention_pallas(
     the two-stage pipeline (parallel partial sweeps + LSE merge);
     ``n_splits = 1`` is the original single-kernel sweep, unchanged.
     ``k_scale``/``v_scale`` (per-row fp32) flag an int8 cache: the dequant
-    fuses into the block load (``_load_kv``), nothing else changes."""
+    fuses into the block load (``_load_kv``), nothing else changes.
+    ``pos`` may be scalar (one shared position — the fused serve loop) or
+    ``(B,)`` (ragged batch of private ring buffers — the paged engine's
+    windowed layers, where each slot's ring is at its own position)."""
     if n_splits > 1:
         partial, lse = decode_attention_pallas_partials(
             q, k_cache, v_cache, pos, n_splits=n_splits, window=window,
@@ -423,11 +430,14 @@ def decode_attention_pallas(
     qt = q.transpose(0, 2, 1, 3)                 # (B, Hq, 1, D)
     kt = k_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, D)
     vt = v_cache.transpose(0, 2, 1, 3)           # (B, Hkv, C, Dv)
-    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(-1)
+    if pos_arr.shape[0] not in (1, B):
+        raise ValueError(f"pos must be scalar or ({B},), got {pos_arr.shape}")
 
     kernel = functools.partial(
         _decode_kernel, scale=scale, window=window, logit_cap=logit_cap,
-        block_k=block_k, n_k=n_k, cache_len=C, quantized=quantized)
+        block_k=block_k, n_k=n_k, cache_len=C, quantized=quantized,
+        batch_pos=pos_arr.shape[0] > 1)
 
     def kv_index(b, h, ik, pos_ref, G=G):
         return (b, h // G, ik, 0)
@@ -1308,3 +1318,224 @@ def paged_decode_attention_pallas(
         interpret=interpret,
     )(bt, pos_arr, *inputs)
     return out.transpose(0, 2, 1, 3)             # (B, 1, Hq, Dv)
+
+
+# --------------------------------------------------------------------------
+# MLA compressed-latent paged decode — absorbed-matmul form
+# --------------------------------------------------------------------------
+#
+# DeepSeek-style MLA caches ONE latent row per token — ``[c_kv | k_rope]``
+# of width R = kv_lora_rank + rope_head_dim — shared by every q head
+# (~5x fewer KV bytes than the GQA layout at DeepSeek-V2 shapes).  In the
+# absorbed-matmul form the query is projected into latent space before the
+# sweep (``q_abs = q_nope @ W_uk`` for the compressed block, raw ``q_rope``
+# for the rope sub-block), so
+#
+#     q_abs . c_kv + q_rope . k_rope  =  [q_abs | q_rope] . [c_kv | k_rope]
+#
+# — one dot of the latent query against the full latent row — and the
+# *value* read is the ``[:r_kv]`` slice of the SAME row.  One DMA per page
+# therefore serves both k and v for all heads at once, which is why the
+# grid here is (B, pages) with every q head in a single tile (the
+# multi-row ``_online_softmax_update`` shape the verify kernels use, with
+# q_len = Hq) instead of the GQA kernels' (B, Hq, pages): the occupancy
+# unit is the page DMA, shared across 128 heads.  This is the aiter-style
+# two-stage decomposition: stage-1 split-KV sweep over block-table pages
+# emitting per-split ``(partial, lse)``, stage-2 the SAME
+# ``merge_kv_splits_pallas`` LSE-merge every other sweep family uses.
+# Validated against ``ref.mla_decode_split_ref`` / ``ref.mla_decode_paged_ref``.
+
+def _mla_paged_decode_kernel(bt_ref, pos_ref, q_ref, lat_ref, o_ref,
+                             m_ref, l_ref, acc_ref, *, scale: float,
+                             logit_cap: float, page_size: int, n_blocks: int,
+                             r_kv: int, n_heads: int):
+    ib, ij = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[ib]
+    k_pos = ij * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (n_heads, page_size), 1)
+    valid = k_pos <= pos
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        lat = lat_ref[0].astype(jnp.float32)             # (ps, R) — one DMA
+        _online_softmax_update(
+            q_ref[0].astype(jnp.float32),                # (Hq, R)
+            lat,                                         # k = full latent row
+            lat[:, :r_kv],                               # v = its c_kv slice
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+
+    @pl.when(ij == n_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _mla_paged_decode_partials_kernel(bt_ref, pos_ref, q_ref, lat_ref,
+                                      part_ref, lse_ref, m_ref, l_ref,
+                                      acc_ref, *, scale: float,
+                                      logit_cap: float, page_size: int,
+                                      n_blocks: int, ppb: int, r_kv: int,
+                                      n_heads: int):
+    """Stage 1 of the two-stage MLA paged sweep: grid (B, n_splits, ppb),
+    same masks as ``_mla_paged_decode_kernel``, each split flushing
+    normalized per-head partials + LSE for the shared stage-2 merge."""
+    ib, isp, ij = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[ib]
+    gj = isp * ppb + ij
+    k_pos = gj * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (n_heads, page_size), 1)
+    valid = (k_pos <= pos) & (gj < n_blocks)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        lat = lat_ref[0].astype(jnp.float32)             # (ps, R)
+        _online_softmax_update(
+            q_ref[0].astype(jnp.float32),                # (Hq, R)
+            lat, lat[:, :r_kv],
+            valid, m_ref, l_ref, acc_ref, scale=scale, logit_cap=logit_cap)
+
+    @pl.when(ij == ppb - 1)
+    def _flush():
+        l = l_ref[...]
+        part_ref[0, 0] = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        lse_ref[0, 0] = jnp.where(
+            l > 0.0, m_ref[...] + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+
+
+def mla_paged_decode_attention_pallas_partials(
+    q_lat: jax.Array,              # (B, 1, Hq, R) latent queries [q_abs|q_rope]
+    lat_pages: jax.Array,          # (P, ps, R)    latent page pool
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *,
+    r_kv: int, n_splits: int, scale: float, logit_cap: float = 0.0,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 1 only: per-split MLA latent sweep.  Returns
+    ``(partial (B, Hq, S, 1, r_kv) fp32, lse (B, Hq, S, 1) fp32)`` — the
+    same partials layout as every other decode family, so the identical
+    stage-2 merge applies.  ``scale`` is mandatory (MLA scales by the
+    decompressed head dim, not R)."""
+    B, _, Hq, R = q_lat.shape
+    ps = lat_pages.shape[1]
+    nb = block_tables.shape[1]
+    n_splits, ppb = _split_blocks(nb, n_splits)
+
+    qt = q_lat.reshape(B, Hq, R)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
+
+    kernel = functools.partial(
+        _mla_paged_decode_partials_kernel, scale=scale, logit_cap=logit_cap,
+        page_size=ps, n_blocks=nb, ppb=ppb, r_kv=r_kv, n_heads=Hq)
+
+    def lat_index(b, s, j, bt_ref, pos_ref, ppb=ppb, nb=nb):
+        return (bt_ref[b, jnp.minimum(s * ppb + j, nb - 1)], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block table + positions
+        grid=(B, n_splits, ppb),
+        in_specs=[
+            pl.BlockSpec((1, Hq, R), lambda b, s, j, bt_ref, pos_ref:
+                         (b, 0, 0)),
+            pl.BlockSpec((1, ps, R), lat_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Hq, r_kv),
+                         lambda b, s, j, bt_ref, pos_ref: (b, s, 0, 0)),
+            pl.BlockSpec((1, 1, Hq),
+                         lambda b, s, j, bt_ref, pos_ref: (b, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Hq,), jnp.float32),      # running max m, per head
+            pltpu.VMEM((Hq,), jnp.float32),      # running denom l
+            pltpu.VMEM((Hq, r_kv), jnp.float32),  # running numerator
+        ],
+    )
+    partial, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_splits, Hq, r_kv), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_splits, Hq), jnp.float32)],
+        interpret=interpret,
+    )(bt, pos_arr, qt, lat_pages)
+    # -> the canonical (B, Hq, S, 1, Dv) partials layout shared by the
+    # merge contract and the ref oracle
+    return (partial.transpose(0, 2, 1, 3)[:, :, :, None, :],
+            lse.transpose(0, 2, 1)[:, :, :, None])
+
+
+def mla_paged_decode_attention_pallas(
+    q_lat: jax.Array,              # (B, 1, Hq, R) latent queries [q_abs|q_rope]
+    lat_pages: jax.Array,          # (P, ps, R)    latent page pool
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *,
+    r_kv: int, scale: float, logit_cap: float = 0.0, n_splits: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compressed-latent MLA paged decode.  Returns latent outputs
+    ``(B, 1, Hq, r_kv)`` (the W_uv / W_o expansion happens outside, per the
+    absorbed form).  ``n_splits > 1`` runs the two-stage pipeline with the
+    shared ``merge_kv_splits_pallas``; ``n_splits = 1`` is the single
+    sequential sweep, bit-for-bit the stage-1-only result."""
+    B, _, Hq, R = q_lat.shape
+    ps = lat_pages.shape[1]
+    nb = block_tables.shape[1]
+    if n_splits > 1:
+        partial, lse = mla_paged_decode_attention_pallas_partials(
+            q_lat, lat_pages, block_tables, pos, r_kv=r_kv,
+            n_splits=n_splits, scale=scale, logit_cap=logit_cap,
+            interpret=interpret)
+        out = merge_kv_splits_pallas(partial, lse, out_dtype=q_lat.dtype,
+                                     interpret=interpret)  # (B, Hq, 1, r_kv)
+        return out.transpose(0, 2, 1, 3)                   # (B, 1, Hq, r_kv)
+
+    qt = q_lat.reshape(B, Hq, R)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
+
+    kernel = functools.partial(
+        _mla_paged_decode_kernel, scale=scale, logit_cap=logit_cap,
+        page_size=ps, n_blocks=nb, r_kv=r_kv, n_heads=Hq)
+
+    def lat_index(b, j, bt_ref, pos_ref):
+        return (bt_ref[b, j], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block table + positions
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, Hq, R), lambda b, j, bt_ref, pos_ref: (b, 0, 0)),
+            pl.BlockSpec((1, ps, R), lat_index),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, r_kv),
+                               lambda b, j, bt_ref, pos_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq,), jnp.float32),      # running max m, per head
+            pltpu.VMEM((Hq,), jnp.float32),      # running denom l
+            pltpu.VMEM((Hq, r_kv), jnp.float32),  # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, r_kv), q_lat.dtype),
+        interpret=interpret,
+    )(bt, pos_arr, qt, lat_pages)
+    return out[:, None]                          # (B, 1, Hq, r_kv)

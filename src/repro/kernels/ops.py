@@ -95,6 +95,16 @@ def choose_kv_splits(batch: int, kv_len: int, q_heads: int,
     return max(1, min(-(-2 * n_cores // max(1, cells)), n_blocks, max_splits))
 
 
+def effective_kv_len(kv_len: int, window: int = 0) -> int:
+    """Clip the logical KV length to the attention window for occupancy
+    decisions.  A windowed layer never attends past ``window`` keys no
+    matter how deep the logical position is, so the split heuristic must
+    see ``min(kv_len, window)`` — a 32k-position sliding-window cache is a
+    SHALLOW sweep, and splitting it only adds merge traffic."""
+    kv_len = int(kv_len)
+    return min(kv_len, int(window)) if window > 0 else kv_len
+
+
 def _resolve_kv_splits(policy: KernelPolicy, batch: int, kv_len: int,
                        q_heads: int, *, block: int) -> int:
     if policy.kv_splits == "auto":
@@ -177,6 +187,22 @@ def warn_kv_dtype_fallback(family: str, reason: str) -> None:
         f"kv_dtype=int8 requested for model family {family!r} but {reason}; "
         "falling back to unquantized (bfloat16) KV pools for this engine",
         RuntimeWarning, stacklevel=3)
+
+
+_PAGED_FALLBACK_WARNED: set[str] = set()
+
+
+def warn_paged_fallback(name: str, feature: str) -> None:
+    """One-time (per config) warning when a model family cannot ride the
+    paged serving engine and silently falls back to the ring-cache loop,
+    naming the SPECIFIC blocking feature (mirrors
+    ``warn_kv_dtype_fallback``)."""
+    if name in _PAGED_FALLBACK_WARNED:
+        return
+    _PAGED_FALLBACK_WARNED.add(name)
+    warnings.warn(
+        f"config {name!r} falls back to the ring-cache serving loop: paged "
+        f"serving blocked by {feature}", RuntimeWarning, stacklevel=3)
 
 
 # ==========================================================================
@@ -285,14 +311,16 @@ def decode_attention_jnp(
     q: jax.Array,                  # (B, 1, Hq, D)
     k_cache: jax.Array,            # (B, C, Hkv, D)
     v_cache: jax.Array,            # (B, C, Hkv, Dv)
-    k_pos: jax.Array,              # (C,) absolute position held by each slot (-1 invalid)
-    pos: jax.Array,                # () current absolute position of q
+    k_pos: jax.Array,              # (C,) or (B, C) slot positions (-1 invalid)
+    pos: jax.Array,                # () or (B,) current absolute position of q
     *, window: int = 0, logit_cap: float = 0.0, scale: float | None = None,
     n_splits: int = 1,
     k_scale: jax.Array | None = None,  # (B, C, Hkv, 1) fp32 per-row scales
     v_scale: jax.Array | None = None,
 ) -> jax.Array:
-    """Single-token decode against a (ring-buffer) KV cache.
+    """Single-token decode against a (ring-buffer) KV cache.  ``k_pos`` /
+    ``pos`` may carry a leading batch axis: ragged batches of private ring
+    buffers (each slot of the paged engine at its own depth) mask per-row.
 
     The cache stays in its storage dtype end to end; the two einsums
     accumulate in fp32 via ``preferred_element_type`` (same rationale as
@@ -318,10 +346,12 @@ def decode_attention_jnp(
     s = s.astype(jnp.float32)
     if logit_cap > 0.0:
         s = logit_cap * jnp.tanh(s / logit_cap)
-    valid = (k_pos >= 0) & (k_pos <= pos)
+    k_posb = jnp.asarray(k_pos).reshape(-1, C)           # (1, C) or (B, C)
+    posb = jnp.asarray(pos).reshape(-1)[:, None]         # (1, 1) or (B, 1)
+    valid = (k_posb >= 0) & (k_posb <= posb)
     if window > 0:
-        valid &= k_pos > pos - window
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        valid &= k_posb > posb - window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
     if n_splits > 1:
         o = _split_attend_jnp(s[:, :, :, None, :], v_cache, n_splits)[..., 0, :]
     else:
@@ -540,8 +570,9 @@ def paged_decode_attention(
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     ps, nb = k_pages.shape[1], block_tables.shape[1]
-    n_splits = _resolve_kv_splits(policy, q.shape[0], nb * ps, q.shape[2],
-                                  block=ps)
+    n_splits = _resolve_kv_splits(policy, q.shape[0],
+                                  effective_kv_len(nb * ps, window),
+                                  q.shape[2], block=ps)
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import decode_attention as da
         return da.paged_decode_attention_pallas(
@@ -562,12 +593,120 @@ def paged_decode_attention(
     raise ValueError(f"unknown decode backend {backend!r}")
 
 
+# ==========================================================================
+# MLA compressed-latent decode (absorbed-matmul form)
+# ==========================================================================
+def mla_absorbed_attend_jnp(
+    q_abs: jax.Array,              # (B, H, r_kv)  q_nope absorbed through W_uk
+    q_rope: jax.Array,             # (B, H, dr)    rope sub-block queries
+    c_kv: jax.Array,               # (B, C, r_kv)  compressed latents (k AND v)
+    k_rope: jax.Array,             # (B, C, dr)    shared rope keys
+    valid: jax.Array,              # (B, C) bool
+    *, scale: float, logit_cap: float = 0.0, n_splits: int = 1,
+) -> jax.Array:
+    """The absorbed-matmul MLA attend shared by the ring ``mla_decode`` and
+    the paged jnp path — one latent row per token attended by every head
+    (Hkv = 1, G = H), value = the compressed latent itself.  Keeping both
+    cache layouts on this one body is what makes the paged engine's greedy
+    streams match the ring reference.  Scores and the value reduction
+    accumulate in fp32; ``n_splits > 1`` runs the exact two-stage
+    partial/LSE-merge path (mirrors the Pallas split contract).
+    Returns latent outputs ``(B, H, r_kv)`` in the query dtype."""
+    s = jnp.einsum("bhr,bcr->bhc", q_abs, c_kv,
+                   preferred_element_type=jnp.float32) \
+        + jnp.einsum("bhk,bck->bhc", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    s = (s * scale).astype(jnp.float32)
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    if n_splits > 1:
+        o = _split_attend_jnp(s[:, None, :, None, :],
+                              c_kv[:, :, None, :], n_splits)[:, 0, :, 0, :]
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhc,bcr->bhr", p, c_kv,
+                       preferred_element_type=jnp.float32)
+    return o.astype(q_abs.dtype)
+
+
+def mla_decode_paged_jnp(
+    q_lat: jax.Array,              # (B, 1, Hq, R) latent queries [q_abs|q_rope]
+    lat_pages: jax.Array,          # (P, ps, R)    latent page pool
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *, r_kv: int, scale: float, logit_cap: float = 0.0, n_splits: int = 1,
+) -> jax.Array:
+    """Paged MLA decode, pure jnp: gather the latent pages into logical
+    order, then the shared absorbed attend.  Linear layout — validity is
+    simply ``k_pos <= pos[b]``."""
+    B, _, Hq, R = q_lat.shape
+    ps = lat_pages.shape[1]
+    nb = block_tables.shape[1]
+    latg = lat_pages[block_tables].reshape(B, nb * ps, R)
+    valid = jnp.arange(nb * ps)[None, :] <= jnp.asarray(pos).reshape(B, 1)
+    o = mla_absorbed_attend_jnp(
+        q_lat[:, 0, :, :r_kv], q_lat[:, 0, :, r_kv:],
+        latg[..., :r_kv], latg[..., r_kv:], valid,
+        scale=scale, logit_cap=logit_cap, n_splits=n_splits)
+    return o[:, None]                              # (B, 1, Hq, r_kv)
+
+
+def mla_decode_paged(
+    q_lat: jax.Array,              # (B, 1, Hq, R) latent queries [q_abs|q_rope]
+    lat_pages: jax.Array,          # (P, ps, R)    latent page pool
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *,
+    r_kv: int, scale: float, logit_cap: float = 0.0,
+    policy: KernelPolicy = DEFAULT_POLICY,
+) -> jax.Array:
+    """Backend-dispatching compressed-latent MLA paged decode — the model
+    zoo's headline sweep.  Shares the ``decode`` backend axis: ``auto``
+    resolves to the latent-pool Pallas kernel on TPU and the
+    gather-then-attend jnp path elsewhere.  The split count comes from the
+    same occupancy heuristic at the MLA grid shape: every q head shares the
+    ONE latent row, so the natural grid has ``batch * 1`` cells (the page
+    DMA is shared across heads), i.e. ``q_heads = 1`` — MLA decode at low
+    batch is the deepest occupancy deficit in the zoo, exactly where
+    splitting pays.  Returns latent outputs ``(B, 1, Hq, r_kv)``; the
+    ``W_uv`` / ``W_o`` expansion happens in the caller (absorbed form)."""
+    backend = policy.decode
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    ps, nb = lat_pages.shape[1], block_tables.shape[1]
+    # q_heads = 1: the MLA kernel tiles ALL heads per page DMA (grid is
+    # (B, splits, pages), not (B, Hq, splits, pages))
+    n_splits = _resolve_kv_splits(policy, q_lat.shape[0], nb * ps, 1,
+                                  block=ps)
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import decode_attention as da
+        return da.mla_paged_decode_attention_pallas(
+            q_lat, lat_pages, block_tables, pos, r_kv=r_kv, scale=scale,
+            logit_cap=logit_cap, n_splits=n_splits,
+            interpret=backend == "pallas_interpret")
+    if backend == "ref":
+        return _ref.mla_decode_paged_ref(
+            q_lat, lat_pages, block_tables, pos, r_kv=r_kv, scale=scale,
+            logit_cap=logit_cap)
+    if backend == "jnp":
+        return mla_decode_paged_jnp(
+            q_lat, lat_pages, block_tables, pos, r_kv=r_kv, scale=scale,
+            logit_cap=logit_cap, n_splits=n_splits)
+    raise ValueError(f"unknown decode backend {backend!r}")
+
+
 def ring_positions(pos: jax.Array, cache_len: int) -> jax.Array:
     """Absolute position held by each ring-buffer slot under the canonical
     layout (slot = p % C): ``pos - ((pos - s) mod C)``.  Slots not yet
-    written resolve to negative positions (masked as invalid everywhere)."""
+    written resolve to negative positions (masked as invalid everywhere).
+    ``pos`` may be scalar -> (C,), or (B,) -> (B, C) for ragged batches of
+    private ring buffers (the paged engine's windowed layers)."""
     s = jnp.arange(cache_len)
-    return pos - jnp.mod(pos - s, cache_len)
+    p = jnp.asarray(pos)
+    if p.ndim == 0:
+        return p - jnp.mod(p - s, cache_len)
+    return p[:, None] - jnp.mod(p[:, None] - s, cache_len)
 
 
 def decode_attention(
@@ -598,7 +737,8 @@ def decode_attention(
     if backend in ("pallas", "pallas_interpret") and k_pos is not None:
         _warn_k_pos_fallback("decode_attention")
         backend = "jnp"            # custom slot layout: ring derivation invalid
-    n_splits = _resolve_kv_splits(policy, q.shape[0], k_cache.shape[1],
+    n_splits = _resolve_kv_splits(policy, q.shape[0],
+                                  effective_kv_len(k_cache.shape[1], window),
                                   q.shape[2], block=policy.decode_k_chunk)
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import decode_attention as da
@@ -651,7 +791,8 @@ def verify_attention(
     if backend in ("pallas", "pallas_interpret") and k_pos is not None:
         _warn_k_pos_fallback("verify_attention")
         backend = "jnp"            # custom slot layout: ring derivation invalid
-    n_splits = _resolve_kv_splits(policy, q.shape[0], k_cache.shape[1],
+    n_splits = _resolve_kv_splits(policy, q.shape[0],
+                                  effective_kv_len(k_cache.shape[1], window),
                                   q.shape[2], block=policy.decode_k_chunk)
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import decode_attention as da
@@ -702,8 +843,9 @@ def paged_verify_attention(
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     ps, nb = k_pages.shape[1], block_tables.shape[1]
-    n_splits = _resolve_kv_splits(policy, q.shape[0], nb * ps, q.shape[2],
-                                  block=ps)
+    n_splits = _resolve_kv_splits(policy, q.shape[0],
+                                  effective_kv_len(nb * ps, window),
+                                  q.shape[2], block=ps)
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import decode_attention as da
         return da.paged_verify_attention_pallas(

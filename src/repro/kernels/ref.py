@@ -229,6 +229,72 @@ def paged_decode_attention_split_ref(
 
 
 # --------------------------------------------------------------------------
+# MLA compressed-latent paged decode oracles — absorbed-matmul form
+# --------------------------------------------------------------------------
+def mla_decode_paged_ref(
+    q_lat: jax.Array,              # (B, 1, Hq, R) latent queries: [q_abs | q_rope]
+    lat_pages: jax.Array,          # (P, ps, R)    latent page pool, R = r_kv + d_rope
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,) per-request absolute position of q
+    *, r_kv: int, scale: float, logit_cap: float = 0.0,
+) -> jax.Array:
+    """Naive MLA paged decode oracle in absorbed-matmul form.  One latent
+    row per token is shared by every q head (Hkv = 1, G = Hq): the query is
+    already projected into latent space (``q_abs = q_nope @ W_uk`` for the
+    compressed block, raw ``q_rope`` for the rope sub-block), so a single
+    dot of ``q_lat`` against the full latent row computes
+    ``q_abs . c_kv + q_rope . k_rope`` in one pass, and the value read is
+    the ``[:r_kv]`` slice of the *same* row — the one-DMA-serves-both trick
+    the Pallas kernel exploits.  Returns latent outputs ``(B, 1, Hq, r_kv)``
+    (the W_uv / W_o expansion happens outside, per the absorbed form).
+    ``scale`` is mandatory: MLA scales by the *decompressed* head dim
+    ``(d_nope + d_rope) ** -0.5``, not ``R ** -0.5``."""
+    B, _, Hq, R = q_lat.shape
+    ps = lat_pages.shape[1]
+    nb = block_tables.shape[1]
+    latg = lat_pages.astype(jnp.float32)[block_tables].reshape(B, nb * ps, R)
+    qf = q_lat.astype(jnp.float32).reshape(B, 1, Hq, R)      # (B, Hkv=1, G, R)
+    s = jnp.einsum("bhgd,bkd->bhgk", qf, latg) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    k_pos = jnp.arange(nb * ps)[None, :]
+    posb = jnp.asarray(pos).reshape(B, 1)
+    valid = k_pos <= posb
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkd->bhgd", p, latg[..., :r_kv])
+    return o.reshape(B, 1, Hq, r_kv).astype(q_lat.dtype)
+
+
+def mla_decode_split_ref(
+    q_lat: jax.Array,              # (B, 1, Hq, R)
+    lat_pages: jax.Array,          # (P, ps, R)
+    block_tables: jax.Array,       # (B, nb) int32
+    pos: jax.Array,                # (B,)
+    *, r_kv: int, n_splits: int, scale: float, logit_cap: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage-1 oracle for ``mla_paged_decode_attention_pallas_partials``:
+    same latent gather as :func:`mla_decode_paged_ref`, split over pages
+    (the DMA unit) with the shared ``_split_partials`` body at Hkv = 1,
+    G = Hq, Dv = r_kv.  Returns ``(partial (B, Hq, S, 1, r_kv),
+    lse (B, Hq, S, 1))`` — merged by the SAME stage-2
+    ``merge_kv_splits_pallas`` kernel as every other sweep family."""
+    B, _, Hq, R = q_lat.shape
+    ps = lat_pages.shape[1]
+    nb = block_tables.shape[1]
+    latg = lat_pages.astype(jnp.float32)[block_tables].reshape(B, nb * ps, R)
+    qf = q_lat.astype(jnp.float32).reshape(B, 1, Hq, R)
+    s = jnp.einsum("bhgd,bkd->bhgk", qf, latg) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    k_pos = jnp.arange(nb * ps)[None, :]
+    posb = jnp.asarray(pos).reshape(B, 1)
+    s = jnp.where((k_pos <= posb)[:, None, None], s, NEG_INF)
+    vf = latg[..., :r_kv][:, :, None, :]                      # (B, K, 1, r_kv)
+    return _split_partials(s, vf, n_units=nb, unit=ps, n_splits=n_splits)
+
+
+# --------------------------------------------------------------------------
 # verify-attention oracle — K+1 speculative queries vs a ring-buffer cache
 # --------------------------------------------------------------------------
 def verify_attention_ref(

@@ -70,6 +70,7 @@ from repro.core import (BALANCED, PowerCappedDevice, QoSPolicy, TPU_V5E,
                         WorkloadProfile)
 from repro.core.profiler import RecordingBackend
 from repro.data import DataConfig, TokenBatches
+from repro.kernels import ops
 from repro.launch.mesh import make_host_mesh
 from repro.runtime.chaos import ChaosBus, FaultInjector
 from repro.runtime.fault import ServingSupervisor
@@ -606,7 +607,15 @@ def main():
     frost = None if args.no_frost else FrostPlane(cfg, n_par, args.edp_exponent)
 
     if args.traffic == "poisson":
-        rc = run_engine(args, cfg, step_cfg, rules, params, frost)
+        blockers = tfm.paged_cache_blockers(cfg)
+        if blockers:
+            # the capability router names the specific blocking feature;
+            # today the tuple is empty for every family in the zoo, but the
+            # seam keeps future configs serving (ring batch) instead of dying
+            ops.warn_paged_fallback(cfg.name, blockers[0])
+            rc = run_batch(args, cfg, step_cfg, rules, params, frost)
+        else:
+            rc = run_engine(args, cfg, step_cfg, rules, params, frost)
     else:
         rc = run_batch(args, cfg, step_cfg, rules, params, frost)
     if frost is not None:

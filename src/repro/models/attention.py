@@ -219,6 +219,44 @@ def gqa_decode_paged(params, x, pos, cache_kv, block_tables, cfg: ModelConfig,
     return out, (k_pages, v_pages)
 
 
+def gqa_decode_ragged(params, x, pos, cache_kv, cfg: ModelConfig, *,
+                      window: int = 0,
+                      policy: ops.KernelPolicy = ops.DEFAULT_POLICY,
+                      constrain=None):
+    """One-token decode against per-slot PRIVATE ring buffers at ragged
+    positions.  x: (B, 1, d); cache_kv = (k, v) of shape (B, C, Hkv, *);
+    pos: (B,) per-request absolute position of the new token.
+
+    This is the paged engine's windowed-layer decode: a sliding-window
+    layer never needs more than the last ``window`` tokens, so its "page
+    table" is a static identity map over ``ceil(window/ps)`` pages per
+    slot and the pages form a ring of capacity C = ceil(window/ps)*ps —
+    O(window) latent bytes per slot regardless of sequence depth.  Each
+    batch row writes its own ring slot ``pos[b] % C``; the attention sweep
+    masks per-row (``ops.decode_attention`` accepts the ragged ``pos``
+    directly on both the Pallas and jnp backends)."""
+    adt = x.dtype
+    k_cache, v_cache = cache_kv
+    B, C = k_cache.shape[0], k_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(adt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(adt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(adt))
+    posb = jnp.asarray(pos)[:, None]                       # (B, 1)
+    q = common.apply_rope_partial(q, posb, cfg.rope_theta, cfg.rope_fraction)
+    k = common.apply_rope_partial(k, posb, cfg.rope_theta, cfg.rope_fraction)
+    rows = jnp.arange(B)
+    slot = jnp.mod(pos, C)                                 # (B,)
+    k_cache = k_cache.at[rows, slot].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[rows, slot].set(v[:, 0].astype(v_cache.dtype))
+    scale = cfg.query_scale or cfg.resolved_head_dim ** -0.5
+    o = ops.decode_attention(q, k_cache, v_cache, pos, window=window,
+                             logit_cap=cfg.attn_logit_softcap, scale=scale,
+                             policy=policy)
+    o = _mask_padded_heads(o, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(adt))
+    return out, (k_cache, v_cache)
+
+
 def gqa_verify(params, x, pos, cache_kv, cfg: ModelConfig, *, window: int = 0,
                policy: ops.KernelPolicy = ops.DEFAULT_POLICY, constrain=None):
     """Speculative verify: score ``Q = K+1`` fed tokens in one cache sweep.
@@ -402,9 +440,20 @@ def mla_prefill(params, x, positions, cfg: ModelConfig, *, cache_len: int,
     return out, lat
 
 
-def mla_decode(params, x, pos, cache_lat, cfg: ModelConfig, *, constrain=None):
+def _mla_expand(params, o_lat, cfg: ModelConfig, adt):
+    """Re-expand latent attention outputs through W_uv then W_o.
+    o_lat: (B, H, r_kv) -> (B, 1, d)."""
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, params["wuv"].astype(adt))
+    return jnp.einsum("bhk,hkd->bd", o, params["wo"].astype(adt))[:, None]
+
+
+def mla_decode(params, x, pos, cache_lat, cfg: ModelConfig, *,
+               policy: ops.KernelPolicy = ops.DEFAULT_POLICY, constrain=None):
     """Absorbed-matmul decode: score via q_nope @ W_uk acting on the latent
-    cache directly; attention output re-expanded with W_uv afterwards."""
+    cache directly; attention output re-expanded with W_uv afterwards.  The
+    attend body is ``ops.mla_absorbed_attend_jnp`` — the SAME body the
+    paged jnp path runs, which is what keeps paged greedy streams on the
+    ring reference's argmax."""
     adt = x.dtype
     r_kv, dr, dn = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.nope_head_dim
     C = cache_lat.shape[1]
@@ -417,21 +466,91 @@ def mla_decode(params, x, pos, cache_lat, cfg: ModelConfig, *, constrain=None):
     cache_lat = jax.lax.dynamic_update_slice(
         cache_lat, lat_t.astype(cache_lat.dtype), (0, slot, 0))
 
-    cache_ckv = cache_lat[..., :r_kv]
-    cache_rope = cache_lat[..., r_kv:]
     # absorb W_uk into the query:  (B,1,H,dn) @ (r,H,dn) -> (B,H,r)
     q_abs = jnp.einsum("bshk,rhk->bhr", q_nope, params["wuk"].astype(adt))
-    s = jnp.einsum("bhr,bcr->bhc", q_abs, cache_ckv.astype(adt))
-    s = s + jnp.einsum("bshk,bck->bhc", q_rope, cache_rope.astype(adt))
     scale = cfg.query_scale or (dn + dr) ** -0.5
-    s = (s * scale).astype(jnp.float32)
-    if cfg.attn_logit_softcap > 0.0:
-        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
     k_pos = pos - jnp.mod(pos - jnp.arange(C), C)
     valid = (k_pos >= 0) & (k_pos <= pos)
-    s = jnp.where(valid[None, None], s, ops.NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)                           # (B,H,C)
-    o_lat = jnp.einsum("bhc,bcr->bhr", p.astype(adt), cache_ckv.astype(adt))
-    o = jnp.einsum("bhr,rhk->bhk", o_lat, params["wuv"].astype(adt))
-    out = jnp.einsum("bhk,hkd->bd", o, params["wo"].astype(adt))[:, None]
-    return out, cache_lat
+    o_lat = ops.mla_absorbed_attend_jnp(
+        q_abs, q_rope[:, 0], cache_lat[..., :r_kv].astype(adt),
+        cache_lat[..., r_kv:].astype(adt),
+        jnp.broadcast_to(valid[None], (x.shape[0], C)),
+        scale=scale, logit_cap=cfg.attn_logit_softcap)
+    return _mla_expand(params, o_lat, cfg, adt), cache_lat
+
+
+def mla_decode_paged(params, x, pos, cache_lat, block_tables,
+                     cfg: ModelConfig, *,
+                     policy: ops.KernelPolicy = ops.DEFAULT_POLICY,
+                     constrain=None):
+    """One-token absorbed-matmul MLA decode against a PAGED latent pool —
+    the model zoo's compressed-KV headline.  x: (B, 1, d);
+    cache_lat: (P, ps, R) latent page pool, R = kv_lora_rank +
+    rope_head_dim (ONE row per token, every head shares it — ~5x fewer KV
+    bytes than the dense-GQA layout); block_tables: (B, nb); pos: (B,)
+    ragged per-request position.
+
+    The new latent row is scattered at physical row
+    ``block_tables[b, pos[b] // ps] * ps + pos[b] % ps`` (linear layout —
+    same scheme as ``gqa_decode_paged``), then the whole query block
+    [q_abs | q_rope] sweeps the pool through ``ops.mla_decode_paged``:
+    the latent row serves scores AND values, so one page DMA feeds all
+    heads."""
+    adt = x.dtype
+    r_kv, dr, dn = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.nope_head_dim
+    P, ps, R = cache_lat.shape
+    posb = jnp.asarray(pos)[:, None]                       # (B, 1)
+    q_nope, q_rope = _mla_queries(params, x, posb, cfg)    # (B,1,H,*)
+    c_kv, k_rope = _mla_latent(params, x, posb, cfg)
+
+    lat_row = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0]     # (B, R)
+    page = jnp.take_along_axis(block_tables, pos[:, None] // ps, axis=1)[:, 0]
+    row = page * ps + pos % ps
+    lat_flat = cache_lat.reshape(P * ps, R)
+    cache_lat = lat_flat.at[row].set(
+        lat_row.astype(lat_flat.dtype)).reshape(P, ps, R)
+
+    q_abs = jnp.einsum("bshk,rhk->bhr", q_nope, params["wuk"].astype(adt))
+    q_lat = jnp.concatenate([q_abs[:, None], q_rope], axis=-1)   # (B,1,H,R)
+    scale = cfg.query_scale or (dn + dr) ** -0.5
+    o_lat = ops.mla_decode_paged(q_lat, cache_lat, block_tables, pos,
+                                 r_kv=r_kv, scale=scale,
+                                 logit_cap=cfg.attn_logit_softcap,
+                                 policy=policy)                  # (B,1,H,r_kv)
+    return _mla_expand(params, o_lat[:, 0], cfg, adt), cache_lat
+
+
+def mla_verify_paged(params, x, pos, cache_lat, block_tables,
+                     cfg: ModelConfig, *,
+                     policy: ops.KernelPolicy = ops.DEFAULT_POLICY,
+                     constrain=None):
+    """Multi-query MLA sweep over the paged latent pool (speculative verify
+    AND chunked paged prefill — same two callers as ``gqa_verify_paged``).
+
+    No dedicated kernel: in absorbed form the latent pool IS a GQA cache
+    with a single shared kv head — k_pages = the pool with an inserted
+    head axis (P, ps, 1, R), v_pages = its first r_kv lanes, queries =
+    [q_abs | q_rope] (B, Q, H, R) grouped G = H onto that one head — so
+    the generic ``ops.paged_verify_attention`` sweep (and its Pallas
+    kernel) serves MLA unchanged.  Returns the pending latent rows
+    (B, Q, R) for the caller's masked commit; the pool stays untouched."""
+    adt = x.dtype
+    r_kv, dr, dn = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.nope_head_dim
+    Q = x.shape[1]
+    posq = jnp.asarray(pos)[:, None] + jnp.arange(Q)[None, :]    # (B, Q)
+    q_nope, q_rope = _mla_queries(params, x, posq, cfg)          # (B,Q,H,*)
+    c_kv, k_rope = _mla_latent(params, x, posq, cfg)
+
+    lat_new = jnp.concatenate([c_kv, k_rope], axis=-1)           # (B, Q, R)
+    q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, params["wuk"].astype(adt))
+    q_lat = jnp.concatenate([q_abs, q_rope], axis=-1)            # (B,Q,H,R)
+    scale = cfg.query_scale or (dn + dr) ** -0.5
+    o_lat = ops.paged_verify_attention(
+        q_lat, cache_lat[:, :, None, :], cache_lat[:, :, None, :r_kv],
+        lat_new[:, :, None, :].astype(adt),
+        lat_new[:, :, None, :r_kv].astype(adt),
+        block_tables, pos, scale=scale,
+        logit_cap=cfg.attn_logit_softcap, policy=policy)         # (B,Q,H,r_kv)
+    o = jnp.einsum("bqhr,rhk->bqhk", o_lat, params["wuv"].astype(adt))
+    out = jnp.einsum("bqhk,hkd->bqd", o, params["wo"].astype(adt))
+    return out, lat_new

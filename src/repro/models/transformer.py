@@ -394,15 +394,37 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def paged_cache_blockers(cfg: ModelConfig) -> tuple[str, ...]:
+    """Named config features that keep a model family OFF the paged engine.
+
+    Empty for every family in the zoo: dense/MoE/codebook GQA ride the
+    shared page pools; MLA layers pool ONE compressed latent row per token;
+    sliding-window layers hold O(window) private ring pages behind a static
+    identity table; SSM layers park O(1) recurrent state in per-slot state
+    slots of the same cache pytree; deepseek's first dense layers get their
+    own stacked pool on the same page-id space.  The tuple form is the
+    contract: capability gates report the SPECIFIC blocking feature by
+    name, never a blanket boolean — an empty tuple means "serve it"."""
+    del cfg
+    return ()
+
+
 def supports_paged_cache(cfg: ModelConfig) -> bool:
-    """The paged layout covers the GQA attention families (dense / MoE /
-    multi-codebook).  SSM state is O(1) per slot (nothing to page), MLA
-    caches latents not k/v heads, and sliding-window / hybrid layouts need a
-    per-layer table — all natural follow-ons, rejected loudly for now."""
-    return (not cfg.uses_ssm and not cfg.use_mla
-            and not cfg.first_dense_layers and not cfg.local_global
-            and cfg.sliding_window == 0
-            and not (cfg.family == "hybrid" and cfg.hybrid_attn_every))
+    return not paged_cache_blockers(cfg)
+
+
+def int8_paged_blockers(cfg: ModelConfig) -> tuple[str, ...]:
+    """Features blocking the int8 paged storage mode: the per-row scale
+    leaves pair with full-length k/v page pools, which SSM state slots,
+    latent (MLA) pools, private windowed rings, and the hybrid shared
+    buffer do not carry."""
+    checks = (("uses_ssm", cfg.uses_ssm), ("use_mla", cfg.use_mla),
+              ("sliding_window", bool(cfg.sliding_window)),
+              ("local_global", cfg.local_global),
+              ("first_dense_layers", bool(cfg.first_dense_layers)),
+              ("hybrid_attn_every",
+               cfg.family == "hybrid" and bool(cfg.hybrid_attn_every)))
+    return tuple(name for name, on in checks if on)
 
 
 def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
@@ -411,11 +433,34 @@ def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
     """Zero-filled paged decode cache: per-unit page *pools* shared by every
     slot, one block table and one position counter per slot.
 
-    Layout per attention unit: k/v pools (n_units, n_pages, page_size, Hkv,
-    hd).  ``block_tables[s, j]`` is the physical page holding slot s's
-    logical block j (positions [j*ps, (j+1)*ps)); the engine parks free
-    slots on a reserved per-slot scratch page so decode needs no validity
-    branch.  ``pos`` is per-slot — the batch is ragged by construction.
+    Per-family layout — every group keeps page axis 1 so the engine's page
+    accounting / snapshot / host-tier seams iterate them uniformly:
+
+      * full-attention GQA unit: k/v pools (n_units, n_pages, page_size,
+        Hkv, hd) addressed through ``block_tables`` (positions
+        [j*ps, (j+1)*ps) live on physical page ``block_tables[s, j]``; the
+        engine parks free slots on a reserved per-slot scratch page so
+        decode needs no validity branch).
+      * MLA unit: ONE latent pool (n_units, n_pages, page_size, R) with
+        R = kv_lora_rank + rope_head_dim — a single row per token shared
+        by every head (~5x fewer KV bytes than per-head k/v), on the same
+        block tables.
+      * sliding-window unit: a PRIVATE ring of ``nbw = ceil(min(max_len,
+        window)/ps)`` pages per slot, pool (n_units, n_slots*nbw, ps, Hkv,
+        hd).  The "page table" is the static identity ``slot*nbw + j`` and
+        logical blocks wrap at ``window/page_size`` — O(window) bytes per
+        slot no matter how deep the stream runs, no host page management.
+      * SSM unit: per-slot O(1) state slots {"conv": (n_units, n_slots,
+        conv_width-1, cd), "ssm": (n_units, n_slots, H, P, N) fp32} — state
+        rides the cache pytree, so snapshot/restore, preemption-fold and
+        chaos drills cover recurrent layers unchanged.
+      * hybrid shared block: per-slot linear buffer ``cache["shared"]``
+        (n_units, n_slots, max_len, Hkv, hd), decoded through the paged
+        sweep behind a static identity table.
+      * first dense layers: ``cache["dense"]`` — a stacked group
+        (n_dense, n_pages, page_size, ...) sharing the main page-id space.
+
+    ``pos`` is per-slot — the batch is ragged by construction.
 
     ``dtype="int8"`` selects the quantized storage mode: int8 pools plus
     per-ROW-per-kv-head fp32 scale leaves ``k_scale``/``v_scale`` of shape
@@ -425,29 +470,69 @@ def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
     sharing and snapshots stay bit-stable.  The cache *structure* carries
     the mode — downstream seams discriminate on ``"k_scale" in unit``,
     which is static under jit."""
-    if not supports_paged_cache(cfg):
-        raise ValueError(f"{cfg.name}: paged KV cache supports dense GQA "
-                         "families only (no ssm/mla/window/hybrid)")
+    blockers = paged_cache_blockers(cfg)
+    if blockers:
+        raise ValueError(f"{cfg.name}: paged KV cache blocked by "
+                         f"{blockers[0]}")
     quantized = dtype == "int8"
+    if quantized:
+        i8_block = int8_paged_blockers(cfg)
+        if i8_block:
+            raise ValueError(f"{cfg.name}: int8 paged cache blocked by "
+                             f"{i8_block[0]}")
     adt = jnp.int8 if quantized else common.dt(dtype)
     hd = cfg.resolved_head_dim
     nu, u = n_units(cfg), unit_size(cfg)
     hkv = cfg.padded_kv_heads
-    units = {
-        f"sub{i}": {
-            "k": jnp.zeros((nu, n_pages, page_size, hkv, hd), adt),
-            "v": jnp.zeros((nu, n_pages, page_size, hkv, hd), adt)}
-        for i in range(u)
-    }
-    if quantized:
-        for sub in units.values():
-            sub["k_scale"] = jnp.zeros((nu, n_pages, page_size, hkv, 1),
-                                       jnp.float32)
-            sub["v_scale"] = jnp.zeros((nu, n_pages, page_size, hkv, 1),
-                                       jnp.float32)
-    return {"pos": jnp.zeros((n_slots,), jnp.int32),
-            "block_tables": jnp.zeros((n_slots, max_blocks), jnp.int32),
-            "units": units}
+    R = cfg.kv_lora_rank + cfg.rope_head_dim
+    max_len = max_blocks * page_size
+
+    units: dict[str, Any] = {}
+    for i in range(u):
+        if cfg.uses_ssm:
+            cd = ssm.conv_dim(cfg)
+            H, P_, N = cfg.resolved_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            units[f"sub{i}"] = {
+                "conv": jnp.zeros((nu, n_slots, cfg.conv_width - 1, cd), adt),
+                "ssm": jnp.zeros((nu, n_slots, H, P_, N), jnp.float32)}
+        elif cfg.use_mla:
+            units[f"sub{i}"] = {
+                "lat": jnp.zeros((nu, n_pages, page_size, R), adt)}
+        else:
+            w = cfg.window_for_layer(i)
+            if w > 0:
+                nbw = -(-min(max_len, w) // page_size)
+                units[f"sub{i}"] = {
+                    "k": jnp.zeros((nu, n_slots * nbw, page_size, hkv, hd),
+                                   adt),
+                    "v": jnp.zeros((nu, n_slots * nbw, page_size, hkv, hd),
+                                   adt)}
+            else:
+                sub = {"k": jnp.zeros((nu, n_pages, page_size, hkv, hd), adt),
+                       "v": jnp.zeros((nu, n_pages, page_size, hkv, hd), adt)}
+                if quantized:
+                    sub["k_scale"] = jnp.zeros(
+                        (nu, n_pages, page_size, hkv, 1), jnp.float32)
+                    sub["v_scale"] = jnp.zeros(
+                        (nu, n_pages, page_size, hkv, 1), jnp.float32)
+                units[f"sub{i}"] = sub
+    cache = {"pos": jnp.zeros((n_slots,), jnp.int32),
+             "block_tables": jnp.zeros((n_slots, max_blocks), jnp.int32),
+             "units": units}
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        cache["shared"] = {
+            "k": jnp.zeros((nu, n_slots, max_len, hkv, hd), adt),
+            "v": jnp.zeros((nu, n_slots, max_len, hkv, hd), adt)}
+    if cfg.first_dense_layers:
+        nd = cfg.first_dense_layers
+        if cfg.use_mla:
+            cache["dense"] = {
+                "lat": jnp.zeros((nd, n_pages, page_size, R), adt)}
+        else:
+            cache["dense"] = {
+                "k": jnp.zeros((nd, n_pages, page_size, hkv, hd), adt),
+                "v": jnp.zeros((nd, n_pages, page_size, hkv, hd), adt)}
+    return cache
 
 
 def _block_prefill(blk, x, positions, cfg: ModelConfig, ctx: RunCtx, *,
@@ -482,11 +567,21 @@ def _block_prefill(blk, x, positions, cfg: ModelConfig, ctx: RunCtx, *,
 
 
 def prefill(params, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(), *,
-            max_len: int = 0, extra_embeds: jax.Array | None = None):
+            max_len: int = 0, extra_embeds: jax.Array | None = None,
+            full_cache: bool = False):
     """Process the full prompt and build the decode cache.
 
     Returns (logits, cache) — logits for every prompt position (the serving
     layer samples from the last one); cache['pos'] = prompt length.
+
+    ``full_cache=True`` keeps sliding-window layers' caches LINEAR at
+    capacity ``max_len`` instead of wrapping them into an O(window) ring:
+    position ``p``'s row sits at index ``p``.  The serving engine needs
+    this for page inject — prompts pad up to a power-of-2 bucket, and in
+    the ring layout the pad rows written past the prompt would overwrite
+    the real window tail before the engine can scatter it into the slot's
+    private ring pages.  Attention masking is unchanged (the window still
+    clips scores); only the emitted cache layout differs.
     """
     x = embed_tokens(params, tokens, cfg, ctx)
     if extra_embeds is not None:
@@ -500,7 +595,8 @@ def prefill(params, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(), *,
 
     dense_cache = []
     for blk in params.get("dense_layers", []):
-        cap = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        cap = min(max_len, cfg.sliding_window) \
+            if (cfg.sliding_window and not full_cache) else max_len
         x, c, aux = _block_prefill(blk, x, positions, cfg, ctx,
                                    window=cfg.sliding_window,
                                    cache_len=cap, aux=aux)
@@ -521,7 +617,8 @@ def prefill(params, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(), *,
                 unit_cache[f"sub{i}"] = {"conv": conv, "ssm": ssm_state}
             else:
                 w = cfg.window_for_layer(i)
-                cap = min(max_len, w) if w > 0 else max_len
+                cap = min(max_len, w) if (w > 0 and not full_cache) \
+                    else max_len
                 x, c, aux = _block_prefill(sub, x, positions, cfg, ctx,
                                            window=w, cache_len=cap, aux=aux)
                 unit_cache[f"sub{i}"] = c
@@ -551,10 +648,31 @@ def prefill(params, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(), *,
 def _block_decode(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *,
                   window: int, block_tables: jax.Array | None = None):
     h = _norm(x, blk["norm1"], cfg)
-    if cfg.use_mla:
+    if cfg.use_mla and block_tables is not None:
+        a, lat = attn.mla_decode_paged(blk["attn"], h, pos, c["lat"],
+                                       block_tables, cfg,
+                                       policy=ctx.kernel_policy,
+                                       constrain=ctx.constrain)
+        c = {"lat": lat}
+    elif cfg.use_mla:
         a, lat = attn.mla_decode(blk["attn"], h, pos, c["lat"], cfg,
+                                 policy=ctx.kernel_policy,
                                  constrain=ctx.constrain)
         c = {"lat": lat}
+    elif block_tables is not None and window > 0:
+        # sliding-window layer on the paged engine: the pool is a batch of
+        # PRIVATE per-slot rings ((n_slots*nbw, ps, Hkv, *) -> (B, Cw, ...))
+        # behind a static identity table — ragged pos masks per row
+        B = pos.shape[0]
+        kp, vp = c["k"], c["v"]
+        nbw, ps = kp.shape[0] // B, kp.shape[1]
+        ring = lambda p: p.reshape(B, nbw * ps, *p.shape[2:])
+        a, (k, v) = attn.gqa_decode_ragged(blk["attn"], h, pos,
+                                           (ring(kp), ring(vp)), cfg,
+                                           window=window,
+                                           policy=ctx.kernel_policy,
+                                           constrain=ctx.constrain)
+        c = {"k": k.reshape(kp.shape), "v": v.reshape(vp.shape)}
     elif block_tables is not None:
         if "k_scale" in c:       # int8 pools: thread the scale leaves
             kv_in = (c["k"], c["v"], c["k_scale"], c["v_scale"])
@@ -595,42 +713,125 @@ def _paged_decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx,
                        active: jax.Array | None):
     """decode_step over the paged cache layout: per-slot positions, block
     tables, shared page pools.  ``active`` (B,) gates the position advance —
-    parked slots keep rewriting row ``pos[b]`` of their scratch page and
-    their sampled tokens are discarded by the engine, so one executable
-    serves every occupancy pattern."""
+    parked slots keep rewriting row ``pos[b]`` of their scratch page (or
+    their private ring / state slot) and their sampled tokens are discarded
+    by the engine, so one executable serves every occupancy pattern.
+
+    Routing mirrors the ring ``decode_step`` sub for sub: MLA units sweep
+    the latent pool, sliding-window units their private rings, SSM units
+    advance per-slot recurrent state, first dense layers and the hybrid
+    shared block run before/inside the scan — the full model zoo behind
+    ONE seam."""
     pos = cache["pos"]                                     # (B,)
     bt = cache["block_tables"]
     x = embed_tokens(params, tokens, cfg, ctx)
+    emb0 = x
+    shared = params.get("shared_attn")
+
+    new_dense = None
+    if cfg.first_dense_layers:
+        new_layers = []
+        for j, blk in enumerate(params["dense_layers"]):
+            c = jax.tree.map(lambda p: p[j], cache["dense"])
+            x, c2 = _block_decode(blk, x, pos, c, cfg, ctx,
+                                  window=cfg.sliding_window, block_tables=bt)
+            new_layers.append(c2)
+        new_dense = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
 
     def body(x, xs):
         unit, c_unit = xs
         new_c = {}
         for i in range(unit_size(cfg)):
             sub, c = unit[f"sub{i}"], c_unit[f"sub{i}"]
-            x, c2 = _block_decode(sub, x, pos, c, cfg, ctx, window=0,
-                                  block_tables=bt)
-            new_c[f"sub{i}"] = c2
+            if cfg.uses_ssm:
+                h = common.rmsnorm(x, sub["pre_norm"], cfg.norm_eps)
+                out, (conv, ssm_state) = ssm.mamba_decode(
+                    sub, h, (c["conv"], c["ssm"]), cfg,
+                    constrain=ctx.constrain)
+                x = x + out
+                # state pools keep their storage dtype (mamba_decode
+                # computes the conv tail in activation dtype): the fused
+                # serving loop carries the cache through lax.scan, which
+                # needs a dtype-stable carry
+                new_c[f"sub{i}"] = {"conv": conv.astype(c["conv"].dtype),
+                                    "ssm": ssm_state.astype(c["ssm"].dtype)}
+            else:
+                w = cfg.window_for_layer(i)
+                x, c2 = _block_decode(sub, x, pos, c, cfg, ctx, window=w,
+                                      block_tables=bt)
+                new_c[f"sub{i}"] = c2
+        if shared is not None:
+            # per-slot linear buffer behind a static identity table: slot
+            # b's block j IS physical page b*nbs + j of the reshaped pool
+            h = jnp.concatenate([x, emb0], axis=-1) \
+                @ shared["w_in"].astype(x.dtype)
+            sc = c_unit["__shared__"]
+            B, Cs = sc["k"].shape[0], sc["k"].shape[1]
+            nbs = bt.shape[1]
+            ps = Cs // nbs
+            bt_id = jnp.arange(B * nbs, dtype=jnp.int32).reshape(B, nbs)
+            pool = lambda p: p.reshape(B * nbs, ps, *p.shape[2:])
+            out, sc2 = _block_decode(shared["block"], h, pos,
+                                     {"k": pool(sc["k"]), "v": pool(sc["v"])},
+                                     cfg, ctx, window=0, block_tables=bt_id)
+            x = x + (out - h)
+            new_c["__shared__"] = {"k": sc2["k"].reshape(sc["k"].shape),
+                                   "v": sc2["v"].reshape(sc["v"].shape)}
         return x, new_c
 
-    x, new_units = jax.lax.scan(body, x, (params["layers"], cache["units"]))
+    units_cache = cache["units"]
+    if shared is not None:
+        units_cache = dict(units_cache)
+        units_cache["__shared__"] = cache["shared"]
+    x, new_units = jax.lax.scan(body, x, (params["layers"], units_cache))
     x = _norm(x, params["final_norm"], cfg)
     logits = lm_logits(params, x, cfg, ctx)
     adv = jnp.ones_like(pos) if active is None \
         else jnp.asarray(active, jnp.int32)
-    new_cache = {"pos": pos + adv, "block_tables": bt, "units": new_units}
+    new_cache = {"pos": pos + adv, "block_tables": bt,
+                 "units": {k: v for k, v in new_units.items()
+                           if k != "__shared__"}}
+    if shared is not None:
+        new_cache["shared"] = new_units["__shared__"]
+    if new_dense is not None:
+        new_cache["dense"] = new_dense
     return logits, new_cache
 
 
+def speculative_blockers(cfg: ModelConfig) -> tuple[str, ...]:
+    """Named features blocking speculative verify/commit.  SSM recurrence
+    would need per-step state snapshots to roll back, MLA decode runs the
+    absorbed custom path (drafting against it is a follow-on), multi-
+    codebook drafts would have to match on every codebook, and the hybrid
+    shared block carries its own cache."""
+    checks = (("uses_ssm", cfg.uses_ssm), ("use_mla", cfg.use_mla),
+              ("n_codebooks", bool(cfg.n_codebooks)),
+              ("first_dense_layers", bool(cfg.first_dense_layers)),
+              ("hybrid_attn_every",
+               cfg.family == "hybrid" and bool(cfg.hybrid_attn_every)))
+    return tuple(name for name, on in checks if on)
+
+
 def supports_speculative(cfg: ModelConfig) -> bool:
-    """Speculative verify covers the GQA attention families (dense / MoE /
-    local-global / sliding-window).  SSM recurrence would need per-step
-    state snapshots to roll back, MLA decode runs an absorbed custom path,
-    multi-codebook drafts would have to match on every codebook, and the
-    hybrid shared block carries its own cache — all follow-ons, rejected
-    loudly for now."""
-    return (not cfg.uses_ssm and not cfg.use_mla and not cfg.n_codebooks
-            and not cfg.first_dense_layers
-            and not (cfg.family == "hybrid" and cfg.hybrid_attn_every))
+    return not speculative_blockers(cfg)
+
+
+def chunked_prefill_blockers(cfg: ModelConfig) -> tuple[str, ...]:
+    """Named features blocking the paged multi-query sweep behind chunked
+    prefill / prefix-cache joins (``prefill_suffix``): SSM and the hybrid
+    shared block are recurrent or privately cached (no shared full-length
+    pool to sweep a suffix chunk against), windowed layers keep O(window)
+    ring pages, codebook models feed (B, Q, n_cb) tokens.  MLA and first
+    dense layers ARE covered — the latent pool in absorbed form is a
+    single-kv-head GQA pool, which is what lets deepseek ride the prefix
+    cache."""
+    checks = (("uses_ssm", cfg.uses_ssm),
+              ("n_codebooks", bool(cfg.n_codebooks)),
+              ("hybrid_attn_every",
+               cfg.family == "hybrid" and bool(cfg.hybrid_attn_every)),
+              ("sliding_window", bool(cfg.sliding_window)),
+              ("local_global", cfg.local_global))
+    return tuple(name for name, on in checks if on)
 
 
 def _block_verify(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *,
@@ -639,7 +840,15 @@ def _block_verify(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *,
     one cache sweep and returns this layer's *pending* k/v rows instead of
     writing the cache."""
     h = _norm(x, blk["norm1"], cfg)
-    if block_tables is not None:
+    if cfg.use_mla:
+        # paged-only (the ring gate names use_mla): the latent pool in
+        # absorbed form is a single-kv-head GQA pool — generic sweep
+        a, lat_new = attn.mla_verify_paged(blk["attn"], h, pos, c["lat"],
+                                           block_tables, cfg,
+                                           policy=ctx.kernel_policy,
+                                           constrain=ctx.constrain)
+        kv_new = None
+    elif block_tables is not None:
         kv_in = ((c["k"], c["v"], c["k_scale"], c["v_scale"])
                  if "k_scale" in c else (c["k"], c["v"]))
         a, kv_new = attn.gqa_verify_paged(blk["attn"], h, pos, kv_in,
@@ -663,7 +872,9 @@ def _block_verify(blk, x, pos, c, cfg: ModelConfig, ctx: RunCtx, *,
         f = mlp_forward(blk["ffn"], h, cfg, constrain=ctx.constrain)
     if cfg.post_norms:
         f = _norm(f, blk["post_ffn_norm"], cfg)
-    return x + f, {"k": kv_new[0], "v": kv_new[1]}
+    pend = {"lat": lat_new} if kv_new is None \
+        else {"k": kv_new[0], "v": kv_new[1]}
+    return x + f, pend
 
 
 def verify_step(params, cache, tokens, cfg: ModelConfig,
@@ -677,14 +888,34 @@ def verify_step(params, cache, tokens, cfg: ModelConfig,
     accepted prefix until :func:`commit_spec` / :func:`commit_spec_paged`
     scatters rows ``0..n_accept`` and advances ``pos``.  Both cache
     layouts share this seam, discriminated by pytree structure exactly
-    like ``decode_step``."""
-    if not supports_speculative(cfg):
-        raise ValueError(f"{cfg.name}: speculative decode supports dense "
-                         "GQA families only (no ssm/mla/codebooks/hybrid)")
+    like ``decode_step``.
+
+    MLA units pend one latent row per token ({"lat": (n_units, B, Q, R)},
+    paged only); first dense layers pend under ``pending["__dense__"]``
+    (stacked over layers) — absent for configs without them, so the
+    established pending pytree is unchanged for the GQA families.  The
+    gate is per-feature: ring sweeps require ``speculative_blockers``
+    empty, paged sweeps ``chunked_prefill_blockers`` empty (the looser
+    contract both the spec engine and prefix-cache joins build on)."""
     paged = "block_tables" in cache
+    blockers = chunked_prefill_blockers(cfg) if paged \
+        else speculative_blockers(cfg)
+    if blockers:
+        kind = "paged verify sweep" if paged else "speculative decode"
+        raise ValueError(f"{cfg.name}: {kind} blocked by {blockers[0]}")
     pos = cache["pos"]                  # () ring | (B,) paged
     bt = cache.get("block_tables")
     x = embed_tokens(params, tokens, cfg, ctx)
+
+    pend_dense = None
+    if cfg.first_dense_layers:          # paged-only: the ring gate names it
+        layer_pend = []
+        for j, blk in enumerate(params["dense_layers"]):
+            c = jax.tree.map(lambda p: p[j], cache["dense"])
+            x, p = _block_verify(blk, x, pos, c, cfg, ctx,
+                                 window=cfg.sliding_window, block_tables=bt)
+            layer_pend.append(p)
+        pend_dense = jax.tree.map(lambda *xs: jnp.stack(xs), *layer_pend)
 
     def body(x, xs):
         unit, c_unit = xs
@@ -700,6 +931,9 @@ def verify_step(params, cache, tokens, cfg: ModelConfig,
     x, pending = jax.lax.scan(body, x, (params["layers"], cache["units"]))
     x = _norm(x, params["final_norm"], cfg)
     logits = lm_logits(params, x, cfg, ctx)
+    if pend_dense is not None:
+        pending = dict(pending)
+        pending["__dense__"] = pend_dense
     return logits, pending
 
 
@@ -764,15 +998,22 @@ def commit_spec_paged(cache, pending, n_accept, active, cfg: ModelConfig):
     Quantized caches (``"k_scale" in unit``) quantize the pending rows
     per-row at commit time and scatter the int8 rows plus their fp32
     scales through the same index — dropped rows drop both halves, so a
-    row's (q, scale) pair is always written atomically."""
+    row's (q, scale) pair is always written atomically.
+
+    MLA units commit their single pending latent row per token through the
+    identical scatter (key "lat", pool (n_units, P, ps, R)); a pending
+    ``"__dense__"`` group commits into ``cache["dense"]`` the same way —
+    dense layers share the main page-id space, so the SAME block-table
+    rows address them."""
     pos = cache["pos"]                                       # (B,)
     bt = cache["block_tables"]
-    new_units = {}
-    for name, c in cache["units"].items():
-        pend = pending[name]
+
+    def commit_group(c, pend):
         quantized = "k_scale" in c
-        nu, B, Q = pend["k"].shape[0], pend["k"].shape[1], pend["k"].shape[2]
-        P, ps = c["k"].shape[1], c["k"].shape[2]
+        keys = [k for k in ("k", "v", "lat") if k in c]
+        ng, P, ps = c[keys[0]].shape[0], c[keys[0]].shape[1], \
+            c[keys[0]].shape[2]
+        B, Q = pend[keys[0]].shape[1], pend[keys[0]].shape[2]
         i = jnp.arange(Q)[None, :]                           # (1, Q)
         posq = pos[:, None] + i                              # (B, Q)
         page = jnp.take_along_axis(bt, jnp.minimum(posq // ps,
@@ -781,24 +1022,30 @@ def commit_spec_paged(cache, pending, n_accept, active, cfg: ModelConfig):
         ok = (i <= n_accept[:, None]) & (active[:, None] > 0)
         rows = jnp.where(ok, row, P * ps).reshape(-1)        # OOB dropped
 
-        def scatter(pool, vals, rows=rows, nu=nu, B=B, Q=Q, P=P, ps=ps):
-            flat = pool.reshape(nu, P * ps, *pool.shape[3:])
+        def scatter(pool, vals):
+            flat = pool.reshape(ng, P * ps, *pool.shape[3:])
             flat = flat.at[:, rows].set(
-                vals.astype(flat.dtype).reshape(nu, B * Q, *vals.shape[3:]),
+                vals.astype(flat.dtype).reshape(ng, B * Q, *vals.shape[3:]),
                 mode="drop")
             return flat.reshape(pool.shape)
 
         new = {}
-        for key in ("k", "v"):
-            if quantized:
+        for key in keys:
+            if quantized and key in ("k", "v"):
                 qrows, srows = quant.quantize_int8_rows(pend[key])
                 new[key] = scatter(c[key], qrows)
                 new[key + "_scale"] = scatter(c[key + "_scale"], srows)
             else:
                 new[key] = scatter(c[key], pend[key])
-        new_units[name] = new
+        return new
+
+    new_units = {name: commit_group(c, pending[name])
+                 for name, c in cache["units"].items()}
     adv = jnp.where(active > 0, n_accept + 1, 0)
-    return {"pos": pos + adv, "block_tables": bt, "units": new_units}
+    out = {"pos": pos + adv, "block_tables": bt, "units": new_units}
+    if "__dense__" in pending:
+        out["dense"] = commit_group(cache["dense"], pending["__dense__"])
+    return out
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(),
@@ -834,7 +1081,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx = RunCtx(),
                 out, (conv, ssm_state) = ssm.mamba_decode(
                     sub, h, (c["conv"], c["ssm"]), cfg, constrain=ctx.constrain)
                 x = x + out
-                new_c[f"sub{i}"] = {"conv": conv, "ssm": ssm_state}
+                new_c[f"sub{i}"] = {"conv": conv.astype(c["conv"].dtype),
+                                    "ssm": ssm_state.astype(c["ssm"].dtype)}
             else:
                 window = cfg.window_for_layer(i)
                 x, c2 = _block_decode(sub, x, pos, c, cfg, ctx, window=window)

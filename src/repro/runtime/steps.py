@@ -241,9 +241,10 @@ def make_prefill_suffix_step(cfg: ModelConfig, step_cfg: StepConfig,
     suffix length (the engine loops it and pads the tail).  Jit with
     ``donate_argnums=(1,)`` so the page pools update in place."""
     ctx = make_run_ctx(cfg, rules, step_cfg)
-    if not tfm.supports_speculative(cfg):
-        raise ValueError(f"{cfg.name}: chunked paged prefill rides the "
-                         "speculative verify seam (dense GQA families only)")
+    blockers = tfm.chunked_prefill_blockers(cfg)
+    if blockers:
+        raise ValueError(f"{cfg.name}: chunked paged prefill blocked by "
+                         f"{blockers[0]}")
 
     def suffix_step(params, cache, tokens, n_commit):
         return tfm.prefill_suffix(params, cache, tokens,
@@ -375,9 +376,10 @@ def make_speculative_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
     minimum); the paged variant keeps per-slot counts.  Jit with
     ``donate_argnums`` on the cache, as with the plain loop."""
     ctx = make_run_ctx(cfg, rules, step_cfg)
-    if not tfm.supports_speculative(cfg):
-        raise ValueError(f"{cfg.name}: speculative decode supports dense "
-                         "GQA families only (no ssm/mla/codebooks/hybrid)")
+    blockers = tfm.speculative_blockers(cfg)
+    if blockers:
+        raise ValueError(f"{cfg.name}: speculative decode blocked by "
+                         f"{blockers[0]}")
 
     def spec_loop(params, cache, tokens, drafter_state, key=None):
         return _spec_loop_impl(params, cache, tokens, None, drafter_state,
@@ -401,9 +403,11 @@ def make_paged_speculative_decode_loop(cfg: ModelConfig, step_cfg: StepConfig,
     slot per step.  Parked slots verify scratch garbage (fixed grid, one
     executable) but neither commit nor advance, and their counts are 0."""
     ctx = make_run_ctx(cfg, rules, step_cfg)
-    if not tfm.supports_speculative(cfg):
-        raise ValueError(f"{cfg.name}: speculative decode supports dense "
-                         "GQA families only (no ssm/mla/codebooks/hybrid)")
+    blockers = (tfm.speculative_blockers(cfg)
+                or tfm.chunked_prefill_blockers(cfg))
+    if blockers:
+        raise ValueError(f"{cfg.name}: paged speculative decode blocked by "
+                         f"{blockers[0]}")
 
     def spec_loop(params, cache, tokens, active, drafter_state, key=None):
         return _spec_loop_impl(params, cache, tokens,

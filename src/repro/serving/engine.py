@@ -48,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+import warnings
 from typing import Callable
 
 import jax
@@ -99,8 +100,10 @@ class EngineConfig:
     drafter_hist: int = 128       # ngram lookup history per slot
     # prefix sharing: admit_with_prefix maps cached prompt prefixes onto
     # shared read-only pages and only the uncached suffix is prefilled
-    # (chunked, through the paged verify sweep).  Dense-GQA families only;
-    # silently disabled elsewhere (multi-codebook keeps the legacy path).
+    # (chunked, through the paged verify sweep).  Families whose pages ride
+    # the main block tables only (dense/MoE GQA and MLA, deepseek's first
+    # dense layers included); silently disabled elsewhere — windowed rings,
+    # SSM state slots and multi-codebook keep the legacy cold-prefill path.
     prefix_cache: bool = True
     prefill_chunk: int = 16       # suffix tokens per chunked-prefill sweep
     # preemption: admit on prompt pages only, grow per chunk, and when the
@@ -276,16 +279,18 @@ class ServeEngine:
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.params = params
-        # quantized KV pages ride the paged dense-GQA verify/commit seam;
-        # other families warn once and keep the unquantized pools
+        # quantized KV pages pair per-row scale leaves with full-length k/v
+        # page pools; families whose pools are latent rows, private rings or
+        # state slots warn once (naming the blocking feature) and keep the
+        # unquantized layout
         kv_dtype = engine_cfg.cache_dtype
         if engine_cfg.kv_dtype == "int8":
-            if tfm.supports_speculative(cfg):
+            i8_block = tfm.int8_paged_blockers(cfg)
+            if not i8_block:
                 kv_dtype = "int8"
             else:
                 ops.warn_kv_dtype_fallback(
-                    cfg.name, "int8 pages ride the paged dense-GQA "
-                    "verify/commit seam")
+                    cfg.name, f"int8 paged cache blocked by {i8_block[0]}")
         self.kv_dtype = kv_dtype
         # engine config owns the decode-sweep operating point: fold it onto
         # the kernel policy so every compiled loop (decode, verify, suffix
@@ -321,22 +326,38 @@ class ServeEngine:
                                host_pages=engine_cfg.host_pages,
                                transfer_j_per_byte=engine_cfg.transfer_j_per_byte,
                                recompute_j_per_token=engine_cfg.recompute_j_per_token)
-        # prefix sharing rides the speculative verify seam (suffix chunks
-        # are scored by paged_verify_attention), so it covers the same
-        # dense-GQA families; multi-codebook et al. keep the legacy path
+        # prefix sharing rides the chunked-prefill verify seam (suffix
+        # chunks are scored by paged_verify_attention): any family whose
+        # pages live on the main block tables qualifies — dense/MoE GQA and
+        # MLA (deepseek's first dense layers included).  Windowed rings,
+        # SSM state slots and the hybrid shared buffer keep the cold path.
         self._use_prefix = (engine_cfg.prefix_cache
-                            and tfm.supports_speculative(cfg))
+                            and not tfm.chunked_prefill_blockers(cfg))
         self.scheduler = Scheduler(engine_cfg.n_slots, self.kv,
                                    admission=admission,
                                    max_skip=engine_cfg.max_skip,
                                    lazy=engine_cfg.preempt,
                                    prefix=self._use_prefix)
         self.cache = self.kv.make_cache()
+        # unit subs whose page axis rides the main block tables — the only
+        # pools the page-granular seams (host tier, CoW copy, page bytes)
+        # may touch.  Windowed rings / SSM state slots are slot-indexed on
+        # axis 1, so treating them as pages would corrupt other slots.
+        self._table_subs = frozenset(
+            f"sub{i}" for i in range(tfm.unit_size(cfg))
+            if not cfg.uses_ssm
+            and (cfg.use_mla or cfg.window_for_layer(i) == 0))
         self._tier_restore = None            # AOT page-in scatter (H2D)
         self._transfer_seen = 0.0            # kv.transfer_j folded so far
         if engine_cfg.host_tier:
-            self.kv.attach_tier(self._fetch_page, self._restore_page,
-                                self._cache_page_bytes())
+            if self.kv.tables_active:
+                self.kv.attach_tier(self._fetch_page, self._restore_page,
+                                    self._cache_page_bytes())
+            else:
+                warnings.warn(
+                    f"config {cfg.name!r}: host KV tier disabled: no page "
+                    "pool rides the block tables (state-slot layout)",
+                    RuntimeWarning, stacklevel=2)
         self._ctx = make_run_ctx(cfg, rules, self.step_cfg)
         # AOT-compiled paged chunk loops, keyed (chunk_len, speculative):
         # graceful degradation swaps in a shorter / non-speculative loop
@@ -351,9 +372,11 @@ class ServeEngine:
         self._drafter = None
         self._dstate = None
         if engine_cfg.spec_k > 0:
-            if not tfm.supports_speculative(cfg):
-                raise ValueError(f"{cfg.name}: speculative serving needs a "
-                                 "dense GQA family")
+            spec_block = (tfm.speculative_blockers(cfg)
+                          or tfm.chunked_prefill_blockers(cfg))
+            if spec_block:
+                raise ValueError(f"{cfg.name}: speculative serving blocked "
+                                 f"by {spec_block[0]}")
             self._drafter = get_drafter(engine_cfg.drafter, engine_cfg.spec_k,
                                         hist_len=engine_cfg.drafter_hist)
             # host mirror of the per-slot drafter state, synced like
@@ -391,27 +414,42 @@ class ServeEngine:
             cfg, ctx = self.cfg, self._ctx
 
             def prefill(params, inputs):
-                return tfm.prefill(params, inputs, cfg, ctx, max_len=bucket)
+                # full_cache: keep windowed layers linear so the bucket's
+                # pad rows can't wrap over the real window tail before the
+                # inject scatter reads it
+                return tfm.prefill(params, inputs, cfg, ctx, max_len=bucket,
+                                   full_cache=True)
 
             self._prefills[bucket] = jax.jit(prefill)
         return self._prefills[bucket]
 
     # -- host tier (two-tier KV hierarchy; docs/prefix_cache.md) -------------
+    def _table_groups(self, cache) -> dict:
+        """Pool groups whose axis 1 is the main page-id space: full-attention
+        / MLA unit subs plus the stacked first-dense group.  Slot-indexed
+        groups (windowed rings, SSM state, the hybrid shared buffer) are
+        NOT pages and never appear here."""
+        groups = {name: c for name, c in cache["units"].items()
+                  if name in self._table_subs}
+        if "dense" in cache:
+            groups["dense"] = cache["dense"]
+        return groups
+
     def _cache_page_bytes(self) -> int:
-        """Device bytes of ONE page across every unit pool — scale pools
-        included in int8 mode — the unit the transfer-energy model charges
-        per page-out / page-in direction."""
+        """Device bytes of ONE page across every table-backed pool — scale
+        pools included in int8 mode — the unit the transfer-energy model
+        charges per page-out / page-in direction."""
         total = 0
-        for c in self.cache["units"].values():
+        for c in self._table_groups(self.cache).values():
             for pool in c.values():                # (nu, P, ps, hkv, w)
                 total += (pool.size // pool.shape[1]) * pool.dtype.itemsize
         return total
 
     def _fetch_page(self, page: int) -> dict:
-        """D2H: copy one device page's rows out of every unit pool into
-        host-memory numpy blobs (keys ``unit/pool``)."""
+        """D2H: copy one device page's rows out of every table-backed pool
+        into host-memory numpy blobs (keys ``group/pool``)."""
         return {f"{name}/{key}": np.asarray(pool[:, page])
-                for name, c in self.cache["units"].items()
+                for name, c in self._table_groups(self.cache).items()
                 for key, pool in c.items()}
 
     def _restore_page(self, page: int, blob: dict) -> None:
@@ -419,12 +457,20 @@ class ServeEngine:
         One donated executable (page is a traced scalar) serves every
         promotion."""
         if self._tier_restore is None:
+            tsubs = self._table_subs
+
             def restore(cache, page, blob):
-                units = {name: {key: pool.at[:, page].set(
-                    blob[f"{name}/{key}"].astype(pool.dtype))
-                    for key, pool in c.items()}
-                    for name, c in cache["units"].items()}
-                return {**cache, "units": units}
+                def put(name, c):
+                    return {key: pool.at[:, page].set(
+                        blob[f"{name}/{key}"].astype(pool.dtype))
+                        for key, pool in c.items()}
+
+                units = {name: put(name, c) if name in tsubs else c
+                         for name, c in cache["units"].items()}
+                out = {**cache, "units": units}
+                if "dense" in cache:
+                    out["dense"] = put("dense", cache["dense"])
+                return out
 
             self._tier_restore = jax.jit(restore, donate_argnums=(0,))
         self.cache = self._tier_restore(
@@ -444,37 +490,108 @@ class ServeEngine:
             self._report.transfer_j += delta
 
     def _inject(self, bucket: int):
-        """Scatter a (padded) prefill cache into a slot's pages: one fused
-        donated update across every unit pool, keyed by flat row ids from
-        ``PagedKVCache.inject_rows`` (pad rows dropped).  Quantized pools
-        ("k_scale" present) quantize the prefill rows on the way in — the
-        same per-row int8 packing ``commit_spec_paged`` applies on the
-        decode path, so cold-prefilled and decoded rows are
-        indistinguishable."""
+        """Scatter a (padded) prefill cache into a slot's storage: one fused
+        donated update across every pool group, keyed by per-group flat row
+        ids from ``_inject_rows_tree`` (pad rows dropped).
+
+        Per family: table-backed groups (k/v, MLA ``lat``, the stacked
+        first-dense group) land on the slot's pages via
+        ``PagedKVCache.inject_rows``; sliding-window groups scatter the
+        prompt's last ``window`` rows into the slot's private ring pages;
+        the hybrid shared buffer takes rows ``[0, L)`` of its per-slot
+        linear span; SSM groups overwrite the slot's O(1) state slot
+        outright (``slot`` is a traced scalar — one executable per bucket
+        serves every slot).  Quantized pools ("k_scale" present) quantize
+        the prefill rows on the way in — the same per-row int8 packing
+        ``commit_spec_paged`` applies on the decode path, so cold-prefilled
+        and decoded rows are indistinguishable."""
         if bucket not in self._injects:
-            def inject(cache, prefill_units, rows):
-                def scatter(pool, vals):
+            def inject(cache, pcache, rows, slot):
+                def scatter(pool, vals, r):
                     nu = pool.shape[0]
                     flat = pool.reshape(nu, -1, *pool.shape[3:])
-                    flat = flat.at[:, rows].set(
+                    flat = flat.at[:, r].set(
                         vals.astype(flat.dtype), mode="drop")
                     return flat.reshape(pool.shape)
 
-                units = {}
-                for name, c in cache["units"].items():
-                    src, new = prefill_units[name], {}
-                    for key in ("k", "v"):
-                        vals = src[key][:, 0]      # (nu, bucket, hkv, hd)
+                def inject_group(c, src, r):
+                    new = {}
+                    for key in ("k", "v", "lat"):
+                        if key not in c:
+                            continue
+                        vals = src[key][:, 0]  # (nu, bucket, ...)
                         if key + "_scale" in c:
                             vals, scales = quant.quantize_int8_rows(vals)
                             new[key + "_scale"] = scatter(
-                                c[key + "_scale"], scales)
-                        new[key] = scatter(c[key], vals)
-                    units[name] = new
-                return {**cache, "units": units}
+                                c[key + "_scale"], scales, r)
+                        new[key] = scatter(c[key], vals, r)
+                    return new
+
+                units = {}
+                for name, c in cache["units"].items():
+                    src = pcache["units"][name]
+                    if "conv" in c:       # SSM: overwrite the state slot
+                        units[name] = {
+                            "conv": c["conv"].at[:, slot].set(
+                                src["conv"][:, 0].astype(c["conv"].dtype)),
+                            "ssm": c["ssm"].at[:, slot].set(
+                                src["ssm"][:, 0])}
+                    else:
+                        units[name] = inject_group(c, src, rows[name])
+                out = {**cache, "units": units}
+                if "shared" in cache:
+                    out["shared"] = inject_group(
+                        cache["shared"], pcache["shared"],
+                        rows["__shared__"])
+                if "dense" in cache:
+                    # ring prefill keeps dense caches as a per-layer list
+                    # (no unit axis); stack to the paged group's layout
+                    src = {key: jnp.stack([c[key] for c in pcache["dense"]])
+                           for key in cache["dense"]}
+                    out["dense"] = inject_group(cache["dense"], src,
+                                                rows["__dense__"])
+                return out
 
             self._injects[bucket] = jax.jit(inject, donate_argnums=(0,))
         return self._injects[bucket]
+
+    def _inject_rows_tree(self, slot: int, bucket: int, L: int) -> dict:
+        """Per-group flat destination rows for ``_inject``: length-``bucket``
+        arrays mapping prefill index ``p`` to a pool row, out-of-bounds
+        (dropped) where ``p`` is padding or outside the group's retention.
+
+        Table groups reuse ``PagedKVCache.inject_rows``; a window-``w``
+        group keeps only ``[max(0, L - w), L)`` at ring offset ``p % Cw`` of
+        the slot's private pages (older rows can never be attended again);
+        the shared buffer is the slot's linear span."""
+        cfg, kv = self.cfg, self.kv
+        ps = kv.page_size
+        main = np.asarray(kv.inject_rows(slot, bucket, L))
+        rows = {}
+        for i in range(tfm.unit_size(cfg)):
+            name = f"sub{i}"
+            if cfg.uses_ssm:
+                continue                   # state slots need no row map
+            w = 0 if cfg.use_mla else cfg.window_for_layer(i)
+            if w <= 0:
+                rows[name] = main
+                continue
+            nbw = -(-min(kv.max_blocks * ps, w) // ps)
+            cw = nbw * ps
+            p = np.arange(bucket)
+            r = slot * cw + p % cw
+            valid = (p >= max(0, L - w)) & (p < L)
+            rows[name] = np.where(valid, r,
+                                  self.ecfg.n_slots * cw).astype(np.int32)
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            cs = kv.max_blocks * ps
+            p = np.arange(bucket)
+            rows["__shared__"] = np.where(
+                p < L, slot * cs + p,
+                self.ecfg.n_slots * cs).astype(np.int32)
+        if cfg.first_dense_layers:
+            rows["__dense__"] = main
+        return rows
 
     def _bucket(self, L: int) -> int:
         b = self.ecfg.min_prefill_bucket
@@ -488,21 +605,29 @@ class ServeEngine:
         update; src/dst/n_rows are traced scalars, ONE executable)."""
         if self._copy is None:
             ps = self.ecfg.page_size
+            tsubs = self._table_subs
+
+            def copy_group(c, src, dst, n_rows):
+                i = jnp.arange(ps)
+                new = {}
+                for key, pool in c.items():   # k/v/lat (+ scales in int8)
+                    nu, P = pool.shape[0], pool.shape[1]
+                    flat = pool.reshape(nu, P * ps, *pool.shape[3:])
+                    vals = flat[:, src * ps + i]
+                    rows = jnp.where(i < n_rows, dst * ps + i, P * ps)
+                    flat = flat.at[:, rows].set(vals, mode="drop")
+                    new[key] = flat.reshape(pool.shape)
+                return new
 
             def copy(cache, src, dst, n_rows):
-                i = jnp.arange(ps)
-                units = {}
-                for name, c in cache["units"].items():
-                    new = {}
-                    for key, pool in c.items():      # k/v (+ scales in int8)
-                        nu, P = pool.shape[0], pool.shape[1]
-                        flat = pool.reshape(nu, P * ps, *pool.shape[3:])
-                        vals = flat[:, src * ps + i]
-                        rows = jnp.where(i < n_rows, dst * ps + i, P * ps)
-                        flat = flat.at[:, rows].set(vals, mode="drop")
-                        new[key] = flat.reshape(pool.shape)
-                    units[name] = new
-                return {**cache, "units": units}
+                units = {name: (copy_group(c, src, dst, n_rows)
+                                if name in tsubs else c)
+                         for name, c in cache["units"].items()}
+                out = {**cache, "units": units}
+                if "dense" in cache:
+                    out["dense"] = copy_group(cache["dense"], src, dst,
+                                              n_rows)
+                return out
 
             self._copy = jax.jit(copy, donate_argnums=(0,))
         return self._copy
@@ -571,17 +696,23 @@ class ServeEngine:
             # sweep (chunked, fixed-shape, in-place commit)
             logits_row = self._prefill_suffix(slot, req, m)
         else:
-            # cold prompt: classic bucketed prefill + page inject
-            bucket = self._bucket(L)
+            # cold prompt: classic bucketed prefill + page inject.  SSM
+            # families prefill at the EXACT prompt length: attention caches
+            # drop the bucket's pad rows at inject, but recurrent state is
+            # a reduction over every fed token — pad tokens would poison
+            # the state slots (costs one compile per distinct prompt
+            # length instead of per bucket)
+            bucket = L if self.cfg.uses_ssm else self._bucket(L)
             pad_shape = (1, bucket - L) + req.prompt.shape[1:]
             inputs = np.concatenate(
                 [req.prompt[None], np.zeros(pad_shape, np.int32)], axis=1)
             logits, pcache = self._prefill(bucket)(self.params,
                                                    jnp.asarray(inputs))
             logits_row = logits[0, L - 1]
-            rows = jnp.asarray(self.kv.inject_rows(slot, bucket, L))
-            self.cache = self._inject(bucket)(self.cache, pcache["units"],
-                                              rows)
+            rows = {k: jnp.asarray(v) for k, v in
+                    self._inject_rows_tree(slot, bucket, L).items()}
+            self.cache = self._inject(bucket)(self.cache, pcache, rows,
+                                              jnp.asarray(slot, jnp.int32))
         first = self._sample_first(logits_row, req.rid)
         self._pos[slot] = L
         if self._use_prefix:

@@ -141,10 +141,17 @@ class PagedKVCache:
                  host_tier: bool = False, host_pages: int | None = None,
                  transfer_j_per_byte: float = 1e-9,
                  recompute_j_per_token: float | None = None):
-        if not tfm.supports_paged_cache(cfg):
-            raise ValueError(f"{cfg.name}: paged KV cache supports dense "
-                             "GQA families only (no ssm/mla/window/hybrid)")
+        blockers = tfm.paged_cache_blockers(cfg)
+        if blockers:
+            raise ValueError(f"{cfg.name}: paged KV cache blocked by "
+                             f"{blockers[0]}")
         self.cfg = cfg
+        # Families whose every cache group is slot-indexed (pure-SSM state
+        # slots, all-windowed private rings, the hybrid shared buffer) have
+        # no block-table-backed pool: the manager still owns slot parking,
+        # but page allocation is a no-op and admission is purely a
+        # slot-availability question.
+        self.tables_active = self._has_table_group(cfg)
         self.n_slots = int(n_slots)
         self.page_size = int(page_size)
         self.max_len = int(max_len)
@@ -185,6 +192,19 @@ class PagedKVCache:
         self.transfer_j = 0.0
         self.n_demotions = 0
         self.n_promotions = 0
+
+    @staticmethod
+    def _has_table_group(cfg) -> bool:
+        """Does any cache group ride the shared page pools (vs per-slot
+        state slots / private windowed rings / the hybrid shared buffer)?"""
+        if cfg.first_dense_layers:
+            return True
+        if cfg.uses_ssm:            # ssm + hybrid: every sub is state-slot
+            return False
+        if cfg.use_mla:             # latent pool rides the main tables
+            return True
+        return any(cfg.window_for_layer(i) == 0
+                   for i in range(tfm.unit_size(cfg)))
 
     # -- device side --------------------------------------------------------
     def make_cache(self):
@@ -392,6 +412,8 @@ class PagedKVCache:
         return -(-max(int(n_tokens), 1) // self.page_size)
 
     def can_admit(self, n_tokens: int) -> bool:
+        if not self.tables_active:      # no pools: slots are the only gate
+            return True
         return self.pages_for(n_tokens) <= len(self.free) + self.n_evictable()
 
     def can_admit_with_prefix(self, tokens: np.ndarray,
@@ -404,6 +426,8 @@ class PagedKVCache:
         device page to promote onto (+1 to need, nothing reserved); a
         matched resident page whose only holder is the trie would have
         counted as evictable headroom, so it is subtracted back out."""
+        if not self.tables_active:
+            return True
         full, partial = self._match(tokens)
         n_blocks = self.pages_for(n_tokens)
         full = full[:n_blocks]
@@ -500,6 +524,11 @@ class PagedKVCache:
                      shared: list[int]) -> list[int]:
         if slot in self.allocated:
             raise ValueError(f"slot {slot} already holds an allocation")
+        if not self.tables_active:
+            assert not shared
+            self.allocated[slot] = []
+            self.tables[slot, :] = slot
+            return []
         if n_blocks > self.max_blocks:
             raise ValueError(f"request needs {n_blocks} blocks > table "
                              f"width {self.max_blocks} "
@@ -531,6 +560,8 @@ class PagedKVCache:
         the pool cannot provide (the scheduler preempts someone)."""
         if slot not in self.allocated:
             raise ValueError(f"slot {slot} is not allocated")
+        if not self.tables_active:
+            return True
         need = self.pages_for(n_tokens)
         if need > self.max_blocks:
             raise ValueError(f"slot {slot}: {need} blocks > table width "
@@ -551,6 +582,8 @@ class PagedKVCache:
         full page of ``tokens`` (KV must already be committed for all of
         them).  Pages already indexed for the same token prefix are left
         alone — the slot's duplicate stays private and dies with it."""
+        if not self.tables_active:
+            return
         n_blocks = len(self.allocated.get(slot, ()))
         node = self._root
         for j, (key, chunk) in enumerate(self._chunks(tokens)):

@@ -284,12 +284,16 @@ def test_crash_restore_preserves_host_tier_pages():
 
 
 def test_kv_dtype_fallback_warns_once():
-    """int8 on a family without the dense-GQA verify/commit seam degrades
-    to the cache dtype with ONE RuntimeWarning, not per-engine spam."""
+    """int8 on a family whose cache has no full-length k/v page pools
+    (``int8_paged_blockers`` names the feature) degrades to the cache
+    dtype with ONE RuntimeWarning, not per-engine spam.  musicgen —
+    blocked before the zoo paged rework because the old gate keyed on the
+    speculative seam — now carries real scale rows: its pools are plain
+    GQA, only the token side is multi-codebook."""
     from repro.configs import get_arch
     from repro.models import transformer as tfm
     from repro.serving import EngineConfig, ServeEngine
-    spec = get_arch("musicgen-medium")
+    spec = get_arch("h2o-danube-3-4b")
     cfg = dataclasses.replace(spec.smoke, d_model=64, d_ff=128, head_dim=16)
     params, _ = tfm.init_lm(jax.random.PRNGKey(0), cfg)
     ops._KV_DTYPE_FALLBACK_WARNED.discard(cfg.name)
@@ -300,5 +304,15 @@ def test_kv_dtype_fallback_warns_once():
         ServeEngine(cfg, ecfg, params)
     hits = [w for w in rec if "kv_dtype=int8" in str(w.message)]
     assert len(hits) == 1 and issubclass(hits[0].category, RuntimeWarning)
+    assert "sliding_window" in str(hits[0].message)
     for c in eng.cache["units"].values():    # degraded: no scale rows
         assert "k_scale" not in c
+
+    mg = get_arch("musicgen-medium")
+    cfg_mg = dataclasses.replace(mg.smoke, d_model=64, d_ff=128, head_dim=16)
+    params_mg, _ = tfm.init_lm(jax.random.PRNGKey(0), cfg_mg)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng_mg = ServeEngine(cfg_mg, ecfg, params_mg)
+    assert not [w for w in rec if "kv_dtype=int8" in str(w.message)]
+    assert all("k_scale" in c for c in eng_mg.cache["units"].values())

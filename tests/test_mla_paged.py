@@ -1,0 +1,130 @@
+"""Compressed-latent MLA paged decode contract tests.
+
+The MLA sweep stores ONE latent row per token (R = r_kv + d_rope lanes)
+shared by every q head: scores are one dot of the latent query
+``[q_abs | q_rope]`` against the full row, the value read is the
+``[:r_kv]`` slice of the SAME row, and the two-stage path emits per-split
+``(partial, lse)`` merged by the one shared ``merge_kv_splits_pallas``
+stage-2 kernel.  Every case sweeps kv_splits x ragged pos x partial
+occupancy against the naive ``ref.mla_decode_paged_ref`` oracle on both
+the jnp and interpret-mode Pallas backends, plus the stage-1 partial/LSE
+contract against ``ref.mla_decode_split_ref``.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import decode_attention as da
+from repro.kernels import ops, ref
+
+B, HQ = 2, 8
+R_KV, D_ROPE = 32, 16
+R = R_KV + D_ROPE
+PS, NB = 4, 8                       # 8 pages of 4 -> 32 logical rows
+SPLITS = [1, 2, 5]                  # 2 and 5 do not divide 8 blocks evenly
+SCALE = (2 * R_KV / HQ) ** -0.5
+TOL = 5e-6
+
+# per-request absolute positions: full cache / ragged / nearly empty (the
+# partial-occupancy row exercises whole-split pruning: splits past pos
+# must emit the empty-split LSE sentinel, not garbage partials)
+_POS = {
+    "full": [NB * PS - 1, NB * PS - 1],
+    "ragged": [NB * PS - 1, 9],
+    "partial": [6, 2],
+}
+
+
+def _arrays(seed=0):
+    rng = np.random.default_rng(seed)
+    n_pages = B * NB + 3                         # spare pages stay unread
+    q = jnp.asarray(rng.standard_normal((B, 1, HQ, R)), jnp.float32)
+    pages = jnp.asarray(rng.standard_normal((n_pages, PS, R)), jnp.float32)
+    tables = jnp.asarray(rng.permutation(n_pages)[:B * NB].reshape(B, NB),
+                         jnp.int32)
+    head = jnp.asarray(rng.standard_normal((HQ * R_KV, 64)), jnp.float32)
+    return q, pages, tables, head
+
+
+def _argmax(out, head):
+    return jnp.argmax(out.reshape(B, -1) @ head, axis=-1)
+
+
+@pytest.mark.parametrize("pos_kind", list(_POS))
+@pytest.mark.parametrize("n_splits", SPLITS)
+def test_mla_paged_jnp_matches_oracle(pos_kind, n_splits):
+    q, pages, tables, head = _arrays(seed=n_splits)
+    pos = jnp.asarray(_POS[pos_kind], jnp.int32)
+    want = ref.mla_decode_paged_ref(q, pages, tables, pos, r_kv=R_KV,
+                                    scale=SCALE)
+    got = ops.mla_decode_paged_jnp(q, pages, tables, pos, r_kv=R_KV,
+                                   scale=SCALE, n_splits=n_splits)
+    assert float(jnp.max(jnp.abs(got - want))) < TOL
+    assert bool(jnp.all(_argmax(got, head) == _argmax(want, head)))
+
+
+@pytest.mark.parametrize("pos_kind", list(_POS))
+@pytest.mark.parametrize("n_splits", SPLITS)
+def test_mla_paged_pallas_interpret_matches_oracle(pos_kind, n_splits):
+    q, pages, tables, head = _arrays(seed=10 + n_splits)
+    pos = jnp.asarray(_POS[pos_kind], jnp.int32)
+    want = ref.mla_decode_paged_ref(q, pages, tables, pos, r_kv=R_KV,
+                                    scale=SCALE)
+    got = da.mla_paged_decode_attention_pallas(
+        q, pages, tables, pos, r_kv=R_KV, scale=SCALE, n_splits=n_splits,
+        interpret=True)
+    assert float(jnp.max(jnp.abs(got - want))) < TOL
+    assert bool(jnp.all(_argmax(got, head) == _argmax(want, head)))
+
+
+@pytest.mark.parametrize("pos_kind", list(_POS))
+@pytest.mark.parametrize("n_splits", [2, 5])
+def test_mla_stage1_partials_match_split_oracle(pos_kind, n_splits):
+    """The Pallas stage-1 kernel and the split oracle agree split by split
+    — partials AND the log-sum-exp rows the shared stage-2 merge consumes
+    (empty splits must carry the same masked-LSE sentinel)."""
+    q, pages, tables, _ = _arrays(seed=20 + n_splits)
+    pos = jnp.asarray(_POS[pos_kind], jnp.int32)
+    p_ref, l_ref = ref.mla_decode_split_ref(q, pages, tables, pos,
+                                            r_kv=R_KV, n_splits=n_splits,
+                                            scale=SCALE)
+    p_pal, l_pal = da.mla_paged_decode_attention_pallas_partials(
+        q, pages, tables, pos, r_kv=R_KV, n_splits=n_splits, scale=SCALE,
+        interpret=True)
+    assert p_ref.shape == p_pal.shape and l_ref.shape == l_pal.shape
+    assert float(jnp.max(jnp.abs(p_ref - p_pal))) < TOL
+    assert float(jnp.max(jnp.abs(l_ref - l_pal))) < TOL
+
+
+def test_mla_split_merge_recovers_single_stage():
+    """Stage-1 partials merged by the SHARED stage-2 kernel reproduce the
+    single-stage sweep on the same arrays — the n_splits=1 path stays the
+    bit-exactness anchor the engine's greedy streams ride on."""
+    q, pages, tables, _ = _arrays(seed=33)
+    pos = jnp.asarray(_POS["ragged"], jnp.int32)
+    single = da.mla_paged_decode_attention_pallas(
+        q, pages, tables, pos, r_kv=R_KV, scale=SCALE, n_splits=1,
+        interpret=True)
+    p, l = da.mla_paged_decode_attention_pallas_partials(
+        q, pages, tables, pos, r_kv=R_KV, n_splits=5, scale=SCALE,
+        interpret=True)
+    merged = da.merge_kv_splits_pallas(p, l, out_dtype=q.dtype,
+                                       interpret=True).transpose(0, 2, 1, 3)
+    assert float(jnp.max(jnp.abs(merged - single))) < TOL
+
+
+def test_mla_decode_paged_dispatch_backends_agree():
+    """The ``KernelPolicy.decode`` seam: jnp and interpret-Pallas backends
+    (auto-chosen splits included) agree through ``ops.mla_decode_paged``."""
+    q, pages, tables, head = _arrays(seed=44)
+    pos = jnp.asarray(_POS["ragged"], jnp.int32)
+    outs = []
+    for backend in ("jnp", "pallas_interpret"):
+        for kv_splits in ("auto", 1, 4):
+            pol = ops.KernelPolicy(decode=backend, kv_splits=kv_splits)
+            outs.append(ops.mla_decode_paged(q, pages, tables, pos,
+                                             r_kv=R_KV, scale=SCALE,
+                                             policy=pol))
+    for o in outs[1:]:
+        assert float(jnp.max(jnp.abs(o - outs[0]))) < TOL
+        assert bool(jnp.all(_argmax(o, head) == _argmax(outs[0], head)))

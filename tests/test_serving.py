@@ -314,9 +314,13 @@ def test_paged_kv_manager_invariants(smollm):
     assert (rows[5:] == kv.n_pages * kv.page_size).all()   # pad rows dropped
     assert len(set(rows[:5].tolist())) == 5
 
-    with pytest.raises(ValueError):             # paged needs dense GQA
-        PagedKVCache(get_arch("mamba2-370m").smoke, n_slots=2, page_size=4,
-                     max_len=32)
+    # SSM families build state-slot pools instead of page tables: the
+    # manager accepts them but reports the block tables as inactive (the
+    # host tier has no page pool to ride)
+    kv_ssm = PagedKVCache(get_arch("mamba2-370m").smoke, n_slots=2,
+                          page_size=4, max_len=32)
+    assert not kv_ssm.tables_active
+    assert kv.tables_active
 
 
 def test_energy_aware_admission(smollm):

@@ -255,6 +255,37 @@ def test_choose_kv_splits_occupancy_model():
     assert ops.choose_kv_splits(1, 10 ** 6, 1, 512) == 16
 
 
+def test_choose_kv_splits_mla_grid():
+    """MLA decode grids have q_heads = 1: all 128 heads share ONE latent
+    row per token, so the page DMA is shared and the occupancy cell count
+    is just ``batch * splits`` — the deepest underfill in the zoo at low
+    batch, exactly where splitting pays."""
+    # B=1, one shared kv row, 8 executors: split hard to cover the machine
+    assert ops.choose_kv_splits(1, 32768, 1, 8) == 16
+    # moderate batch still underfills (8 cells < 2*8): split a little
+    assert ops.choose_kv_splits(8, 32768, 1, 8) == 2
+    # high batch oversubscribes even at one kv head: never split
+    assert ops.choose_kv_splits(16, 32768, 1, 8) == 1
+    # never more splits than latent pages
+    assert ops.choose_kv_splits(1, 8 * PS, 1, 64, block=PS) <= 8
+
+
+def test_effective_kv_len_clips_windowed_caches():
+    """The split heuristic must see the CLIPPED length on windowed layers:
+    a deep sliding-window position is a shallow sweep, and splitting it
+    only adds merge traffic."""
+    assert ops.effective_kv_len(32768, 512) == 512
+    assert ops.effective_kv_len(100, 512) == 100    # min(pos, window)
+    assert ops.effective_kv_len(100, 0) == 100      # full attention
+    deep_full = ops.choose_kv_splits(1, 32768, 4, 8)
+    deep_win = ops.choose_kv_splits(
+        1, ops.effective_kv_len(32768, 512), 4, 8, block=256)
+    assert deep_full > 1
+    # 512 keys = 2 blocks of 256: at most 2 splits, far below the full
+    # sweep's choice — the clip is what keeps windowed layers cheap
+    assert deep_win <= 2 < deep_full
+
+
 def test_k_pos_fallback_warns_once():
     a = _rng_arrays(1, 4, 2, seed=17)
     pos = jnp.int32(30)
